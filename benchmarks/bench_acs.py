@@ -1,0 +1,60 @@
+"""Paper Fig. 7/8: the ACS wide-table (274 columns) workload.
+
+Phase 1 (Fig. 7): load the survey table into the store.
+Phase 2 (Fig. 8): survey statistics — grouped means of person weights and
+incomes over the replicate-weight columns, split between in-engine
+aggregation and host-side post-processing exactly like the survey package
+splits work between SQL and R.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Col, startup
+from repro.core.exchange import export_table
+from repro.data.synth import N_WEIGHT_REPLICATES, generate_acs
+
+from .common import row, timeit
+
+
+def run(n_rows: int = 30_000) -> list[str]:
+    cols, types, scales = generate_acs(n_rows)
+    out = []
+
+    def load():
+        db = startup()
+        db.create_table("acs", cols, types=types, scales=scales)
+        return db
+    med, _ = timeit(load, hot=3)
+    out.append(row("acs_load", med, f"{len(cols)}cols_{n_rows}rows"))
+
+    db = load()
+
+    def stats():
+        # in-engine: grouped aggregation over states
+        res = (db.scan("acs")
+               .filter(Col("agep") >= 16)
+               .group_by("st")
+               .agg(mean_wage=("avg", "wagp"),
+                    pop=("sum", "pwgtp"),
+                    n=("count", None))
+               .execute())
+        # host side: replicate-weight variance (the "in R" part)
+        lf = export_table(db.scan("acs").select(
+            *[f"pwgtp{i}" for i in range(1, 9)], "pwgtp").execute())
+        reps = np.stack([lf[f"pwgtp{i}"] for i in range(1, 9)])
+        base = lf["pwgtp"]
+        rep_var = 4.0 / 80.0 * ((reps - base) ** 2).sum(axis=0).mean()
+        return res, rep_var
+    med_s, _ = timeit(stats, hot=3)
+    out.append(row("acs_statistics", med_s,
+                   f"{N_WEIGHT_REPLICATES}replicates"))
+
+    def stats_sql():
+        return db.connect().query(
+            "SELECT st, avg(wagp) mean_wage, sum(pwgtp) pop, count(*) n "
+            "FROM acs WHERE agep >= 16 GROUP BY st ORDER BY st").to_pydict()
+    med_q, _ = timeit(stats_sql, hot=3)
+    out.append(row("acs_statistics_sql", med_q, "sql_path"))
+    return out

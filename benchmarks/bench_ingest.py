@@ -1,0 +1,56 @@
+"""Paper Fig. 5: writing the lineitem table into the database.
+
+Compared paths:
+  * engine_bulk_append — monetdb_append analogue (columnar adoption)
+  * engine_insert_loop — per-row INSERT emulation (the socket-protocol
+    pathology the paper attributes to client-server systems)
+  * numpy_copy        — raw memcpy floor for the same bytes
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import startup
+from repro.data import tpch
+
+from .common import row, timeit
+
+
+def run(sf: float = 0.01) -> list[str]:
+    data = tpch.generate(sf)
+    cols, types, scales = data["lineitem"]
+    nbytes = sum(v.nbytes if hasattr(v, "nbytes") else len(v) * 8
+                 for v in cols.values())
+    out = []
+
+    def bulk():
+        db = startup()
+        db.create_table("lineitem", cols, types=types, scales=scales)
+    med, _ = timeit(bulk, hot=3)
+    out.append(row("ingest_engine_bulk_append", med,
+                   f"{nbytes / med / 1e6:.0f}MBps"))
+
+    # per-row insert emulation (bounded row count for CPU sanity)
+    n_rows = min(2000, len(next(iter(cols.values()))))
+    def insert_loop():
+        db = startup()
+        db.create_table("lineitem",
+                        {k: v[:1] for k, v in cols.items()},
+                        types=types, scales=scales)
+        for i in range(1, n_rows):
+            db.append("lineitem", {k: v[i:i + 1] for k, v in cols.items()})
+    med_loop, _ = timeit(insert_loop, hot=1, cold=0)
+    per_row = med_loop / n_rows
+    total_rows = len(next(iter(cols.values())))
+    out.append(row("ingest_engine_insert_loop", per_row * total_rows,
+                   f"extrapolated_from_{n_rows}_rows"))
+
+    numeric = {k: v for k, v in cols.items() if hasattr(v, "dtype")
+               and v.dtype != object}
+    def copy():
+        return {k: v.copy() for k, v in numeric.items()}
+    med_cp, _ = timeit(copy, hot=5)
+    out.append(row("ingest_numpy_copy_floor", med_cp,
+                   f"{sum(v.nbytes for v in numeric.values())/med_cp/1e6:.0f}MBps"))
+    return out

@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks (paper §3 hot spots).
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-clock favors the host mirrors; the benchmark's role here is (a) the
+host-tier numbers the engine actually uses, and (b) the derived
+bytes-touched column used in EXPERIMENTS.md §Perf napkin math for the TPU
+target.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.hash_group import ops as hops
+from repro.kernels.imprint import ops as iops
+from repro.kernels.scan_agg import ops as sops
+
+from .common import row, timeit
+
+
+def run(n: int = 2_000_000) -> list[str]:
+    rng = np.random.default_rng(0)
+    out = []
+
+    vals = rng.uniform(0, 1000, n)
+    nulls = np.zeros(n, bool)
+    med, _ = timeit(lambda: iops.build_zone_maps(vals, nulls, 2048, 16),
+                    hot=3)
+    out.append(row("kernel_imprint_build_host", med,
+                   f"{vals.nbytes/med/1e9:.2f}GBps"))
+
+    cols = rng.uniform(0, 100, (4, n))
+    ranges = np.array([[10, 90], [-np.inf, np.inf], [0, 50],
+                       [-np.inf, np.inf]])
+    pairs = ((1, 3), (2, -1))
+    med, _ = timeit(lambda: sops.fused_filter_agg(
+        cols, ranges, pairs, use_pallas=False), hot=3)
+    out.append(row("kernel_scan_agg_host", med,
+                   f"{cols.nbytes/med/1e9:.2f}GBps"))
+
+    # separate (unfused) passes for comparison: filter then per-agg
+    def unfused():
+        m = np.ones(n, bool)
+        m &= (cols[0] >= 10) & (cols[0] <= 90)
+        m &= (cols[2] >= 0) & (cols[2] <= 50)
+        (cols[1] * cols[3])[m].sum()
+        cols[2][m].sum()
+    med_u, _ = timeit(unfused, hot=3)
+    out.append(row("kernel_scan_agg_unfused_host", med_u,
+                   f"fusion_speedup={med_u/med:.2f}x"))
+
+    gid = rng.integers(0, 256, n)
+    v2 = rng.normal(size=(4, n))
+    med, _ = timeit(lambda: hops.grouped_aggregate(
+        gid, v2, 256, use_pallas=False), hot=3)
+    out.append(row("kernel_hash_group_host", med,
+                   f"{v2.nbytes/med/1e9:.2f}GBps"))
+
+    # interpret-mode pallas correctness-path timing (small n)
+    small = 65_536
+    med, _ = timeit(lambda: sops.fused_filter_agg(
+        cols[:, :small], ranges, pairs, interpret=True), hot=2)
+    out.append(row("kernel_scan_agg_pallas_interpret", med,
+                   "correctness_path"))
+
+    # imprint ablation (paper §3.1 motivation): selective range query on
+    # clustered data, zone-map pruning on vs off
+    from repro.core import Col, startup
+    db = startup()
+    db.create_table("c", {"x": np.sort(rng.uniform(0, 1000, n))})
+    q = db.scan("c").filter((Col("x") >= 100.0) & (Col("x") <= 102.0)) \
+        .agg(cnt=("count", None))
+    med_on, _ = timeit(lambda: q.execute(), hot=5)
+    im = db.index_manager
+    class _Off:
+        def imprint_mask(self, *a, **k):
+            return None
+        auto_order_index = staticmethod(lambda *a, **k: None)
+    db.index_manager = _Off()
+    med_off, _ = timeit(lambda: q.execute(), hot=5)
+    db.index_manager = im
+    out.append(row("imprint_range_select_on", med_on,
+                   f"speedup={med_off/med_on:.2f}x"))
+    out.append(row("imprint_range_select_off", med_off, "no_zone_maps"))
+    return out

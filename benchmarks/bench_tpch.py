@@ -1,0 +1,61 @@
+"""Paper Table 1: TPC-H Q1-Q10 across engines.
+
+Systems compared (all in-process, same data):
+  * engine        — the columnar engine, optimized plans (MonetDBLite role)
+  * engine_noopt  — same engine, optimizer off (ablation)
+  * engine_dist   — shard_map distributed tier where the plan qualifies
+  * volcano       — row-at-a-time interpreter (SQLite/Postgres role);
+                    run at a reduced scale factor and extrapolated, as the
+                    paper's timeout column does for SQLite
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import startup
+from repro.core.optimizer import optimize
+from repro.core.volcano import VolcanoExecutor
+from repro.data import tpch
+from repro.data.tpch_queries import ALL_QUERIES
+
+from .common import row, timeit
+
+VOLCANO_SF_CAP = 0.002          # row-at-a-time Python: keep it honest
+
+
+def run(sf: float = 0.01, volcano: bool = True) -> list[str]:
+    db = startup()
+    tpch.load_into(db, sf)
+    out = []
+    totals = {"engine": 0.0, "volcano": 0.0}
+    for name, qf in ALL_QUERIES.items():
+        q = qf(db)
+        med, _ = timeit(lambda: q.execute(), hot=3)
+        out.append(row(f"tpch_{name}_engine", med, f"sf={sf}"))
+        totals["engine"] += med
+        med_no, _ = timeit(lambda: q.execute(do_optimize=False), hot=1)
+        out.append(row(f"tpch_{name}_engine_noopt", med_no,
+                       f"slowdown={med_no/med:.2f}x"))
+        if name in ("q1", "q6"):
+            med_d, _ = timeit(lambda: q.execute(distributed=True), hot=3)
+            out.append(row(f"tpch_{name}_engine_dist", med_d,
+                           "shard_map"))
+    if volcano:
+        vsf = min(sf, VOLCANO_SF_CAP)
+        vdb = startup()
+        tpch.load_into(vdb, vsf)
+        scale = sf / vsf
+        for name, qf in ALL_QUERIES.items():
+            q = qf(vdb)
+            plan = optimize(q.plan, vdb.catalog)
+            ex = VolcanoExecutor(vdb)
+            med, _ = timeit(lambda: ex.execute(plan), hot=1)
+            out.append(row(f"tpch_{name}_volcano", med * scale,
+                           f"extrapolated_{scale:.0f}x_from_sf{vsf}"))
+            totals["volcano"] += med * scale
+    out.append(row("tpch_total_engine", totals["engine"], f"sf={sf}"))
+    if volcano:
+        out.append(row("tpch_total_volcano", totals["volcano"],
+                       f"speedup={totals['volcano']/max(totals['engine'],1e-9):.0f}x"))
+    return out

@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: paper-style timing protocol.
+
+Paper §4.1: reported timings are the median of hot runs; the initial cold
+run is ignored.  ``timeit`` reproduces that protocol (1 cold + N hot)."""
+
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, hot: int = 5, cold: int = 1):
+    """Returns (median_seconds, all_hot_seconds)."""
+    for _ in range(cold):
+        fn()
+    times = []
+    for _ in range(hot):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    n = len(times)
+    med = 0.5 * (times[(n - 1) // 2] + times[n // 2])
+    return med, times
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+  bench_ingest  — Fig. 5 (data ingestion)
+  bench_export  — Fig. 6 (data export / zero-copy)
+  bench_tpch    — Table 1 (TPC-H Q1-Q10, engine vs volcano row-store)
+  bench_acs     — Fig. 7/8 (ACS wide-table load + statistics)
+  bench_kernels — §3 hot-spot kernels
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: ingest,export,tpch,acs,kernels")
+    ap.add_argument("--sf", type=float, default=0.01)
+    ap.add_argument("--no-volcano", action="store_true")
+    args = ap.parse_args()
+    which = set(args.only.split(",")) if args.only else {
+        "ingest", "export", "tpch", "acs", "kernels"}
+
+    print("name,us_per_call,derived")
+    rows: list[str] = []
+    if "ingest" in which:
+        from .bench_ingest import run as r
+        rows += r(args.sf)
+        _flush(rows)
+    if "export" in which:
+        from .bench_export import run as r
+        rows += r(args.sf)
+        _flush(rows)
+    if "tpch" in which:
+        from .bench_tpch import run as r
+        rows += r(args.sf, volcano=not args.no_volcano)
+        _flush(rows)
+    if "acs" in which:
+        from .bench_acs import run as r
+        rows += r()
+        _flush(rows)
+    if "kernels" in which:
+        from .bench_kernels import run as r
+        rows += r()
+        _flush(rows)
+
+
+_printed = 0
+
+
+def _flush(rows):
+    global _printed
+    for line in rows[_printed:]:
+        print(line, flush=True)
+    _printed = len(rows)
+
+
+if __name__ == "__main__":
+    main()

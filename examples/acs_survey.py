@@ -1,0 +1,61 @@
+"""ACS survey analysis (paper §4.3): the wide-table workload end to end.
+
+Mirrors the survey-package split the paper benchmarks: load the 274-column
+census table into the embedded store, push the SQL-expressible aggregation
+into the engine, and do the replicate-weight statistics host-side on
+zero-copy exports.
+
+    PYTHONPATH=src python examples/acs_survey.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import Col, startup
+from repro.core.exchange import export_table
+from repro.data.synth import load_acs
+
+db = startup()
+t0 = time.perf_counter()
+table = load_acs(db, n_rows=50_000)
+print(f"loaded {table.num_cols} columns x {table.num_rows:,} rows "
+      f"({table.nbytes/1e6:.0f} MB) in {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+# 1) in-engine: weighted population + mean wage by state (SQL path)
+res = db.connect().query("""
+    SELECT st, sum(pwgtp) AS population, avg(wagp) AS mean_wage,
+           count(*) AS n
+    FROM acs_pums WHERE agep >= 16 GROUP BY st ORDER BY st
+""")
+print("\nstate estimates (engine):")
+d = res.to_pydict()
+for i in range(res.nrows):
+    print(f"  {d['st'][i]}: pop={d['population'][i]:>9} "
+          f"mean_wage={d['mean_wage'][i]:9.0f} n={d['n'][i]}")
+
+# 2) host-side: replicate-weight standard errors on zero-copy exports
+#    (the 'survey package in R' part of the paper's pipeline)
+cols = [f"pwgtp{i}" for i in range(1, 81)]
+lf = export_table(db.scan("acs_pums").select("pwgtp", *cols).execute())
+base = lf["pwgtp"].astype(np.float64)
+reps = np.stack([lf[c] for c in cols]).astype(np.float64)
+total = base.sum()
+rep_totals = reps.sum(axis=1)
+se = np.sqrt(4.0 / 80.0 * ((rep_totals - total) ** 2).sum())
+print(f"\nweighted population total: {total:,.0f}  (replicate SE {se:,.0f})")
+print(f"zero-copy exports: {lf.zero_copies}, conversions: {lf.conversions}")
+
+# 3) engine-side filter + median income for a subgroup
+med = (db.scan("acs_pums")
+       .filter((Col("agep") >= 25) & (Col("agep") <= 64)
+               & Col("wagp").isnull().__invert__())
+       .agg(median_wage=("median", "wagp"), n=("count", None))
+       .execute().to_pydict())
+print(f"\nworking-age median wage: {med['median_wage'][0]:.0f} "
+      f"(n={med['n'][0]:,})")
+print("OK")

@@ -1,0 +1,77 @@
+"""Quickstart: the embedded analytical database in five minutes.
+
+Mirrors the paper's embedding interface (§3.2): startup -> connect ->
+query/append -> zero-copy export, plus persistence and transactions.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import Col, startup
+from repro.core.exchange import export_table
+
+# --- in-memory database (monetdb_startup(NULL)) ---------------------------
+db = startup()
+rng = np.random.default_rng(0)
+n = 100_000
+db.create_table("trips", {
+    "city": np.asarray(["ams", "nyc", "sfo"], dtype=object)[
+        rng.integers(0, 3, n)],
+    "distance_km": rng.gamma(2.0, 5.0, n),
+    "fare": rng.gamma(3.0, 7.0, n),
+})
+
+con = db.connect()
+res = con.query("""
+    SELECT city, count(*) AS trips, avg(fare) AS avg_fare,
+           sum(fare) AS revenue
+    FROM trips WHERE distance_km > 5 GROUP BY city ORDER BY revenue DESC
+""")
+print("SQL result:", res.to_pydict())
+
+# --- builder API + zero-copy export ----------------------------------------
+top = (db.scan("trips")
+       .filter(Col("fare") > 50)
+       .group_by("city")
+       .agg(p90_candidates=("count", None), m=("median", "fare"))
+       .order_by("city")
+       .execute())
+frame = export_table(top)                 # lazy, zero-copy for numerics
+print("medians:", list(frame["m"]))
+print("conversions performed:", frame.conversions,
+      "| zero-copy columns:", frame.zero_copies)
+
+# --- transactions (optimistic, snapshot isolation) --------------------------
+txn_con = db.connect()
+txn_con.begin()
+txn_con.append("trips", {"city": np.asarray(["ams"], dtype=object),
+                         "distance_km": np.array([1.0]),
+                         "fare": np.array([4.5])})
+print("inside txn:",
+      txn_con.query("SELECT count(*) n FROM trips").to_pydict()["n"][0])
+txn_con.rollback()
+print("after rollback:",
+      db.connect().query("SELECT count(*) n FROM trips").to_pydict()["n"][0])
+
+# --- persistent mode --------------------------------------------------------
+with tempfile.TemporaryDirectory() as d:
+    pdb = startup(os.path.join(d, "mydb"))
+    pdb.create_table("t", {"v": np.arange(10, dtype=np.int64)})
+    pdb.shutdown()                                  # persists + frees state
+    pdb2 = startup(os.path.join(d, "mydb"))        # reload from disk
+    print("persistent rows:", pdb2.table("t").num_rows)
+    pdb2.shutdown()
+
+# --- distributed execution (paper Fig. 2 on whatever mesh exists) ----------
+dist = (db.scan("trips").filter(Col("distance_km") > 5)
+        .group_by("city").agg(rev=("sum", "fare"))
+        .execute(distributed=True))
+print("distributed result:", dist.to_pydict())
+print("OK")

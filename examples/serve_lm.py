@@ -1,0 +1,48 @@
+"""Serve a small model with batched requests: prefill + batched greedy
+decode through the KV-cache path (the serve_step the dry-run lowers at
+32k/500k scale).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_model
+from repro.serve.serve_step import generate
+
+cfg = ModelConfig(
+    name="serve-demo", family="dense", n_layers=4, d_model=256,
+    n_heads=4, n_kv_heads=2, d_ff=1024, vocab=8192, d_head=64,
+    dtype="float32", attn_q_chunk=128, attn_kv_chunk=128, remat=False)
+
+params = init_model(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+
+# a batch of 8 concurrent requests with different prompts
+prompts = jnp.asarray(rng.integers(1, cfg.vocab, (8, 32)), jnp.int32)
+t0 = time.perf_counter()
+out = generate(params, cfg, prompts, max_new_tokens=32, temperature=0.0)
+dt = time.perf_counter() - t0
+out = np.asarray(out)
+print(f"generated {out.size} tokens for {out.shape[0]} requests "
+      f"in {dt*1e3:.0f} ms ({out.size/dt:.0f} tok/s incl. compile)")
+
+# greedy decode is deterministic: same prompts -> same continuations
+out2 = np.asarray(generate(params, cfg, prompts, max_new_tokens=32))
+assert (out == out2).all()
+print("deterministic decode OK; sample:", out[0, :10].tolist())
+
+# sampled decoding
+out3 = np.asarray(generate(params, cfg, prompts, max_new_tokens=8,
+                           temperature=1.0))
+print("sampled:", out3[0].tolist())
+print("OK")

@@ -1,0 +1,58 @@
+"""TPC-H analytics on the embedded engine (paper Table 1 workload).
+
+Loads dbgen-lite data, runs Q1-Q10, shows plans, index effects, and the
+distributed tier.
+
+    PYTHONPATH=src python examples/tpch_analytics.py [--sf 0.01]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import startup
+from repro.data import tpch
+from repro.data.tpch_queries import ALL_QUERIES, Q1_SQL
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--sf", type=float, default=0.01)
+args = ap.parse_args()
+
+db = startup()
+print(f"loading TPC-H sf={args.sf} ...")
+tpch.load_into(db, args.sf)
+for t in db.table_names():
+    print(f"  {t:10s} {db.table(t).num_rows:>9,} rows "
+          f"{db.table(t).nbytes/1e6:8.1f} MB")
+
+print("\nQ1 via SQL:")
+t0 = time.perf_counter()
+res = db.connect().query(Q1_SQL)
+print(f"  {res.nrows} groups in {(time.perf_counter()-t0)*1e3:.1f} ms")
+for i, name in enumerate(res.names):
+    print(f"  {name}: {res.fetch(i)[0][:2]}")
+
+print("\noptimized plan for Q3:")
+print(ALL_QUERIES["q3"](db).explain())
+
+print("\nall ten queries:")
+total = 0.0
+for name, qf in ALL_QUERIES.items():
+    t0 = time.perf_counter()
+    out = qf(db).execute()
+    dt = time.perf_counter() - t0
+    total += dt
+    print(f"  {name:4s} {dt*1e3:8.2f} ms   {out.num_rows:>6} rows "
+          f"(instr={db.last_stats.instructions}, "
+          f"index_hits={db.last_stats.index_hits})")
+print(f"  total {total*1e3:8.2f} ms")
+
+print("\nQ6 on the distributed tier (shard_map over local mesh):")
+t0 = time.perf_counter()
+out = ALL_QUERIES["q6"](db).execute(distributed=True)
+print(f"  revenue={out.to_pydict()['revenue'][0]:.2f} "
+      f"in {(time.perf_counter()-t0)*1e3:.1f} ms (includes compile)")
+print("OK")

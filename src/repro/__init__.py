@@ -1,0 +1,4 @@
+"""repro: MonetDBLite as a JAX/TPU-native embedded analytical engine,
+embedded into a multi-pod LM training/serving framework."""
+
+__version__ = "0.1.0"

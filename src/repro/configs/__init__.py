@@ -1,0 +1,1 @@
+from .registry import ARCH_IDS, SHAPES, all_cells, cells, get_config  # noqa

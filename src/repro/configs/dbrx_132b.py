@@ -1,0 +1,12 @@
+"""dbrx-132b [moe]: 40L d6144 48H (GQA kv=8) ff10752/expert V100352,
+16 experts top-4 fine-grained [hf:databricks/dbrx-base; unverified].
+Experts sharded over the model axis (expert parallelism)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352, d_head=128,
+    n_experts=16, top_k=4, capacity_factor=1.25,
+    rope_theta=500_000.0, act="swiglu", router_group_tokens=512,
+)

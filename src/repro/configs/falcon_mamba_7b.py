@@ -1,0 +1,11 @@
+"""falcon-mamba-7b [ssm]: 64L d4096 attn-free V65024, ssm_state=16 —
+Mamba-1 architecture [arXiv:2410.05355; unverified].  Sub-quadratic:
+long_500k decode carries only the (B, d_inner, N) recurrent state."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1,
+    d_ff=0, vocab=65024,
+    ssm_state=16, ssm_version=1, ssm_expand=2, ssm_conv=4, ssm_chunk=16,
+)

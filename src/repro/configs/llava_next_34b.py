@@ -1,0 +1,12 @@
+"""llava-next-34b [vlm]: 60L d7168 56H (GQA kv=8) ff20480 V64000 — anyres
+tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].  The vision
+frontend is a stub: input_specs() feeds precomputed patch embeddings
+(B, T, d) for train/prefill; decode is standard token decode."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab=64000, d_head=128,
+    rope_theta=5_000_000.0, act="swiglu", embeds_input=True,
+)

@@ -1,0 +1,75 @@
+"""Architecture registry: --arch <id> -> ModelConfig + input shapes.
+
+One module per assigned architecture in this package; each exposes CONFIG.
+Shapes are the assigned LM shape set; applicability skips are encoded here
+(see DESIGN.md §Arch-applicability)."""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = [
+    "qwen2_5_14b",
+    "phi3_medium_14b",
+    "h2o_danube3_4b",
+    "deepseek_7b",
+    "falcon_mamba_7b",
+    "llava_next_34b",
+    "seamless_m4t_large_v2",
+    "dbrx_132b",
+    "moonshot_v1_16b_a3b",
+    "zamba2_2_7b",
+]
+
+# canonical external ids (with dashes) also accepted
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str                  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = [
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1),
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = ALIASES.get(arch, arch)
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def sub_quadratic(cfg: ModelConfig) -> bool:
+    """long_500k applicability: SSM/hybrid state or sliding-window attn."""
+    return cfg.family in ("ssm", "hybrid") or cfg.sliding_window is not None
+
+
+def cells(arch: str):
+    """The (arch x shape) cells to dry-run; long_500k skipped for pure
+    full-attention archs (recorded skip, DESIGN.md)."""
+    cfg = get_config(arch)
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and not sub_quadratic(cfg):
+            continue
+        out.append(s)
+    return out
+
+
+def all_cells():
+    for a in ARCH_IDS:
+        for s in cells(a):
+            yield a, s

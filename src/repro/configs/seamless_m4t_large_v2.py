@@ -1,0 +1,12 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec, 24L enc + 24L dec, d1024 16H
+(kv=16) ff8192 V256206 [arXiv:2308.11596; hf].  The audio frontend is a
+stub: input_specs() provides precomputed frame embeddings for the encoder;
+decode shapes lower the *decoder* step over a precomputed encoder memory."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=24, n_enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab=256206, d_head=64,
+    act="gelu", cross_attn=True, embeds_input=False,
+)

@@ -1,0 +1,14 @@
+"""zamba2-2.7b [hybrid]: 54L d2560 32H (kv=32) ff10240 V32000,
+ssm_state=64 — Mamba-2 blocks + a weight-shared attention block applied
+every 6 layers [arXiv:2411.15242; hf].  Sub-quadratic (SSM state + one
+shared attn cache): long_500k runs."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab=32000, d_head=80,
+    ssm_state=64, ssm_version=2, ssm_expand=2, ssm_conv=4,
+    ssm_head_dim=64, ssm_chunk=64,
+    attn_every=6, act="gelu",
+)

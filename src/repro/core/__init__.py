@@ -1,0 +1,26 @@
+"""LiteColumn: an embedded analytical columnar engine (MonetDBLite repro).
+
+Public API:
+    startup(path=None) -> Database      # the embedding interface
+    Col, Lit, DateLit, Func, Case, ...  # expression builders
+"""
+
+from .column import Column, StringHeap
+from .exchange import (LazyFrame, copy_for_write, export_table,
+                       import_arrays, to_device, zero_copy_view)
+from .expression import (BinOp, Case, Cast, Col, DateLit, Func, InList,
+                         IsNull, Like, Lit, Not)
+from .relalg import AggSpec, Query
+from .session import Connection, Database, DatabaseError, Result, startup
+from .table import Table
+from .transactions import ConflictError, TransactionError
+from .types import ColumnSchema, DBType, TableSchema
+
+__all__ = [
+    "AggSpec", "BinOp", "Case", "Cast", "Col", "Column", "ColumnSchema",
+    "ConflictError", "Connection", "Database", "DatabaseError", "DateLit",
+    "DBType", "Func", "InList", "IsNull", "LazyFrame", "Like", "Lit", "Not",
+    "Query", "Result", "StringHeap", "Table", "TableSchema",
+    "TransactionError", "copy_for_write", "export_table", "import_arrays",
+    "startup", "to_device", "zero_copy_view",
+]

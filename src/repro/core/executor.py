@@ -1,0 +1,692 @@
+"""Column-at-a-time execution: relational tree -> MAL program -> columns.
+
+Late materialization: filters produce boolean *selection masks* (MonetDB's
+candidate lists, recast branch-free for the TPU idiom) that flow alongside
+the columns; rows are only compacted at blocking boundaries (join, group,
+sort, result).  Tactical decisions (paper optimization level 3) happen here
+at runtime: join implementation and index use are chosen per-instruction
+from cardinalities and available indexes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from .column import Column, StringHeap
+from .expression import (BinOp, Col, DateLit, EvalContext, Expr, ExprResult,
+                         Lit)
+from .mal import Instr, MALProgram
+from .optimizer import optimize, split_conjuncts
+from .relalg import (AggregateNode, AggSpec, FilterNode, JoinNode, LimitNode,
+                     OrderByNode, PlanNode, ProjectNode, ScanNode)
+from .types import DBType, NULL_SENTINEL, STORAGE_DTYPE, is_float
+
+# ---------------------------------------------------------------------------
+# compile: plan -> MALProgram
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RelInfo:
+    """Compile-time shape of an intermediate relation."""
+    cols: dict[str, str]                 # column name -> register
+    mask: Optional[str] = None           # selection-mask register
+    base_table: Optional[str] = None     # set iff this is an unfiltered scan
+    pure: bool = True                    # no projection applied yet
+
+
+def compile_plan(plan: PlanNode, catalog) -> MALProgram:
+    prog = MALProgram()
+    ri = _compile(plan, prog, catalog)
+    regs = []
+    names = []
+    if ri.mask is not None:
+        (idx,) = prog.emit("midx", (ri.mask,), hint="idx")
+        for name, reg in ri.cols.items():
+            (reg,) = prog.emit("take", (reg, idx), hint="c")
+            regs.append(reg)
+            names.append(name)
+    else:
+        for name, reg in ri.cols.items():
+            regs.append(reg)
+            names.append(name)
+    prog.emit("result", tuple(regs), payload=tuple(names), n_out=0)
+    prog.result_names = names
+    return prog
+
+
+def _binding_args(binding: dict[str, str]) -> tuple[str, ...]:
+    return tuple(sorted(set(binding.values())))
+
+
+def _compile(node: PlanNode, prog: MALProgram, catalog) -> RelInfo:
+    if isinstance(node, ScanNode):
+        cols = {}
+        names = node.columns or catalog.table(node.table).schema.names
+        for c in names:
+            (r,) = prog.emit("load", (), payload=(node.table, c), hint="c")
+            cols[c] = r
+        return RelInfo(cols, base_table=node.table)
+
+    if isinstance(node, FilterNode):
+        ri = _compile(node.child, prog, catalog)
+        binding = dict(ri.cols)
+        mask = ri.mask
+        for conj in split_conjuncts(node.predicate):
+            used = {c: binding[c] for c in conj.columns()}
+            (m,) = prog.emit(
+                "select", _binding_args(used),
+                payload=dict(expr=conj, binding=used,
+                             base_table=ri.base_table if ri.pure else None),
+                hint="m")
+            mask = m if mask is None else prog.emit("mand", (mask, m),
+                                                    hint="m")[0]
+        return RelInfo(dict(ri.cols), mask=mask,
+                       base_table=ri.base_table, pure=ri.pure)
+
+    if isinstance(node, ProjectNode):
+        ri = _compile(node.child, prog, catalog)
+        cols = {}
+        for e, name in node.exprs:
+            if isinstance(e, Col) and e.name in ri.cols:
+                cols[name] = ri.cols[e.name]
+                continue
+            used = {c: ri.cols[c] for c in e.columns()}
+            (r,) = prog.emit("expr", _binding_args(used),
+                             payload=dict(expr=e, binding=used), hint="e")
+            cols[name] = r
+        return RelInfo(cols, mask=ri.mask, base_table=ri.base_table,
+                       pure=False)
+
+    if isinstance(node, JoinNode):
+        lri = _compile(node.left, prog, catalog)
+        rri = _compile(node.right, prog, catalog)
+        lkeys = tuple(lri.cols[k] for k in node.left_keys)
+        rkeys = tuple(rri.cols[k] for k in node.right_keys)
+        args = lkeys + rkeys
+        masks = []
+        if lri.mask is not None:
+            masks.append(lri.mask)
+        if rri.mask is not None:
+            masks.append(rri.mask)
+        payload = dict(n_keys=len(lkeys), how=node.how,
+                       lmask=lri.mask is not None,
+                       rmask=rri.mask is not None,
+                       left_base=lri.base_table if lri.pure else None,
+                       right_base=rri.base_table if rri.pure else None,
+                       left_keys=node.left_keys, right_keys=node.right_keys)
+        n_out = 1 if node.how in ("semi", "anti") else 2
+        outs = prog.emit("join", args + tuple(masks), payload=payload,
+                         n_out=n_out, hint="idx")
+        cols = {}
+        for name, reg in lri.cols.items():
+            (r,) = prog.emit("fetch", (reg, outs[0]), hint="c")
+            cols[name] = r
+        if node.how in ("inner", "left"):
+            fill = node.how == "left"
+            for name, reg in rri.cols.items():
+                if name in cols:
+                    continue
+                (r,) = prog.emit("fetch", (reg, outs[1]),
+                                 payload=dict(fill_null=fill), hint="c")
+                cols[name] = r
+        return RelInfo(cols, mask=None, base_table=None, pure=False)
+
+    if isinstance(node, AggregateNode):
+        ri = _compile(node.child, prog, catalog)
+        keys = tuple(ri.cols[k] for k in node.group_by)
+        args = keys + ((ri.mask,) if ri.mask is not None else ())
+        rep = False
+        if not keys and ri.mask is None and ri.cols:
+            # zero-key global aggregate: pass one column so the runtime
+            # knows the row count
+            args = (next(iter(ri.cols.values())),)
+            rep = True
+        gid, nreg, idx = prog.emit(
+            "group", args,
+            payload=dict(n_keys=len(keys), has_mask=ri.mask is not None,
+                         rep=rep,
+                         base_table=ri.base_table if ri.pure else None,
+                         key_names=node.group_by),
+            n_out=3, hint="g")
+        cols = {}
+        for k, reg in zip(node.group_by, keys):
+            (r,) = prog.emit("gkey", (reg, gid, nreg, idx), hint="c")
+            cols[k] = r
+        for spec in node.aggs:
+            if spec.expr is None:
+                vreg = None
+            elif isinstance(spec.expr, Col):
+                vreg = ri.cols[spec.expr.name]
+            else:
+                used = {c: ri.cols[c] for c in spec.expr.columns()}
+                (vreg,) = prog.emit("expr", _binding_args(used),
+                                    payload=dict(expr=spec.expr,
+                                                 binding=used), hint="e")
+            a = (vreg, gid, nreg, idx) if vreg else (gid, nreg, idx)
+            (r,) = prog.emit("agg", a,
+                             payload=dict(fn=spec.fn,
+                                          has_value=vreg is not None),
+                             hint="a")
+            cols[spec.name] = r
+        return RelInfo(cols, mask=None, base_table=None, pure=False)
+
+    if isinstance(node, OrderByNode):
+        ri = _compile(node.child, prog, catalog)
+        cols = dict(ri.cols)
+        if ri.mask is not None:
+            (idx,) = prog.emit("midx", (ri.mask,), hint="idx")
+            cols = {n: prog.emit("take", (r, idx), hint="c")[0]
+                    for n, r in cols.items()}
+        keys = tuple(cols[k] for k, _ in node.keys)
+        (sidx,) = prog.emit("sort", keys,
+                            payload=dict(descs=tuple(d for _, d in node.keys),
+                                         limit=node.limit), hint="idx")
+        cols = {n: prog.emit("take", (r, sidx), hint="c")[0]
+                for n, r in cols.items()}
+        return RelInfo(cols, mask=None, pure=False)
+
+    if isinstance(node, LimitNode):
+        ri = _compile(node.child, prog, catalog)
+        cols = dict(ri.cols)
+        if ri.mask is not None:
+            (idx,) = prog.emit("midx", (ri.mask,), hint="idx")
+            cols = {n: prog.emit("take", (r, idx), hint="c")[0]
+                    for n, r in cols.items()}
+        cols = {n: prog.emit("slice", (r,), payload=node.n, hint="c")[0]
+                for n, r in cols.items()}
+        return RelInfo(cols, mask=None, pure=False)
+
+    raise TypeError(f"cannot compile {type(node).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# runtime helpers (host/numpy tier)
+# ---------------------------------------------------------------------------
+
+
+def _res_nulls(r: ExprResult) -> np.ndarray:
+    if r.null is not None:
+        return np.asarray(r.null)
+    if is_float(r.dbtype):
+        return np.isnan(r.values)
+    return np.asarray(r.values) == NULL_SENTINEL[r.dbtype]
+
+
+def _factorize(results: list[ExprResult],
+               idx: Optional[np.ndarray] = None) -> tuple[np.ndarray, int]:
+    """Combine N key columns into dense group codes (int64)."""
+    combined = None
+    for r in results:
+        v = np.asarray(r.values)
+        if idx is not None:
+            v = v[idx]
+        if r.dbtype == DBType.VARCHAR:
+            codes, n = v.astype(np.int64), len(r.heap)
+        else:
+            uniq, codes = np.unique(v, return_inverse=True)
+            codes, n = codes.astype(np.int64), len(uniq)
+        if combined is None:
+            combined = codes
+            card = n
+        else:
+            combined = combined * n + codes
+            card *= n
+    if combined is None:
+        return np.zeros(0, dtype=np.int64), 1
+    if card > (1 << 62) or card > 16 * len(combined) + 16:
+        uniq, combined = np.unique(combined, return_inverse=True)
+        card = len(uniq)
+    return combined.astype(np.int64), int(card)
+
+
+def _dense_gid(codes: np.ndarray) -> tuple[np.ndarray, int, np.ndarray]:
+    """codes -> (dense gid in first-occurrence order?, n, rep positions).
+
+    Group order follows sorted key order (stable, deterministic)."""
+    uniq, first_pos, gid = np.unique(codes, return_index=True,
+                                     return_inverse=True)
+    return gid.astype(np.int64), len(uniq), first_pos
+
+
+def _join_codes(lres, rres, n_keys) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Factorize join keys jointly; returns (lc, rc, lnull, rnull)."""
+    lc = rc = None
+    lnull = np.zeros(len(np.asarray(lres[0].values)), dtype=bool)
+    rnull = np.zeros(len(np.asarray(rres[0].values)), dtype=bool)
+    for lr, rr in zip(lres, rres):
+        lv, rv = np.asarray(lr.values), np.asarray(rr.values)
+        lnull |= _res_nulls(lr)
+        rnull |= _res_nulls(rr)
+        if lr.dbtype == DBType.VARCHAR and rr.dbtype == DBType.VARCHAR \
+                and lr.heap is not rr.heap:
+            lv = lr.heap.decode(lv).astype(str)
+            rv = rr.heap.decode(rv).astype(str)
+        allv = np.concatenate([lv, rv])
+        uniq, inv = np.unique(allv, return_inverse=True)
+        la, ra = inv[:len(lv)].astype(np.int64), inv[len(lv):].astype(np.int64)
+        if lc is None:
+            lc, rc, card = la, ra, len(uniq)
+        else:
+            lc = lc * len(uniq) + la
+            rc = rc * len(uniq) + ra
+            card *= len(uniq)
+    return lc, rc, lnull, rnull
+
+
+def _hash_join(lc, rc, how, r_order=None):
+    """Vectorized 'hash' join: sorted build side + binary-search probe.
+
+    ``r_order`` may come from a persisted order index (merge-join tactical
+    path); otherwise we argsort (build phase of the hash table analogue)."""
+    order = np.argsort(rc, kind="stable") if r_order is None else r_order
+    rs = rc[order]
+    lo = np.searchsorted(rs, lc, "left")
+    hi = np.searchsorted(rs, lc, "right")
+    cnt = hi - lo
+    if how == "semi":
+        return np.nonzero(cnt > 0)[0], None
+    if how == "anti":
+        return np.nonzero(cnt == 0)[0], None
+    if how == "left":
+        total = int(cnt.sum())
+        cnt1 = np.maximum(cnt, 1)
+        lidx = np.repeat(np.arange(len(lc), dtype=np.int64), cnt1)
+        offs = np.concatenate([[0], np.cumsum(cnt1)])[:-1]
+        pos = np.arange(int(cnt1.sum()), dtype=np.int64) - np.repeat(offs, cnt1)
+        ridx = np.where(np.repeat(cnt, cnt1) == 0, -1,
+                        order[np.minimum(np.repeat(lo, cnt1) + pos,
+                                         len(rs) - 1 if len(rs) else 0)])
+        return lidx, ridx
+    lidx = np.repeat(np.arange(len(lc), dtype=np.int64), cnt)
+    offs = np.concatenate([[0], np.cumsum(cnt)])[:-1]
+    pos = np.arange(int(cnt.sum()), dtype=np.int64) - np.repeat(offs, cnt)
+    ridx = order[np.repeat(lo, cnt) + pos]
+    return lidx, ridx
+
+
+def _sort_key_float(r: ExprResult, desc: bool) -> np.ndarray:
+    v = np.asarray(r.values)
+    if r.dbtype == DBType.VARCHAR:
+        k = v.astype(np.float64)
+        nulls = v == 0
+    else:
+        k = r.as_float(np)
+        nulls = _res_nulls(r)
+    k = np.where(nulls, np.inf, -k if desc else k)   # NULLs always last
+    return k
+
+
+_AGG_FLOAT = {"sum", "avg", "median", "var", "std"}
+
+
+def _run_agg(fn: str, val: Optional[ExprResult], gid: np.ndarray, n: int,
+             idx: np.ndarray) -> ExprResult:
+    if fn == "count" and val is None:
+        out = np.bincount(gid, minlength=n).astype(np.int64)
+        return ExprResult(out, DBType.INT64)
+    assert val is not None, f"{fn} requires a value expression"
+    v = np.asarray(val.values)[idx]
+    nulls = _res_nulls(val)[idx]
+    ok = ~nulls
+    if fn == "count":
+        out = np.bincount(gid[ok], minlength=n).astype(np.int64)
+        return ExprResult(out, DBType.INT64)
+    if fn == "count_distinct":
+        pair = gid[ok] * np.int64(2**32) + _rank(v[ok])
+        upair = np.unique(pair)
+        out = np.bincount((upair // np.int64(2**32)).astype(np.int64),
+                          minlength=n).astype(np.int64)
+        return ExprResult(out, DBType.INT64)
+    if fn in ("min", "max"):
+        if val.dbtype == DBType.VARCHAR:
+            init = np.iinfo(np.int64).max if fn == "min" else 0
+            out = np.full(n, init, dtype=np.int64)
+            op = np.minimum if fn == "min" else np.maximum
+            op.at(out, gid[ok], v[ok].astype(np.int64))
+            out = np.where(out == init, 0, out).astype(np.int32)
+            return ExprResult(out, DBType.VARCHAR, heap=val.heap)
+        f = val.as_float(np)[idx]
+        out = np.full(n, np.inf if fn == "min" else -np.inf)
+        op = np.minimum if fn == "min" else np.maximum
+        op.at(out, gid[ok], f[ok])
+        empty = np.isinf(out)
+        if val.dbtype in (DBType.INT32, DBType.INT64, DBType.DATE,
+                          DBType.DECIMAL) and not empty.any():
+            enc = out * (10 ** val.scale) if val.dbtype == DBType.DECIMAL \
+                else out
+            return ExprResult(
+                np.round(enc).astype(STORAGE_DTYPE[val.dbtype]),
+                val.dbtype, scale=val.scale)
+        out = np.where(empty, np.nan, out)
+        return ExprResult(out, DBType.FLOAT64)
+    f = val.as_float(np)[idx]
+    fz = np.where(nulls, 0.0, f)
+    cnt = np.bincount(gid[ok], minlength=n).astype(np.float64)
+    if fn == "sum":
+        out = np.bincount(gid, weights=fz, minlength=n)
+        out = np.where(cnt == 0, np.nan, out)
+        return ExprResult(out, DBType.FLOAT64)
+    if fn == "avg":
+        s = np.bincount(gid, weights=fz, minlength=n)
+        out = s / np.maximum(cnt, 1)
+        out = np.where(cnt == 0, np.nan, out)
+        return ExprResult(out, DBType.FLOAT64)
+    if fn in ("var", "std"):
+        s = np.bincount(gid, weights=fz, minlength=n)
+        s2 = np.bincount(gid, weights=fz * fz, minlength=n)
+        m = s / np.maximum(cnt, 1)
+        var = s2 / np.maximum(cnt, 1) - m * m
+        var = np.maximum(var, 0.0)
+        out = np.sqrt(var) if fn == "std" else var
+        out = np.where(cnt == 0, np.nan, out)
+        return ExprResult(out, DBType.FLOAT64)
+    if fn == "median":
+        # blocking op (paper Fig. 2): per-group sort then pick middles
+        ordr = np.lexsort((f, np.where(ok, gid, n)))
+        g_sorted = np.where(ok, gid, n)[ordr]
+        f_sorted = f[ordr]
+        starts = np.searchsorted(g_sorted, np.arange(n), "left")
+        ends = np.searchsorted(g_sorted, np.arange(n), "right")
+        m = ends - starts
+        midlo = starts + np.maximum(m - 1, 0) // 2
+        midhi = starts + m // 2
+        safe = m > 0
+        out = np.where(
+            safe,
+            0.5 * (f_sorted[np.minimum(midlo, len(f_sorted) - 1)]
+                   + f_sorted[np.minimum(midhi, len(f_sorted) - 1)]),
+            np.nan)
+        return ExprResult(out, DBType.FLOAT64)
+    if fn == "first":
+        _, fpos = np.unique(gid, return_index=True)
+        out = v[fpos]
+        return ExprResult(out, val.dbtype, heap=val.heap, scale=val.scale)
+    raise ValueError(fn)
+
+
+def _rank(v: np.ndarray) -> np.ndarray:
+    _, inv = np.unique(v, return_inverse=True)
+    return inv.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# program interpreter
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ExecStats:
+    instructions: int = 0
+    index_hits: int = 0
+    imprint_blocks_skipped: int = 0
+    rows_scanned: int = 0
+
+
+class Executor:
+    """Sequential host-tier interpreter.  parallel.py subclasses the
+    dispatch to run parallelizable spans under shard_map."""
+
+    def __init__(self, database):
+        self.db = database
+        self.stats = ExecStats()
+
+    # -- entry points -------------------------------------------------------
+    def execute(self, plan: PlanNode, do_optimize: bool = True):
+        catalog = self.db.catalog
+        if do_optimize:
+            plan = optimize(plan, catalog)
+        prog = compile_plan(plan, catalog)
+        return self.run_program(prog)
+
+    def run_program(self, prog: MALProgram):
+        regs: dict[str, Any] = {}
+        result = None
+        for ins in prog.instrs:
+            self.stats.instructions += 1
+            out = self._dispatch(ins, regs)
+            if ins.op == "result":
+                result = out
+            else:
+                if len(ins.out) == 1:
+                    regs[ins.out[0]] = out
+                else:
+                    for name, val in zip(ins.out, out):
+                        regs[name] = val
+        return result
+
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch(self, ins: Instr, regs):
+        fn = getattr(self, f"_op_{ins.op}")
+        return fn(ins, regs)
+
+    def _op_load(self, ins, regs):
+        table, cname = ins.payload
+        col = self.db.catalog.table(table).column(cname)
+        self.stats.rows_scanned += len(col)
+        return ExprResult(col.data, col.dbtype, None, col.heap, col.scale)
+
+    def _ctx(self, binding: dict[str, str], regs) -> EvalContext:
+        arrays, meta = {}, {}
+        for cname, reg in binding.items():
+            r: ExprResult = regs[reg]
+            arrays[cname] = np.asarray(r.values)
+            meta[cname] = (r.dbtype, r.heap, r.scale)
+        ctx = EvalContext(arrays, meta, xp=np)
+        return ctx
+
+    def _op_expr(self, ins, regs):
+        p = ins.payload
+        return p["expr"].eval(self._ctx(p["binding"], regs))
+
+    def _op_select(self, ins, regs):
+        p = ins.payload
+        expr = p["expr"]
+        # Tactical: imprint-accelerated range select on base columns.
+        if p.get("base_table") and self.db.index_manager is not None:
+            rng = _simple_range(expr)
+            if rng is not None:
+                cname, lo, hi, lo_strict, hi_strict = rng
+                im = self.db.index_manager.imprint_mask(
+                    p["base_table"], cname, lo, hi, lo_strict, hi_strict)
+                if im is not None:
+                    mask, skipped = im
+                    self.stats.index_hits += 1
+                    self.stats.imprint_blocks_skipped += skipped
+                    return mask
+        r = expr.eval(self._ctx(p["binding"], regs))
+        vals = np.asarray(r.values) != 0
+        if r.null is not None:
+            vals = vals & ~np.asarray(r.null)
+        return vals
+
+    def _op_mand(self, ins, regs):
+        return regs[ins.args[0]] & regs[ins.args[1]]
+
+    def _op_midx(self, ins, regs):
+        return np.nonzero(regs[ins.args[0]])[0]
+
+    def _op_take(self, ins, regs):
+        r: ExprResult = regs[ins.args[0]]
+        idx = regs[ins.args[1]]
+        return ExprResult(np.asarray(r.values)[idx], r.dbtype,
+                          None if r.null is None else np.asarray(r.null)[idx],
+                          r.heap, r.scale)
+
+    def _op_slice(self, ins, regs):
+        r: ExprResult = regs[ins.args[0]]
+        n = ins.payload
+        return ExprResult(np.asarray(r.values)[:n], r.dbtype,
+                          None if r.null is None else np.asarray(r.null)[:n],
+                          r.heap, r.scale)
+
+    def _op_fetch(self, ins, regs):
+        r: ExprResult = regs[ins.args[0]]
+        idx = regs[ins.args[1]]
+        fill = bool(ins.payload and ins.payload.get("fill_null"))
+        v = np.asarray(r.values)
+        if fill:
+            safe = np.maximum(idx, 0)
+            out = v[safe]
+            sent = NULL_SENTINEL[r.dbtype]
+            out = np.where(idx < 0, sent, out)
+            nl = idx < 0
+            if r.null is not None:
+                nl = nl | np.where(idx < 0, True, np.asarray(r.null)[safe])
+            return ExprResult(out, r.dbtype, nl, r.heap, r.scale)
+        return ExprResult(v[idx], r.dbtype,
+                          None if r.null is None else np.asarray(r.null)[idx],
+                          r.heap, r.scale)
+
+    def _op_join(self, ins, regs):
+        p = ins.payload
+        nk = p["n_keys"]
+        lres = [regs[a] for a in ins.args[:nk]]
+        rres = [regs[a] for a in ins.args[nk:2 * nk]]
+        rest = list(ins.args[2 * nk:])
+        lmask = regs[rest.pop(0)] if p["lmask"] else None
+        rmask = regs[rest.pop(0)] if p["rmask"] else None
+
+        lc, rc, lnull, rnull = _join_codes(lres, rres, nk)
+        lsel = np.nonzero((~lnull) if lmask is None else (lmask & ~lnull))[0]
+        rsel = np.nonzero((~rnull) if rmask is None else (rmask & ~rnull))[0]
+        lc, rc = lc[lsel], rc[rsel]
+
+        # Tactical: persisted order index on an unfiltered base build side
+        # turns the build phase into a no-op (merge-join path).
+        r_order = None
+        if (p.get("right_base") and rmask is None and nk == 1
+                and self.db.index_manager is not None):
+            r_order = self.db.index_manager.auto_order_index(
+                p["right_base"], p["right_keys"][0], rc)
+            if r_order is not None:
+                self.stats.index_hits += 1
+
+        how = p["how"]
+        lidx, ridx = _hash_join(lc, rc, how, r_order=r_order)
+        if how in ("semi", "anti"):
+            return (lsel[lidx],)
+        glidx = lsel[lidx]
+        gridx = np.where(ridx < 0, -1, rsel[np.maximum(ridx, 0)]) \
+            if how == "left" else rsel[ridx]
+        return glidx, gridx
+
+    def _op_group(self, ins, regs):
+        p = ins.payload
+        nk = p["n_keys"]
+        keys = [regs[a] for a in ins.args[:nk]]
+        mask = regs[ins.args[nk]] if p["has_mask"] else None
+        some = keys[0] if keys else (
+            regs[ins.args[0]] if p.get("rep") else None)
+        nrows = len(np.asarray(some.values)) if some is not None else (
+            len(mask) if mask is not None else 0)
+        idx = np.nonzero(mask)[0] if mask is not None \
+            else np.arange(nrows, dtype=np.int64)
+        if nk == 0:
+            gid = np.zeros(len(idx), dtype=np.int64)
+            return gid, 1, idx
+        codes, _ = _factorize(keys, idx)
+        gid, n, rep = _dense_gid(codes)
+        return gid, n, idx
+
+    def _op_gkey(self, ins, regs):
+        key: ExprResult = regs[ins.args[0]]
+        gid = regs[ins.args[1]]
+        n = regs[ins.args[2]]
+        idx = regs[ins.args[3]]
+        _, rep = np.unique(gid, return_index=True)
+        pos = idx[rep]
+        v = np.asarray(key.values)[pos]
+        return ExprResult(v, key.dbtype,
+                          None if key.null is None
+                          else np.asarray(key.null)[pos],
+                          key.heap, key.scale)
+
+    def _op_agg(self, ins, regs):
+        p = ins.payload
+        if p["has_value"]:
+            val = regs[ins.args[0]]
+            gid, n, idx = (regs[a] for a in ins.args[1:4])
+        else:
+            val = None
+            gid, n, idx = (regs[a] for a in ins.args[0:3])
+        return _run_agg(p["fn"], val, gid, n, idx)
+
+    def _op_sort(self, ins, regs):
+        p = ins.payload
+        keys = [regs[a] for a in ins.args]
+        descs = p["descs"]
+        arrs = [
+            _sort_key_float(r, d) for r, d in zip(keys, descs)
+        ]
+        idx = np.lexsort(tuple(reversed(arrs)))
+        if p["limit"] is not None:
+            idx = idx[:p["limit"]]
+        return idx
+
+    def _op_result(self, ins, regs):
+        from .types import ColumnSchema, TableSchema
+        names = ins.payload
+        cols = {}
+        schemas = []
+        for name, reg in zip(names, ins.args):
+            r: ExprResult = regs[reg]
+            v = np.asarray(r.values)
+            t = r.dbtype
+            want = STORAGE_DTYPE[t]
+            if v.dtype != want:
+                if is_float(t):
+                    v = v.astype(want)
+                else:
+                    vv = v.astype(np.float64) if v.dtype.kind == "f" else v
+                    v = np.where(np.isnan(vv), NULL_SENTINEL[t], vv).astype(want) \
+                        if v.dtype.kind == "f" else v.astype(want)
+            if r.null is not None:
+                nl = np.asarray(r.null)
+                if nl.any():
+                    if is_float(t):
+                        v = np.where(nl, np.nan, v)
+                    else:
+                        v = np.where(nl, NULL_SENTINEL[t], v).astype(want)
+            cols[name] = Column(t, v, heap=r.heap, scale=r.scale)
+            schemas.append(ColumnSchema(name, t, scale=r.scale))
+        from .table import Table
+        return Table(TableSchema("result", tuple(schemas)), cols)
+
+
+def _simple_range(expr: Expr):
+    """Detect `col <cmp> literal` for the imprint fast path.
+
+    Returns (col, lo, hi, lo_strict, hi_strict) with +-inf open ends."""
+    if not isinstance(expr, BinOp) or expr.op not in ("<", "<=", ">", ">=", "="):
+        return None
+    l, r = expr.left, expr.right
+    op = expr.op
+    if isinstance(r, Col) and isinstance(l, (Lit, DateLit)):
+        l, r = r, l
+        op = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "=": "="}[op]
+    if not (isinstance(l, Col) and isinstance(r, (Lit, DateLit))):
+        return None
+    if isinstance(r, DateLit):
+        from .types import date_from_string
+        v = float(date_from_string(r.text))
+    else:
+        if isinstance(r.value, str) or r.value is None:
+            return None
+        v = float(r.value)
+    lo, hi = -np.inf, np.inf
+    lo_s = hi_s = False
+    if op == "=":
+        lo = hi = v
+    elif op == "<":
+        hi, hi_s = v, True
+    elif op == "<=":
+        hi = v
+    elif op == ">":
+        lo, lo_s = v, True
+    elif op == ">=":
+        lo = v
+    return l.name, lo, hi, lo_s, hi_s

@@ -1,0 +1,191 @@
+"""Automatic indexing (paper §3.1): imprints, hash/order indexes.
+
+* **Imprints** — per-block zone maps.  MonetDB's imprints are per-cache-line
+  bitmaps; the TPU adaptation (DESIGN.md §3) builds min/max + a 16-bin
+  presence bitmap per 2048-row block (the VMEM tile granularity), built by
+  the ``kernels/imprint`` Pallas kernel.  Range selections consult the zone
+  maps and skip non-qualifying blocks entirely.
+* **Order index** — an argsort permutation (paper: CREATE ORDER INDEX).  It
+  answers point/range queries by binary search and turns equi-joins into
+  merge joins.  We also *auto-create* it on join/group keys of base tables,
+  playing the role of the paper's automatically-built hash tables (on TPU a
+  sorted permutation + binary search is the hash-table idiom; see DESIGN.md).
+* Lifecycle follows the paper: built on first qualifying use, cached,
+  persisted by storage.py, and **invalidated on column modification** —
+  except order indexes on append, which are incrementally merged (the paper
+  updates hash tables on appends).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .column import Column
+from .types import DBType, is_float
+
+IMPRINT_BLOCK = 2048          # rows per zone-map block (VMEM tile multiple)
+IMPRINT_BINS = 16
+AUTO_ORDER_MIN_ROWS = 1024    # don't index tiny columns (paper: heuristics)
+
+
+@dataclass
+class Imprint:
+    block: int
+    mins: np.ndarray          # (n_blocks,) float64
+    maxs: np.ndarray          # (n_blocks,) float64
+    bitmaps: np.ndarray       # (n_blocks,) uint16 presence bitmap
+    lo: float                 # histogram range for the bitmap bins
+    hi: float
+    n_rows: int
+
+    def candidate_blocks(self, lo: float, hi: float,
+                         lo_strict: bool, hi_strict: bool) -> np.ndarray:
+        """Boolean per-block: may this block contain values in [lo, hi]?"""
+        ok_lo = (self.maxs > lo) if lo_strict else (self.maxs >= lo)
+        ok_hi = (self.mins < hi) if hi_strict else (self.mins <= hi)
+        cand = ok_lo & ok_hi
+        # refine with the presence bitmap for equality/narrow ranges
+        if np.isfinite(lo) and np.isfinite(hi) and self.hi > self.lo:
+            b0 = int(np.clip((lo - self.lo) / (self.hi - self.lo)
+                             * IMPRINT_BINS, 0, IMPRINT_BINS - 1))
+            b1 = int(np.clip((hi - self.lo) / (self.hi - self.lo)
+                             * IMPRINT_BINS, 0, IMPRINT_BINS - 1))
+            want = np.uint16(0)
+            for b in range(b0, b1 + 1):
+                want |= np.uint16(1 << b)
+            cand &= (self.bitmaps & want) != 0
+        return cand
+
+
+def build_imprint(col: Column) -> Optional[Imprint]:
+    """Zone maps for a numeric/date/decimal column (kernel-built when the
+    Pallas path is enabled; numpy fallback mirrors ref.py)."""
+    if col.dbtype == DBType.VARCHAR or col.dbtype == DBType.BOOL:
+        return None
+    from ..kernels.imprint import ops as imprint_ops
+    v = np.asarray(col.data)
+    if col.dbtype == DBType.DECIMAL:
+        f = v.astype(np.float64) / (10 ** col.scale)
+    else:
+        f = v.astype(np.float64)
+    if is_float(col.dbtype):
+        nulls = np.isnan(f)
+    else:
+        from .types import NULL_SENTINEL
+        nulls = v == NULL_SENTINEL[col.dbtype]
+    mins, maxs, bitmaps, lo, hi = imprint_ops.build_zone_maps(
+        f, nulls, IMPRINT_BLOCK, IMPRINT_BINS)
+    return Imprint(IMPRINT_BLOCK, mins, maxs, bitmaps, lo, hi, len(v))
+
+
+@dataclass
+class IndexManager:
+    """Per-database index cache keyed by (table, column, table_version)."""
+    database: object
+    imprints: dict = field(default_factory=dict)
+    order_indexes: dict = field(default_factory=dict)
+    stats_hits: int = 0
+    stats_built: int = 0
+
+    # -- invalidation --------------------------------------------------------
+    def invalidate_table(self, table: str) -> None:
+        self.imprints = {k: v for k, v in self.imprints.items()
+                         if k[0] != table}
+        self.order_indexes = {k: v for k, v in self.order_indexes.items()
+                              if k[0] != table}
+
+    def on_append(self, table: str) -> None:
+        # imprints are destroyed on modification (paper); order indexes are
+        # merged incrementally on append (paper: hash tables updated on
+        # appends) — we rebuild lazily which is the same observable contract.
+        self.invalidate_table(table)
+
+    # -- imprints -------------------------------------------------------------
+    def _key(self, table: str, column: str):
+        t = self.database.catalog.table(table)
+        return (table, column, t.version)
+
+    def get_imprint(self, table: str, column: str) -> Optional[Imprint]:
+        key = self._key(table, column)
+        if key not in self.imprints:
+            col = self.database.catalog.table(table).column(column)
+            if len(col) < AUTO_ORDER_MIN_ROWS:
+                return None
+            self.imprints[key] = build_imprint(col)
+            self.stats_built += 1
+        return self.imprints[key]
+
+    def imprint_mask(self, table: str, column: str, lo: float, hi: float,
+                     lo_strict: bool, hi_strict: bool):
+        """Range-select through zone maps.  Returns (mask, blocks_skipped)
+        or None when no imprint applies."""
+        imp = self.get_imprint(table, column)
+        if imp is None:
+            return None
+        self.stats_hits += 1
+        col = self.database.catalog.table(table).column(column)
+        v = np.asarray(col.data)
+        if col.dbtype == DBType.DECIMAL:
+            f = v.astype(np.float64) / (10 ** col.scale)
+        else:
+            f = v.astype(np.float64)
+        cand = imp.candidate_blocks(lo, hi, lo_strict, hi_strict)
+        mask = np.zeros(len(v), dtype=bool)
+        nb = len(cand)
+        skipped = int((~cand).sum())
+        for b in np.nonzero(cand)[0]:
+            s, e = b * imp.block, min((b + 1) * imp.block, len(v))
+            fv = f[s:e]
+            m = np.ones(e - s, dtype=bool)
+            m &= (fv > lo) if lo_strict else (fv >= lo)
+            m &= (fv < hi) if hi_strict else (fv <= hi)
+            if is_float(col.dbtype):
+                m &= ~np.isnan(fv)
+            mask[s:e] = m
+        return mask, skipped
+
+    # -- order index ----------------------------------------------------------
+    def create_order_index(self, table: str, column: str) -> np.ndarray:
+        """Explicit CREATE ORDER INDEX (paper §3.1)."""
+        key = self._key(table, column)
+        if key not in self.order_indexes:
+            col = self.database.catalog.table(table).column(column)
+            self.order_indexes[key] = np.argsort(
+                np.asarray(col.data), kind="stable").astype(np.int64)
+            self.stats_built += 1
+        return self.order_indexes[key]
+
+    def get_order_index(self, table: str, column: str) -> Optional[np.ndarray]:
+        return self.order_indexes.get(self._key(table, column))
+
+    def auto_order_index(self, table: str, column: str,
+                         probe_codes: np.ndarray) -> Optional[np.ndarray]:
+        """Auto-create on join-key use (paper's auto hash tables).
+
+        Only valid when the join ran on raw column codes — i.e. the build
+        side is a single non-VARCHAR key whose factorized codes are
+        order-isomorphic to the raw values.  We verify applicability by
+        checking the column is numeric and unfiltered (caller guarantees),
+        then return the permutation that sorts the *codes*, which equals the
+        permutation sorting the raw values because factorization through
+        np.unique is monotone."""
+        t = self.database.catalog.table(table)
+        col = t.column(column)
+        if col.dbtype == DBType.VARCHAR:
+            return None   # cross-heap factorization need not be monotone
+        if len(col) < AUTO_ORDER_MIN_ROWS or len(probe_codes) != len(col):
+            return None
+        perm = self.create_order_index(table, column)
+        return perm
+
+    # -- point lookup through order index (binary search; paper §3.1) --------
+    def point_lookup(self, table: str, column: str, value) -> np.ndarray:
+        perm = self.create_order_index(table, column)
+        col = self.database.catalog.table(table).column(column)
+        v = np.asarray(col.data)[perm]
+        lo = np.searchsorted(v, value, "left")
+        hi = np.searchsorted(v, value, "right")
+        return perm[lo:hi]

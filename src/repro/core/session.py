@@ -1,0 +1,328 @@
+"""Embedding interface (paper §3.2): startup / connect / query / append.
+
+The API mirrors MonetDBLite's C API one-to-one:
+
+    db  = startup(path_or_None)        # monetdb_startup
+    con = db.connect()                 # monetdb_connect  (dummy client ctx)
+    res = con.query("SELECT ...")      # monetdb_query -> Result
+    col = res.fetch(0)                 # monetdb_result_fetch (low/high level)
+    con.append("tbl", {...})           # monetdb_append (bulk, no INSERT parse)
+    db.shutdown()                      # in-process shutdown, state released
+
+Deliberate fixes of the paper's own known limitations (§5.1), enabled by
+explicit state instead of C globals: multiple databases per process, and
+multiple in-process handles per database directory.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .column import Column
+from .executor import Executor
+from .indexes import IndexManager
+from .relalg import PlanNode, Query, ScanNode
+from .storage import Storage
+from .table import Table
+from .transactions import Transaction, TransactionManager
+from .types import DBType
+
+_open_dirs: dict[str, "Database"] = {}
+_open_lock = threading.Lock()
+
+
+class DatabaseError(RuntimeError):
+    pass
+
+
+@dataclass
+class Catalog:
+    tables: dict[str, Table] = field(default_factory=dict)
+
+    def table(self, name: str) -> Table:
+        if name not in self.tables:
+            raise DatabaseError(f"no such table: {name!r}")
+        return self.tables[name]
+
+    def __contains__(self, name):
+        return name in self.tables
+
+
+class Database:
+    """One embedded database instance (explicit state — no process globals)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.catalog = Catalog()
+        self.txn_manager = TransactionManager()
+        self.index_manager = IndexManager(self)
+        self.storage: Optional[Storage] = None
+        self._shutdown = False
+        if path is not None:
+            self.storage = Storage(path)
+            if self.storage.has_catalog():
+                self.catalog.tables = self.storage.load()
+
+    # ---- embedding API ------------------------------------------------------
+    def connect(self) -> "Connection":
+        self._check_alive()
+        return Connection(self)
+
+    def shutdown(self) -> None:
+        """In-process shutdown: persist, then free all state (the paper's
+        'garbage collection' challenge — everything must be reclaimable
+        without process exit)."""
+        if self._shutdown:
+            return
+        if self.storage is not None:
+            self.storage.write_catalog(self.catalog.tables)
+        self.catalog.tables.clear()
+        self.index_manager.imprints.clear()
+        self.index_manager.order_indexes.clear()
+        self._shutdown = True
+        if self.path is not None:
+            with _open_lock:
+                _open_dirs.pop(os.path.abspath(self.path), None)
+
+    def checkpoint(self) -> None:
+        """Fold the WAL into fresh column files (durability compaction)."""
+        self._check_alive()
+        if self.storage is not None:
+            self.storage.write_catalog(self.catalog.tables)
+
+    # ---- data definition ----------------------------------------------------
+    def create_table(self, name: str, data, types=None, scales=None) -> Table:
+        self._check_alive()
+        t = data if isinstance(data, Table) else Table.from_dict(
+            name, data, types, scales)
+        if isinstance(data, Table) and data.name != name:
+            t = data.rename(name)
+        txn = self.txn_manager.begin(self)
+        txn.create_table(t)
+        txn.commit()
+        return t
+
+    def drop_table(self, name: str) -> None:
+        self._check_alive()
+        txn = self.txn_manager.begin(self)
+        txn.drop_table(name)
+        txn.commit()
+
+    def append(self, name: str, data, types=None, scales=None) -> None:
+        """Bulk append (monetdb_append): no per-row INSERT parsing."""
+        self._check_alive()
+        base = self.catalog.table(name)
+        chunk = data if isinstance(data, Table) else Table.from_dict(
+            name, data,
+            types or {c.name: c.dbtype for c in base.schema.columns},
+            scales or {c.name: c.scale for c in base.schema.columns})
+        txn = self.txn_manager.begin(self)
+        txn.append(name, chunk)
+        txn.commit()
+
+    # ---- querying -------------------------------------------------------------
+    def scan(self, name: str) -> Query:
+        self._check_alive()
+        self.catalog.table(name)
+        return Query(ScanNode(name), self)
+
+    def sql(self, text: str) -> Query:
+        from .sqlparser import parse_sql
+        self._check_alive()
+        return Query(parse_sql(text, self.catalog), self)
+
+    def delete(self, name: str, predicate) -> int:
+        """DELETE FROM name WHERE predicate.  Tables are immutable values,
+        so deletion installs a new filtered version; per the paper's index
+        lifecycle (§3.1), imprints/hash/order indexes on the table are
+        destroyed (on_delete -> invalidate, unlike append's merge path)."""
+        import numpy as np
+        from .expression import EvalContext
+        self._check_alive()
+        t = self.catalog.table(name)
+        arrays = {c: np.asarray(col.data) for c, col in t.columns.items()}
+        meta = {c: (col.dbtype, col.heap, col.scale)
+                for c, col in t.columns.items()}
+        r = predicate.eval(EvalContext(arrays, meta, xp=np))
+        kill = np.asarray(r.values) != 0
+        if r.null is not None:
+            kill &= ~np.asarray(r.null)
+        keep = np.nonzero(~kill)[0]
+        from .table import Table
+        new = Table(t.schema,
+                    {c: col.take(keep) for c, col in t.columns.items()},
+                    version=t.version + 1)
+        # install atomically under the commit lock (first-committer-wins
+        # against concurrent appenders, same as the paper's model)
+        txn = self.txn_manager.begin(self)
+        if txn.snapshot[name].version != t.version:
+            from .transactions import ConflictError
+            raise ConflictError(f"table {name!r} changed during delete")
+        with self.txn_manager._lock:
+            self.catalog.tables[name] = new
+            self.index_manager.invalidate_table(name)
+        if self.storage is not None:
+            self.storage.write_catalog(self.catalog.tables)
+        return int(kill.sum())
+
+    def create_order_index(self, table: str, column: str):
+        """CREATE ORDER INDEX (paper §3.1): explicit sorted index used for
+        point/range lookups (binary search) and merge joins."""
+        self._check_alive()
+        self.catalog.table(table)
+        return self.index_manager.create_order_index(table, column)
+
+    def execute_plan(self, plan: PlanNode, do_optimize: bool = True,
+                     distributed: bool = False, mesh=None) -> Table:
+        self._check_alive()
+        if distributed:
+            from .parallel import ParallelExecutor
+            ex = ParallelExecutor(self, mesh=mesh)
+        else:
+            ex = Executor(self)
+        self.last_stats = ex.stats
+        return ex.execute(plan, do_optimize=do_optimize)
+
+    # ---- hooks (storage + indexes) -------------------------------------------
+    def _commit(self, txn: Transaction) -> None:
+        self.txn_manager.commit(self, txn)
+
+    def _on_table_created(self, table: Table) -> None:
+        if self.storage is not None:
+            self.storage.write_catalog(self.catalog.tables)
+
+    def _on_append(self, table: Table, chunk: Table) -> None:
+        if self.storage is not None:
+            self.storage.log_append(table, chunk)
+
+    def _check_alive(self):
+        if self._shutdown:
+            raise DatabaseError("database has been shut down")
+
+    # ---- introspection -----------------------------------------------------
+    def table_names(self) -> list[str]:
+        return sorted(self.catalog.tables)
+
+    def table(self, name: str) -> Table:
+        return self.catalog.table(name)
+
+
+def startup(path: Optional[str] = None) -> Database:
+    """monetdb_startup: persistent when ``path`` given, else in-memory.
+
+    Unlike the original (paper §5.1), several databases may be open in one
+    process; a directory is single-owner ("database locked") to preserve the
+    paper's on-disk locking contract."""
+    if path is None:
+        return Database(None)
+    ap = os.path.abspath(path)
+    with _open_lock:
+        if ap in _open_dirs and not _open_dirs[ap]._shutdown:
+            raise DatabaseError(f"database locked: {ap}")
+        db = Database(ap)
+        _open_dirs[ap] = db
+    return db
+
+
+@dataclass
+class ResultColumnMeta:
+    """High-level column header (paper Listing 2)."""
+    name: str
+    dbtype: DBType
+    null_value: object
+    scale: float
+    count: int
+
+
+class Result:
+    """monetdb_result: semi-opaque header + per-column fetch."""
+
+    def __init__(self, table: Table):
+        self._table = table
+        self.nrows = table.num_rows
+        self.ncols = table.num_cols
+        self.names = list(table.schema.names)
+
+    def fetch_raw(self, i: int) -> np.ndarray:
+        """Low-level fetch: the engine's own packed array, zero-copy
+        (requires knowledge of sentinel encoding — for wrappers)."""
+        col = self._table.columns[self.names[i]]
+        from .exchange import zero_copy_view
+        return zero_copy_view(col)
+
+    def fetch(self, i: int):
+        """High-level fetch: decoded numpy + header struct."""
+        from .types import NULL_SENTINEL
+        name = self.names[i]
+        col = self._table.columns[name]
+        meta = ResultColumnMeta(name, col.dbtype,
+                                NULL_SENTINEL[col.dbtype],
+                                10.0 ** -col.scale if col.scale else 1.0,
+                                len(col))
+        return col.to_numpy(), meta
+
+    def to_pydict(self):
+        return self._table.to_pydict()
+
+
+class Connection:
+    """Dummy client context (paper §3.2): holds a query/transaction scope;
+    many connections per database give inter-query parallelism + isolation."""
+
+    def __init__(self, database: Database):
+        self.database = database
+        self._txn: Optional[Transaction] = None
+
+    # -- transactions -----------------------------------------------------------
+    def begin(self) -> None:
+        if self._txn is not None:
+            raise DatabaseError("transaction already open")
+        self._txn = self.database.txn_manager.begin(self.database)
+
+    def commit(self) -> None:
+        if self._txn is None:
+            raise DatabaseError("no open transaction")
+        self._txn.commit()
+        self._txn = None
+
+    def rollback(self) -> None:
+        if self._txn is None:
+            raise DatabaseError("no open transaction")
+        self._txn.rollback()
+        self._txn = None
+
+    # -- queries -----------------------------------------------------------------
+    def query(self, sql: str, **kw) -> Result:
+        from .sqlparser import parse_statement
+        db = self.database
+        kind, t, c = parse_statement(sql)
+        if kind == "create_order_index":
+            db.create_order_index(t, c)
+            from .table import Table
+            from .types import TableSchema
+            return Result(Table(TableSchema("result", ()), {}))
+        if self._txn is not None:
+            # run against the snapshot: materialize a view database
+            snap_db = Database(None)
+            snap_db.catalog.tables = self._txn.tables()
+            snap_db.index_manager = IndexManager(snap_db)
+            table = snap_db.sql(sql).execute(**kw)
+        else:
+            table = db.sql(sql).execute(**kw)
+        return Result(table)
+
+    def append(self, name: str, data, **kw) -> None:
+        if self._txn is not None:
+            base = self._txn.table(name)
+            chunk = Table.from_dict(
+                name, data,
+                {c.name: c.dbtype for c in base.schema.columns},
+                {c.name: c.scale for c in base.schema.columns})
+            self._txn.append(name, chunk)
+        else:
+            self.database.append(name, data, **kw)

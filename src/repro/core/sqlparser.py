@@ -1,0 +1,636 @@
+"""SQL front-end: a recursive-descent parser for the analytical subset.
+
+Covers the TPC-H-style single-block queries the paper benchmarks with:
+
+  SELECT [DISTINCT] expr [AS name], ...
+  FROM t1 [a1] [, t2 ... | [LEFT] JOIN t2 ON c1 = c2 [AND ...]]
+  WHERE pred        (comma-joins: equi conditions are lifted into joins)
+  GROUP BY cols     HAVING pred
+  ORDER BY name [ASC|DESC], ...    LIMIT n
+
+Aggregates: SUM/COUNT/AVG/MIN/MAX/MEDIAN/COUNT(DISTINCT x)/STDDEV/VARIANCE.
+Scalar: arithmetic, comparisons, AND/OR/NOT, BETWEEN, IN, LIKE, IS [NOT]
+NULL, CASE WHEN, CAST, EXTRACT(YEAR ...), DATE 'yyyy-mm-dd', SUBSTRING-free
+functions from expression.Func.  Subqueries are out of scope (the paper's
+queries that need them are expressed through the builder API; see
+data/tpch_queries.py).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Optional
+
+from .expression import (BinOp, Case, Cast, Col, DateLit, Expr, Func, InList,
+                         IsNull, Like, Lit, Not)
+from .relalg import (AggregateNode, AggSpec, FilterNode, JoinNode, LimitNode,
+                     OrderByNode, PlanNode, ProjectNode, ScanNode)
+from .types import DBType
+
+
+class SQLError(ValueError):
+    pass
+
+
+_TOKEN_RE = re.compile(r"""
+    \s*(?:
+      (?P<num>\d+\.\d*|\.\d+|\d+)
+    | (?P<str>'(?:[^']|'')*')
+    | (?P<op><>|<=|>=|!=|\|\||[-+*/%(),.<>=])
+    | (?P<name>[A-Za-z_][A-Za-z_0-9]*)
+    )""", re.VERBOSE)
+
+_KEYWORDS = {
+    "select", "distinct", "from", "where", "group", "by", "having", "order",
+    "limit", "as", "and", "or", "not", "between", "in", "like", "is",
+    "null", "case", "when", "then", "else", "end", "cast", "date",
+    "asc", "desc", "join", "inner", "left", "outer", "on", "extract",
+    "year", "interval", "true", "false",
+}
+
+_AGG_NAMES = {"sum", "count", "avg", "min", "max", "median",
+              "stddev", "variance"}
+_AGG_MAP = {"stddev": "std", "variance": "var"}
+
+
+@dataclass
+class Token:
+    kind: str          # num | str | op | name | kw
+    text: str
+
+
+def tokenize(sql: str) -> list[Token]:
+    out = []
+    pos = 0
+    sql = sql.strip().rstrip(";")
+    while pos < len(sql):
+        m = _TOKEN_RE.match(sql, pos)
+        if not m:
+            raise SQLError(f"cannot tokenize at: {sql[pos:pos+30]!r}")
+        pos = m.end()
+        if m.lastgroup == "name":
+            t = m.group("name")
+            kind = "kw" if t.lower() in _KEYWORDS else "name"
+            out.append(Token(kind, t.lower() if kind == "kw" else t))
+        elif m.lastgroup == "str":
+            out.append(Token("str", m.group("str")[1:-1].replace("''", "'")))
+        elif m.lastgroup == "num":
+            out.append(Token("num", m.group("num")))
+        else:
+            out.append(Token("op", m.group("op")))
+    return out
+
+
+class Parser:
+    def __init__(self, tokens: list[Token], catalog):
+        self.toks = tokens
+        self.i = 0
+        self.catalog = catalog
+        self.alias_to_table: dict[str, str] = {}
+        self._agg_specs: list[AggSpec] = []
+        self._agg_ctr = 0
+
+    # -- token helpers -------------------------------------------------------
+    def peek(self, k: int = 0) -> Optional[Token]:
+        j = self.i + k
+        return self.toks[j] if j < len(self.toks) else None
+
+    def next(self) -> Token:
+        t = self.peek()
+        if t is None:
+            raise SQLError("unexpected end of query")
+        self.i += 1
+        return t
+
+    def accept(self, kind: str, text: Optional[str] = None) -> Optional[Token]:
+        t = self.peek()
+        if t is not None and t.kind == kind and (text is None or t.text == text):
+            self.i += 1
+            return t
+        return None
+
+    def expect(self, kind: str, text: Optional[str] = None) -> Token:
+        t = self.accept(kind, text)
+        if t is None:
+            raise SQLError(f"expected {text or kind}, got {self.peek()}")
+        return t
+
+    # -- query ---------------------------------------------------------------
+    def parse_query(self) -> PlanNode:
+        self.expect("kw", "select")
+        distinct = self.accept("kw", "distinct") is not None
+        select_items = self._select_list()
+
+        self.expect("kw", "from")
+        plan = self._from_clause()
+
+        where = None
+        if self.accept("kw", "where"):
+            where = self._expr()
+        group_keys: list[str] = []
+        if self.accept("kw", "group"):
+            self.expect("kw", "by")
+            group_keys = self._name_list()
+        having = None
+        if self.accept("kw", "having"):
+            having = self._expr()
+        order = []
+        if self.accept("kw", "order"):
+            self.expect("kw", "by")
+            order = self._order_list(select_items)
+        limit = None
+        if self.accept("kw", "limit"):
+            limit = int(self.expect("num").text)
+        if self.peek() is not None:
+            raise SQLError(f"trailing tokens: {self.peek()}")
+
+        # lift comma-join equi conditions out of WHERE
+        if where is not None:
+            plan, where = self._lift_joins(plan, where)
+        if where is not None:
+            plan = FilterNode(plan, where)
+
+        # expand SELECT * against the (joined) FROM relation
+        if self._star:
+            star_items = [(Col(c), c)
+                          for c in plan.output_columns(self.catalog)]
+            select_items = star_items + select_items
+
+        # aggregates: rewrite agg calls into synthetic columns
+        rewritten = []
+        self._agg_specs = []
+        for expr, name in select_items:
+            rewritten.append((self._extract_aggs(expr), name))
+        having_rw = self._extract_aggs(having) if having is not None else None
+
+        if self._agg_specs or group_keys:
+            plan = AggregateNode(plan, tuple(group_keys),
+                                 tuple(self._agg_specs))
+            if having_rw is not None:
+                # HAVING sits between aggregation and projection: it may
+                # reference aggregates that the SELECT list drops.
+                plan = FilterNode(plan, having_rw)
+            plan = ProjectNode(plan, tuple(rewritten))
+        else:
+            plan = ProjectNode(plan, tuple(rewritten))
+            if distinct:
+                names = [n for _, n in rewritten]
+                plan = AggregateNode(plan, tuple(names), ())
+
+        if order:
+            plan = OrderByNode(plan, tuple(order), limit)
+        elif limit is not None:
+            plan = LimitNode(plan, limit)
+        return plan
+
+    # -- clauses ---------------------------------------------------------------
+    def _select_list(self):
+        items = []
+        while True:
+            if self.accept("op", "*"):
+                items.append(("*", "*"))
+            else:
+                e = self._expr()
+                name = None
+                if self.accept("kw", "as"):
+                    name = self.next().text
+                elif self.peek() is not None and self.peek().kind == "name":
+                    name = self.next().text
+                if name is None:
+                    name = _default_name(e, len(items))
+                items.append((e, name))
+            if not self.accept("op", ","):
+                break
+        # expand * lazily once the FROM relation is known
+        self._star = any(isinstance(e, str) and e == "*" for e, _ in items)
+        return [it for it in items if not (isinstance(it[0], str))]
+
+    def _table_ref(self) -> tuple[PlanNode, str]:
+        name = self.expect("name").text
+        if name not in self.catalog.tables:
+            raise SQLError(f"unknown table {name!r}")
+        alias = None
+        t = self.peek()
+        if t is not None and t.kind == "name":
+            alias = self.next().text
+        self.alias_to_table[alias or name] = name
+        return ScanNode(name), name
+
+    def _from_clause(self) -> PlanNode:
+        plan, _ = self._table_ref()
+        while True:
+            if self.accept("op", ","):
+                right, _ = self._table_ref()
+                # cartesian placeholder: joined later via WHERE equi-conds
+                plan = _PendingCross(plan, right)
+            elif self.peek() is not None and self.peek().kind == "kw" \
+                    and self.peek().text in ("join", "inner", "left"):
+                how = "inner"
+                if self.accept("kw", "left"):
+                    self.accept("kw", "outer")
+                    how = "left"
+                else:
+                    self.accept("kw", "inner")
+                self.expect("kw", "join")
+                right, _ = self._table_ref()
+                self.expect("kw", "on")
+                cond = self._expr()
+                lk, rk = self._equi_keys(cond, plan, right)
+                plan = JoinNode(plan, right, tuple(lk), tuple(rk), how)
+            else:
+                break
+        return plan
+
+    def _equi_keys(self, cond: Expr, left: PlanNode, right: PlanNode):
+        lcols = set(left.output_columns(self.catalog)) \
+            if not isinstance(left, _PendingCross) else set(_cross_cols(left, self.catalog))
+        rcols = set(right.output_columns(self.catalog))
+        lk, rk = [], []
+        for c in _conjuncts(cond):
+            if isinstance(c, BinOp) and c.op == "=" \
+                    and isinstance(c.left, Col) and isinstance(c.right, Col):
+                a, b = c.left.name, c.right.name
+                if a in lcols and b in rcols:
+                    lk.append(a)
+                    rk.append(b)
+                    continue
+                if b in lcols and a in rcols:
+                    lk.append(b)
+                    rk.append(a)
+                    continue
+            raise SQLError(f"unsupported join condition: {c!r}")
+        return lk, rk
+
+    def _lift_joins(self, plan: PlanNode, where: Expr):
+        """Turn _PendingCross + WHERE equi-conds into explicit joins."""
+        crosses = []
+        base = plan
+        while isinstance(base, _PendingCross):
+            crosses.append(base.right)
+            base = base.left
+        if not crosses:
+            return plan, where
+        crosses.reverse()
+        parts = [base] + crosses
+        conds = _conjuncts(where)
+        joins, rest = [], []
+        for c in conds:
+            if isinstance(c, BinOp) and c.op == "=" \
+                    and isinstance(c.left, Col) and isinstance(c.right, Col):
+                joins.append(c)
+            else:
+                rest.append(c)
+        current = parts.pop(0)
+        cur_cols = set(current.output_columns(self.catalog))
+        progress = True
+        while parts and progress:
+            progress = False
+            for p in list(parts):
+                pcols = set(p.output_columns(self.catalog))
+                lk, rk, used = [], [], []
+                for c in joins:
+                    a, b = c.left.name, c.right.name
+                    if a in cur_cols and b in pcols:
+                        lk.append(a); rk.append(b); used.append(c)
+                    elif b in cur_cols and a in pcols:
+                        lk.append(b); rk.append(a); used.append(c)
+                if lk:
+                    current = JoinNode(current, p, tuple(lk), tuple(rk),
+                                       "inner")
+                    cur_cols |= pcols
+                    parts.remove(p)
+                    for c in used:
+                        joins.remove(c)
+                    progress = True
+        if parts:
+            raise SQLError("comma-joined tables without join condition "
+                           "(cartesian products unsupported)")
+        rest.extend(joins)   # join conds between same side fall back to filter
+        where_rest = None
+        if rest:
+            where_rest = rest[0]
+            for c in rest[1:]:
+                where_rest = BinOp("and", where_rest, c)
+        return current, where_rest
+
+    def _name_list(self) -> list[str]:
+        out = [self._qualified_name()]
+        while self.accept("op", ","):
+            out.append(self._qualified_name())
+        return out
+
+    def _order_list(self, select_items):
+        out = []
+        while True:
+            name = self._qualified_name()
+            desc = False
+            if self.accept("kw", "desc"):
+                desc = True
+            else:
+                self.accept("kw", "asc")
+            out.append((name, desc))
+            if not self.accept("op", ","):
+                break
+        return out
+
+    def _qualified_name(self) -> str:
+        n = self.expect("name").text
+        if self.accept("op", "."):
+            n = self.expect("name").text    # alias.col -> col
+        return n
+
+    # -- aggregate extraction ---------------------------------------------------
+    def _extract_aggs(self, e):
+        if isinstance(e, _AggCall):
+            self._agg_ctr += 1
+            name = f"__agg{self._agg_ctr}"
+            self._agg_specs.append(AggSpec(e.fn, e.arg, name))
+            return Col(name)
+        if isinstance(e, BinOp):
+            return BinOp(e.op, self._extract_aggs(e.left),
+                         self._extract_aggs(e.right))
+        if isinstance(e, Not):
+            return Not(self._extract_aggs(e.child))
+        if isinstance(e, Cast):
+            return Cast(self._extract_aggs(e.child), e.to)
+        if isinstance(e, Func):
+            f = Func.__new__(Func)
+            f.name = e.name
+            f.args = tuple(self._extract_aggs(a) for a in e.args)
+            return f
+        if isinstance(e, Case):
+            return Case(tuple((self._extract_aggs(c), self._extract_aggs(v))
+                              for c, v in e.branches),
+                        self._extract_aggs(e.default))
+        return e
+
+    # -- expressions (precedence climbing) ---------------------------------------
+    def _expr(self) -> Expr:
+        return self._or()
+
+    def _or(self) -> Expr:
+        e = self._and()
+        while self.accept("kw", "or"):
+            e = BinOp("or", e, self._and())
+        return e
+
+    def _and(self) -> Expr:
+        e = self._not()
+        while self.accept("kw", "and"):
+            e = BinOp("and", e, self._not())
+        return e
+
+    def _not(self) -> Expr:
+        if self.accept("kw", "not"):
+            return Not(self._not())
+        return self._comparison()
+
+    def _comparison(self) -> Expr:
+        e = self._additive()
+        t = self.peek()
+        if t is None:
+            return e
+        if t.kind == "op" and t.text in ("=", "<>", "!=", "<", "<=", ">", ">="):
+            op = self.next().text
+            if op == "!=":
+                op = "<>"
+            return BinOp(op, e, self._additive())
+        if t.kind == "kw" and t.text == "between":
+            self.next()
+            lo = self._additive()
+            self.expect("kw", "and")
+            hi = self._additive()
+            return BinOp("and", BinOp(">=", e, lo), BinOp("<=", e, hi))
+        if t.kind == "kw" and t.text == "in":
+            self.next()
+            self.expect("op", "(")
+            vals = [self._literal_value()]
+            while self.accept("op", ","):
+                vals.append(self._literal_value())
+            self.expect("op", ")")
+            return InList(e, vals)
+        if t.kind == "kw" and t.text == "like":
+            self.next()
+            pat = self.expect("str").text
+            return Like(e, pat)
+        if t.kind == "kw" and t.text == "not":
+            nxt = self.peek(1)
+            if nxt is not None and nxt.text in ("like", "in", "between"):
+                self.next()
+                inner_tok = self.peek().text
+                inner = self._comparison_tail(e, inner_tok)
+                return Not(inner)
+        if t.kind == "kw" and t.text == "is":
+            self.next()
+            neg = self.accept("kw", "not") is not None
+            self.expect("kw", "null")
+            return IsNull(e, negate=neg)
+        return e
+
+    def _comparison_tail(self, e: Expr, which: str) -> Expr:
+        if which == "like":
+            self.expect("kw", "like")
+            return Like(e, self.expect("str").text)
+        if which == "in":
+            self.expect("kw", "in")
+            self.expect("op", "(")
+            vals = [self._literal_value()]
+            while self.accept("op", ","):
+                vals.append(self._literal_value())
+            self.expect("op", ")")
+            return InList(e, vals)
+        self.expect("kw", "between")
+        lo = self._additive()
+        self.expect("kw", "and")
+        hi = self._additive()
+        return BinOp("and", BinOp(">=", e, lo), BinOp("<=", e, hi))
+
+    def _literal_value(self):
+        t = self.next()
+        if t.kind == "num":
+            return float(t.text) if "." in t.text else int(t.text)
+        if t.kind == "str":
+            return t.text
+        raise SQLError(f"expected literal, got {t}")
+
+    def _additive(self) -> Expr:
+        e = self._multiplicative()
+        while True:
+            t = self.peek()
+            if t is not None and t.kind == "op" and t.text in ("+", "-"):
+                op = self.next().text
+                e = BinOp(op, e, self._multiplicative())
+            else:
+                return e
+
+    def _multiplicative(self) -> Expr:
+        e = self._unary()
+        while True:
+            t = self.peek()
+            if t is not None and t.kind == "op" and t.text in ("*", "/", "%"):
+                op = self.next().text
+                e = BinOp(op, e, self._unary())
+            else:
+                return e
+
+    def _unary(self) -> Expr:
+        if self.accept("op", "-"):
+            return BinOp("-", Lit(0), self._unary())
+        if self.accept("op", "+"):
+            return self._unary()
+        return self._primary()
+
+    def _primary(self) -> Expr:
+        t = self.peek()
+        if t is None:
+            raise SQLError("unexpected end in expression")
+        if t.kind == "num":
+            self.next()
+            return Lit(float(t.text) if "." in t.text else int(t.text))
+        if t.kind == "str":
+            self.next()
+            return Lit(t.text)
+        if t.kind == "op" and t.text == "(":
+            self.next()
+            e = self._expr()
+            self.expect("op", ")")
+            return e
+        if t.kind == "kw":
+            if t.text == "date":
+                self.next()
+                return DateLit(self.expect("str").text)
+            if t.text == "null":
+                self.next()
+                return Lit(None)
+            if t.text in ("true", "false"):
+                self.next()
+                return Lit(t.text == "true")
+            if t.text == "case":
+                return self._case()
+            if t.text == "cast":
+                self.next()
+                self.expect("op", "(")
+                e = self._expr()
+                self.expect("kw", "as")
+                tname = self.next().text.lower()
+                self.expect("op", ")")
+                tmap = {"int": DBType.INT64, "integer": DBType.INT64,
+                        "bigint": DBType.INT64, "float": DBType.FLOAT64,
+                        "double": DBType.FLOAT64, "date": DBType.DATE}
+                return Cast(e, tmap[tname])
+            if t.text == "extract":
+                self.next()
+                self.expect("op", "(")
+                self.expect("kw", "year")
+                self.expect("kw", "from")
+                e = self._expr()
+                self.expect("op", ")")
+                return Func("year", e)
+            raise SQLError(f"unexpected keyword {t.text!r} in expression")
+        # name: column, function call, aggregate
+        name = self.next().text
+        if self.accept("op", "("):
+            low = name.lower()
+            if low in _AGG_NAMES:
+                if low == "count" and self.accept("op", "*"):
+                    self.expect("op", ")")
+                    return _AggCall("count", None)
+                distinct = self.accept("kw", "distinct") is not None
+                arg = self._expr()
+                self.expect("op", ")")
+                fn = _AGG_MAP.get(low, low)
+                if distinct:
+                    if fn != "count":
+                        raise SQLError("DISTINCT only with COUNT")
+                    fn = "count_distinct"
+                return _AggCall(fn, arg)
+            args = []
+            if not self.accept("op", ")"):
+                args.append(self._expr())
+                while self.accept("op", ","):
+                    args.append(self._expr())
+                self.expect("op", ")")
+            return Func(name, *args)
+        if self.accept("op", "."):
+            col = self.expect("name").text
+            return Col(col)            # alias.col -> col (globally unique)
+        return Col(name)
+
+    def _case(self) -> Expr:
+        self.expect("kw", "case")
+        branches = []
+        while self.accept("kw", "when"):
+            c = self._expr()
+            self.expect("kw", "then")
+            v = self._expr()
+            branches.append((c, v))
+        default = Lit(None)
+        if self.accept("kw", "else"):
+            default = self._expr()
+        self.expect("kw", "end")
+        return Case(tuple(branches), default)
+
+
+@dataclass(eq=False)
+class _AggCall(Expr):
+    fn: str
+    arg: Optional[Expr]
+
+    def columns(self):
+        return self.arg.columns() if self.arg is not None else set()
+
+
+@dataclass
+class _PendingCross(PlanNode):
+    left: PlanNode
+    right: PlanNode
+
+    @property
+    def children(self):
+        return (self.left, self.right)
+
+    def output_columns(self, catalog):
+        return _cross_cols(self, catalog)
+
+    def with_children(self, children):
+        return _PendingCross(children[0], children[1])
+
+
+def _cross_cols(n: PlanNode, catalog) -> list[str]:
+    if isinstance(n, _PendingCross):
+        return _cross_cols(n.left, catalog) + _cross_cols(n.right, catalog)
+    return n.output_columns(catalog)
+
+
+def _conjuncts(e: Expr) -> list[Expr]:
+    if isinstance(e, BinOp) and e.op == "and":
+        return _conjuncts(e.left) + _conjuncts(e.right)
+    return [e]
+
+
+def _default_name(e, i: int) -> str:
+    if isinstance(e, Col):
+        return e.name
+    if isinstance(e, _AggCall):
+        return f"{e.fn}_{e.arg.name}" if isinstance(e.arg, Col) else e.fn
+    return f"col{i}"
+
+
+_CREATE_ORDER_RE = re.compile(
+    r"^\s*create\s+order\s+index\s+(?:\w+\s+)?on\s+"
+    r"(\w+)\s*\(\s*(\w+)\s*\)\s*;?\s*$", re.IGNORECASE)
+
+
+def parse_statement(sql: str):
+    """Statement router: returns ("query", plan_fn) or
+    ("create_order_index", table, column) — the paper's §3.1 CREATE ORDER
+    INDEX statement is a DDL statement, not a query."""
+    m = _CREATE_ORDER_RE.match(sql)
+    if m:
+        return ("create_order_index", m.group(1), m.group(2))
+    return ("query", None, None)
+
+
+def parse_sql(sql: str, catalog) -> PlanNode:
+    return Parser(tokenize(sql), catalog).parse_query()

@@ -1,0 +1,206 @@
+"""Persistence: memory-mapped column files, JSON catalog, append WAL.
+
+Persistent mode (paper §3.2): a database directory holds one binary file per
+column version, mapped back in with ``np.memmap`` on load — the host-tier
+analogue of MonetDB keeping columns as memory-mapped files and letting the
+OS page them (paper §3.1 "Memory Management").  In-memory mode never touches
+this module.
+
+Durability contract: ``monetdb_append``-style bulk appends go to a WAL
+(one npz per append + a JSONL manifest) and are replayed on open; an
+explicit ``checkpoint`` folds them into fresh column files and truncates the
+WAL.  All file replacements are atomic (write-new + rename).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from .column import Column, StringHeap
+from .table import Table
+from .types import ColumnSchema, DBType, TableSchema
+
+CATALOG = "catalog.json"
+DATA_DIR = "data"
+WAL_DIR = "wal"
+FORMAT_VERSION = 2     # bumped on layout change; loader upgrades old dbs
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    d = os.path.dirname(path)
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _col_file(table: str, col: str, version: int) -> str:
+    return f"{DATA_DIR}/{table}.{col}.v{version}.bin"
+
+
+def _heap_file(table: str, col: str, version: int) -> str:
+    return f"{DATA_DIR}/{table}.{col}.v{version}.heap.json"
+
+
+def save_table(root: str, table: Table) -> dict:
+    """Write all columns of one table version; returns catalog entry."""
+    cols_meta = []
+    for cs in table.schema.columns:
+        col = table.columns[cs.name]
+        rel = _col_file(table.name, cs.name, table.version)
+        _atomic_write(os.path.join(root, rel),
+                      lambda f, c=col: f.write(
+                          np.ascontiguousarray(c.data).tobytes()))
+        entry = {"name": cs.name, "type": cs.dbtype.value,
+                 "scale": cs.scale, "file": rel}
+        if col.heap is not None:
+            hrel = _heap_file(table.name, cs.name, table.version)
+            payload = json.dumps(
+                [str(v) for v in col.heap.values]).encode()
+            _atomic_write(os.path.join(root, hrel),
+                          lambda f, p=payload: f.write(p))
+            entry["heap"] = hrel
+        cols_meta.append(entry)
+    return {"version": table.version, "nrows": table.num_rows,
+            "columns": cols_meta}
+
+
+def load_table(root: str, name: str, meta: dict) -> Table:
+    cols: dict[str, Column] = {}
+    schemas = []
+    for cm in meta["columns"]:
+        t = DBType(cm["type"])
+        from .types import STORAGE_DTYPE
+        data = np.memmap(os.path.join(root, cm["file"]),
+                         dtype=STORAGE_DTYPE[t], mode="r")
+        heap = None
+        if "heap" in cm:
+            with open(os.path.join(root, cm["heap"])) as f:
+                vals = json.load(f)
+            hv = np.empty(len(vals), dtype=object)
+            hv[:] = vals
+            heap = StringHeap(hv)
+        cols[cm["name"]] = Column(t, data, heap=heap, scale=cm["scale"])
+        schemas.append(ColumnSchema(cm["name"], t, scale=cm["scale"]))
+    return Table(TableSchema(name, tuple(schemas)), cols,
+                 version=meta["version"])
+
+
+class Storage:
+    """Directory-backed persistence for one database."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, DATA_DIR), exist_ok=True)
+        os.makedirs(os.path.join(root, WAL_DIR), exist_ok=True)
+        self._wal_seq = 0
+
+    # -- catalog -------------------------------------------------------------
+    def write_catalog(self, tables: dict[str, Table]) -> None:
+        cat = {"format": FORMAT_VERSION,
+               "tables": {name: save_table(self.root, t)
+                          for name, t in tables.items()}}
+        _atomic_write(os.path.join(self.root, CATALOG),
+                      lambda f: f.write(json.dumps(cat, indent=1).encode()))
+        self._truncate_wal()
+
+    def has_catalog(self) -> bool:
+        return os.path.exists(os.path.join(self.root, CATALOG))
+
+    def load(self) -> dict[str, Table]:
+        path = os.path.join(self.root, CATALOG)
+        with open(path) as f:
+            cat = json.load(f)
+        if cat.get("format", 1) > FORMAT_VERSION:
+            raise RuntimeError(
+                f"database created by a newer version ({cat['format']})")
+        tables = {name: load_table(self.root, name, meta)
+                  for name, meta in cat["tables"].items()}
+        # crash recovery: replay WAL appends newer than the catalog
+        for rec, arrays in self._read_wal():
+            name = rec["table"]
+            if name not in tables:
+                continue
+            chunk = _chunk_to_table(tables[name], arrays, rec)
+            tables[name] = tables[name].append_table(chunk)
+        return tables
+
+    # -- WAL -----------------------------------------------------------------
+    def log_append(self, table: Table, chunk: Table) -> None:
+        self._wal_seq += 1
+        seq = self._wal_seq
+        data_rel = f"{WAL_DIR}/{seq:08d}.npz"
+        arrays = {}
+        heaps = {}
+        for cs in chunk.schema.columns:
+            col = chunk.columns[cs.name]
+            arrays[cs.name] = np.ascontiguousarray(col.data)
+            if col.heap is not None:
+                heaps[cs.name] = [str(v) for v in col.heap.values]
+        _atomic_write(os.path.join(self.root, data_rel),
+                      lambda f: np.savez(f, **arrays))
+        rec = {"seq": seq, "table": table.name, "file": data_rel,
+               "heaps": heaps,
+               "types": {cs.name: cs.dbtype.value
+                         for cs in chunk.schema.columns},
+               "scales": {cs.name: cs.scale
+                          for cs in chunk.schema.columns}}
+        with open(os.path.join(self.root, WAL_DIR, "wal.jsonl"), "a") as f:
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _read_wal(self):
+        manifest = os.path.join(self.root, WAL_DIR, "wal.jsonl")
+        if not os.path.exists(manifest):
+            return
+        with open(manifest) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                npz_path = os.path.join(self.root, rec["file"])
+                if not os.path.exists(npz_path):
+                    continue    # torn append: data file missing -> skip
+                with np.load(npz_path, allow_pickle=False) as z:
+                    arrays = {k: z[k] for k in z.files}
+                self._wal_seq = max(self._wal_seq, rec["seq"])
+                yield rec, arrays
+
+    def _truncate_wal(self) -> None:
+        wal = os.path.join(self.root, WAL_DIR)
+        if os.path.isdir(wal):
+            shutil.rmtree(wal)
+        os.makedirs(wal, exist_ok=True)
+        self._wal_seq = 0
+
+
+def _chunk_to_table(base: Table, arrays: dict, rec: dict) -> Table:
+    cols = {}
+    schemas = []
+    for cs in base.schema.columns:
+        t = DBType(rec["types"][cs.name])
+        data = arrays[cs.name]
+        heap = None
+        if cs.name in rec.get("heaps", {}):
+            vals = rec["heaps"][cs.name]
+            hv = np.empty(len(vals), dtype=object)
+            hv[:] = vals
+            heap = StringHeap(hv)
+        cols[cs.name] = Column(t, data, heap=heap,
+                               scale=rec["scales"][cs.name])
+        schemas.append(ColumnSchema(cs.name, t, scale=rec["scales"][cs.name]))
+    return Table(TableSchema(base.name, tuple(schemas)), cols)

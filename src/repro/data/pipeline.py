@@ -1,0 +1,98 @@
+"""DB-backed training data pipeline — the paper's pitch, operationalized:
+the embedded analytical store IS the storage engine for training data.
+
+* Tokens live in the embedded columnar store (an INT32 column is already
+  the training-ready packed array — zero-copy into jnp per §3.3).
+* Curation (filtering, dedup, stats) runs as relational queries on the
+  same engine *in the trainer process* — no export/import hop.
+* Batches are cursor-addressed slices of an immutable table version, so a
+  restarted job replays exactly (the snapshot gives exactly-once batches;
+  the cursor is checkpointed with the model).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..core.exchange import zero_copy_view
+from ..core.session import Database
+
+
+def tokenize_corpus(db: Database, n_tokens: int, vocab: int,
+                    table: str = "corpus", seed: int = 0) -> None:
+    """Synthesize a zipf-ish token stream into the store (stand-in for a
+    real tokenizer run; the storage path is identical)."""
+    rng = np.random.default_rng(seed)
+    z = rng.zipf(1.3, size=n_tokens).astype(np.int64)
+    tokens = (z % vocab).astype(np.int32)
+    db.create_table(table, {"token": tokens},
+                    types={"token": __import__(
+                        "repro.core.types", fromlist=["DBType"]).DBType.INT32})
+
+
+def curate(db: Database, src: str = "corpus", dst: str = "corpus_clean",
+           drop_token: Optional[int] = None) -> int:
+    """Example curation pass: engine-side filtering before training."""
+    from ..core.expression import Col
+    q = db.scan(src)
+    if drop_token is not None:
+        q = q.filter(Col("token") != drop_token)
+    result = q.execute()
+    col = result.columns["token"]
+    db.create_table(dst, {"token": np.asarray(col.data)},
+                    types={"token": col.dbtype})
+    return result.num_rows
+
+
+@dataclass
+class TokenPipeline:
+    """Cursor-based batch iterator over an immutable token column."""
+    db: Database
+    table: str = "corpus"
+    column: str = "token"
+    batch: int = 8
+    seq_len: int = 128
+    cursor: int = 0
+    _version: int = -1
+
+    def __post_init__(self):
+        t = self.db.table(self.table)
+        self._version = t.version
+        self._view = zero_copy_view(t.column(self.column))  # O(1), no copy
+
+    @property
+    def tokens_per_batch(self) -> int:
+        return self.batch * (self.seq_len + 1)
+
+    def state(self) -> dict:
+        """Checkpointable cursor (exactly-once restart)."""
+        return {"cursor": self.cursor, "version": self._version,
+                "table": self.table}
+
+    def restore(self, state: dict) -> None:
+        assert state["table"] == self.table
+        if state["version"] != self._version:
+            raise RuntimeError(
+                "table version changed; snapshot does not match cursor")
+        self.cursor = state["cursor"]
+
+    def next_batch(self) -> dict[str, np.ndarray]:
+        n = self.tokens_per_batch
+        total = len(self._view)
+        if self.cursor + n > total:
+            self.cursor = 0                       # epoch wrap
+        flat = self._view[self.cursor:self.cursor + n]
+        self.cursor += n
+        arr = np.asarray(flat).reshape(self.batch, self.seq_len + 1)
+        return {"tokens": np.ascontiguousarray(arr[:, :-1]),
+                "labels": np.ascontiguousarray(arr[:, 1:])}
+
+    def shard_plan(self, n_hosts: int) -> list[tuple[int, int]]:
+        """Static host sharding of the stream (rebalanced by fault.py's
+        straggler plan): contiguous [start, end) per host."""
+        total = len(self._view)
+        per = total // n_hosts
+        return [(i * per, (i + 1) * per) for i in range(n_hosts)]

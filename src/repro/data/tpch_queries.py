@@ -1,0 +1,263 @@
+"""TPC-H queries 1-10 (paper Table 1) against the embedded engine.
+
+Each q<i>(db) returns a relalg Query; queries expressible in our SQL subset
+also appear in SQL (used by tests to check parser == builder).  Queries
+needing subqueries (Q2) or double table references (Q7-Q9) use the builder
+with explicit projections/renames — the same shape VectorWise-style plans
+take after decorrelation.
+"""
+
+from __future__ import annotations
+
+from ..core.expression import Case, Col, DateLit, Func, Lit
+from ..core.relalg import Query
+
+
+def q1(db) -> Query:
+    l = db.scan("lineitem")
+    disc_price = Col("l_extendedprice") * (1 - Col("l_discount"))
+    charge = disc_price * (1 + Col("l_tax"))
+    return (l.filter(Col("l_shipdate") <= DateLit("1998-09-02"))
+            .group_by("l_returnflag", "l_linestatus")
+            .agg(sum_qty=("sum", Col("l_quantity")),
+                 sum_base_price=("sum", Col("l_extendedprice")),
+                 sum_disc_price=("sum", disc_price),
+                 sum_charge=("sum", charge),
+                 avg_qty=("avg", Col("l_quantity")),
+                 avg_price=("avg", Col("l_extendedprice")),
+                 avg_disc=("avg", Col("l_discount")),
+                 count_order=("count", None))
+            .order_by("l_returnflag", "l_linestatus"))
+
+
+Q1_SQL = """
+SELECT l_returnflag, l_linestatus,
+       sum(l_quantity) AS sum_qty,
+       sum(l_extendedprice) AS sum_base_price,
+       sum(l_extendedprice * (1 - l_discount)) AS sum_disc_price,
+       sum(l_extendedprice * (1 - l_discount) * (1 + l_tax)) AS sum_charge,
+       avg(l_quantity) AS avg_qty,
+       avg(l_extendedprice) AS avg_price,
+       avg(l_discount) AS avg_disc,
+       count(*) AS count_order
+FROM lineitem
+WHERE l_shipdate <= DATE '1998-09-02'
+GROUP BY l_returnflag, l_linestatus
+ORDER BY l_returnflag, l_linestatus
+"""
+
+
+def _europe_suppliers(db) -> Query:
+    return (db.scan("partsupp")
+            .join(db.scan("supplier"), left_on="ps_suppkey",
+                  right_on="s_suppkey")
+            .join(db.scan("nation"), left_on="s_nationkey",
+                  right_on="n_nationkey")
+            .join(db.scan("region").filter(Col("r_name") == "EUROPE"),
+                  left_on="n_regionkey", right_on="r_regionkey"))
+
+
+def q2(db) -> Query:
+    eu = _europe_suppliers(db)
+    min_cost = (eu.group_by("ps_partkey")
+                .agg(min_cost=("min", Col("ps_supplycost"))))
+    parts = db.scan("part").filter(
+        (Col("p_size") == 15) & Col("p_type").like("%BRASS"))
+    return (eu.join(min_cost, on="ps_partkey")
+            .filter(Col("ps_supplycost") == Col("min_cost"))
+            .join(parts, left_on="ps_partkey", right_on="p_partkey")
+            .select("s_acctbal", "s_name", "n_name", "p_partkey", "p_mfgr",
+                    "s_address", "s_phone", "s_comment")
+            .order_by(("s_acctbal", True), "n_name", "s_name", "p_partkey",
+                      limit=100))
+
+
+def q3(db) -> Query:
+    revenue = Col("l_extendedprice") * (1 - Col("l_discount"))
+    return (db.scan("customer").filter(Col("c_mktsegment") == "BUILDING")
+            .join(db.scan("orders"), left_on="c_custkey",
+                  right_on="o_custkey")
+            .filter(Col("o_orderdate") < DateLit("1995-03-15"))
+            .join(db.scan("lineitem"), left_on="o_orderkey",
+                  right_on="l_orderkey")
+            .filter(Col("l_shipdate") > DateLit("1995-03-15"))
+            .group_by("l_orderkey", "o_orderdate", "o_shippriority")
+            .agg(revenue=("sum", revenue))
+            .order_by(("revenue", True), "o_orderdate", limit=10))
+
+
+Q3_SQL = """
+SELECT l_orderkey, sum(l_extendedprice * (1 - l_discount)) AS revenue,
+       o_orderdate, o_shippriority
+FROM customer, orders, lineitem
+WHERE c_mktsegment = 'BUILDING' AND c_custkey = o_custkey
+  AND l_orderkey = o_orderkey AND o_orderdate < DATE '1995-03-15'
+  AND l_shipdate > DATE '1995-03-15'
+GROUP BY l_orderkey, o_orderdate, o_shippriority
+ORDER BY revenue DESC, o_orderdate LIMIT 10
+"""
+
+
+def q4(db) -> Query:
+    late = db.scan("lineitem").filter(
+        Col("l_commitdate") < Col("l_receiptdate"))
+    return (db.scan("orders")
+            .filter((Col("o_orderdate") >= DateLit("1993-07-01"))
+                    & (Col("o_orderdate") < DateLit("1993-10-01")))
+            .join(late, left_on="o_orderkey", right_on="l_orderkey",
+                  how="semi")
+            .group_by("o_orderpriority")
+            .agg(order_count=("count", None))
+            .order_by("o_orderpriority"))
+
+
+def q5(db) -> Query:
+    revenue = Col("l_extendedprice") * (1 - Col("l_discount"))
+    return (db.scan("customer")
+            .join(db.scan("orders"), left_on="c_custkey",
+                  right_on="o_custkey")
+            .filter((Col("o_orderdate") >= DateLit("1994-01-01"))
+                    & (Col("o_orderdate") < DateLit("1995-01-01")))
+            .join(db.scan("lineitem"), left_on="o_orderkey",
+                  right_on="l_orderkey")
+            .join(db.scan("supplier"), left_on="l_suppkey",
+                  right_on="s_suppkey")
+            .filter(Col("c_nationkey") == Col("s_nationkey"))
+            .join(db.scan("nation"), left_on="s_nationkey",
+                  right_on="n_nationkey")
+            .join(db.scan("region").filter(Col("r_name") == "ASIA"),
+                  left_on="n_regionkey", right_on="r_regionkey")
+            .group_by("n_name")
+            .agg(revenue=("sum", revenue))
+            .order_by(("revenue", True)))
+
+
+def q6(db) -> Query:
+    return (db.scan("lineitem")
+            .filter((Col("l_shipdate") >= DateLit("1994-01-01"))
+                    & (Col("l_shipdate") < DateLit("1995-01-01"))
+                    & (Col("l_discount") >= 0.05)
+                    & (Col("l_discount") <= 0.07)
+                    & (Col("l_quantity") < 24))
+            .agg(revenue=("sum", Col("l_extendedprice")
+                          * Col("l_discount"))))
+
+
+Q6_SQL = """
+SELECT sum(l_extendedprice * l_discount) AS revenue
+FROM lineitem
+WHERE l_shipdate >= DATE '1994-01-01' AND l_shipdate < DATE '1995-01-01'
+  AND l_discount BETWEEN 0.05 AND 0.07 AND l_quantity < 24
+"""
+
+
+def q7(db) -> Query:
+    n1 = db.scan("nation").project(supp_nation=Col("n_name"),
+                                   n1_key=Col("n_nationkey"))
+    n2 = db.scan("nation").project(cust_nation=Col("n_name"),
+                                   n2_key=Col("n_nationkey"))
+    volume = Col("l_extendedprice") * (1 - Col("l_discount"))
+    cross = ((Col("supp_nation") == "FRANCE")
+             & (Col("cust_nation") == "GERMANY")) \
+        | ((Col("supp_nation") == "GERMANY")
+           & (Col("cust_nation") == "FRANCE"))
+    return (db.scan("supplier")
+            .join(db.scan("lineitem"), left_on="s_suppkey",
+                  right_on="l_suppkey")
+            .filter((Col("l_shipdate") >= DateLit("1995-01-01"))
+                    & (Col("l_shipdate") <= DateLit("1996-12-31")))
+            .join(db.scan("orders"), left_on="l_orderkey",
+                  right_on="o_orderkey")
+            .join(db.scan("customer"), left_on="o_custkey",
+                  right_on="c_custkey")
+            .join(n1, left_on="s_nationkey", right_on="n1_key")
+            .join(n2, left_on="c_nationkey", right_on="n2_key")
+            .filter(cross)
+            .project(supp_nation=Col("supp_nation"),
+                     cust_nation=Col("cust_nation"),
+                     l_year=Func("year", Col("l_shipdate")),
+                     volume=volume)
+            .group_by("supp_nation", "cust_nation", "l_year")
+            .agg(revenue=("sum", Col("volume")))
+            .order_by("supp_nation", "cust_nation", "l_year"))
+
+
+def q8(db) -> Query:
+    n1 = db.scan("nation").project(n1_key=Col("n_nationkey"),
+                                   n1_region=Col("n_regionkey"))
+    n2 = db.scan("nation").project(supp_nation=Col("n_name"),
+                                   n2_key=Col("n_nationkey"))
+    volume = Col("l_extendedprice") * (1 - Col("l_discount"))
+    return (db.scan("part")
+            .filter(Col("p_type") == "ECONOMY ANODIZED STEEL")
+            .join(db.scan("lineitem"), left_on="p_partkey",
+                  right_on="l_partkey")
+            .join(db.scan("supplier"), left_on="l_suppkey",
+                  right_on="s_suppkey")
+            .join(db.scan("orders"), left_on="l_orderkey",
+                  right_on="o_orderkey")
+            .filter((Col("o_orderdate") >= DateLit("1995-01-01"))
+                    & (Col("o_orderdate") <= DateLit("1996-12-31")))
+            .join(db.scan("customer"), left_on="o_custkey",
+                  right_on="c_custkey")
+            .join(n1, left_on="c_nationkey", right_on="n1_key")
+            .join(db.scan("region").filter(Col("r_name") == "AMERICA"),
+                  left_on="n1_region", right_on="r_regionkey")
+            .join(n2, left_on="s_nationkey", right_on="n2_key")
+            .project(o_year=Func("year", Col("o_orderdate")),
+                     volume=volume,
+                     brazil_volume=Case(
+                         ((Col("supp_nation") == "BRAZIL", volume),),
+                         Lit(0.0)))
+            .group_by("o_year")
+            .agg(mkt_share_num=("sum", Col("brazil_volume")),
+                 mkt_share_den=("sum", Col("volume")))
+            .project(o_year=Col("o_year"),
+                     mkt_share=Col("mkt_share_num") / Col("mkt_share_den"))
+            .order_by("o_year"))
+
+
+def q9(db) -> Query:
+    profit = Col("l_extendedprice") * (1 - Col("l_discount")) \
+        - Col("ps_supplycost") * Col("l_quantity")
+    return (db.scan("part").filter(Col("p_name").like("%green%"))
+            .join(db.scan("lineitem"), left_on="p_partkey",
+                  right_on="l_partkey")
+            .join(db.scan("supplier"), left_on="l_suppkey",
+                  right_on="s_suppkey")
+            .join(db.scan("partsupp"),
+                  left_on=("l_suppkey", "l_partkey"),
+                  right_on=("ps_suppkey", "ps_partkey"))
+            .join(db.scan("orders"), left_on="l_orderkey",
+                  right_on="o_orderkey")
+            .join(db.scan("nation"), left_on="s_nationkey",
+                  right_on="n_nationkey")
+            .project(nation=Col("n_name"),
+                     o_year=Func("year", Col("o_orderdate")),
+                     amount=profit)
+            .group_by("nation", "o_year")
+            .agg(sum_profit=("sum", Col("amount")))
+            .order_by("nation", ("o_year", True)))
+
+
+def q10(db) -> Query:
+    revenue = Col("l_extendedprice") * (1 - Col("l_discount"))
+    return (db.scan("customer")
+            .join(db.scan("orders"), left_on="c_custkey",
+                  right_on="o_custkey")
+            .filter((Col("o_orderdate") >= DateLit("1993-10-01"))
+                    & (Col("o_orderdate") < DateLit("1994-01-01")))
+            .join(db.scan("lineitem"), left_on="o_orderkey",
+                  right_on="l_orderkey")
+            .filter(Col("l_returnflag") == "R")
+            .join(db.scan("nation"), left_on="c_nationkey",
+                  right_on="n_nationkey")
+            .group_by("c_custkey", "c_name", "c_acctbal", "c_phone",
+                      "n_name", "c_address", "c_comment")
+            .agg(revenue=("sum", revenue))
+            .order_by(("revenue", True), limit=20))
+
+
+ALL_QUERIES = {f"q{i}": fn for i, fn in enumerate(
+    [q1, q2, q3, q4, q5, q6, q7, q8, q9, q10], start=1)}
+SQL_QUERIES = {"q1": Q1_SQL, "q3": Q3_SQL, "q6": Q6_SQL}

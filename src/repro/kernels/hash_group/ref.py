@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the hash_group kernel (segment-sum semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hash_group_ref(gid, vals, g_pad):
+    """gid: (1, n) int32; vals: (V, n) f32 -> (g_pad, V) f32.
+
+    Equivalent to jax.ops.segment_sum of vals.T by gid."""
+    seg = jax.ops.segment_sum(vals.T, gid[0], num_segments=g_pad)
+    return seg.astype(jnp.float32)

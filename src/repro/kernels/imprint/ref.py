@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the imprint (zone map) kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def zone_maps_ref(vals, valid, rng, *, nbins: int = 16):
+    """vals/valid: (n_blocks, block_rows) f32; rng: (1,2) = (lo, nbins/(hi-lo)).
+
+    Returns (mins, maxs, bitmaps) matching imprint.zone_maps_pallas."""
+    ok = valid > 0
+    big = jnp.float32(3.4e38)
+    mins = jnp.min(jnp.where(ok, vals, big), axis=1)
+    maxs = jnp.max(jnp.where(ok, vals, -big), axis=1)
+    lo, inv = rng[0, 0], rng[0, 1]
+    binned = jnp.clip((vals - lo) * inv, 0, nbins - 1).astype(jnp.int32)
+    bm = jnp.zeros(vals.shape[0], dtype=jnp.int32)
+    for b in range(nbins):
+        present = jnp.any(ok & (binned == b), axis=1)
+        bm = bm | (present.astype(jnp.int32) << b)
+    return mins, maxs, bm

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused scan_agg kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scan_agg_ref(cols, ranges, *, pairs):
+    """cols: (C, n) f32; ranges: (C, 2).  Returns (P+1,) sums + count —
+    i.e. the already-merged equivalent of the kernel's per-step partials."""
+    lo = ranges[:, 0:1]
+    hi = ranges[:, 1:2]
+    ok = jnp.all((cols >= lo) & (cols <= hi), axis=0)
+    okf = ok.astype(jnp.float32)
+    outs = []
+    for a, b in pairs:
+        v = cols[a] if b < 0 else cols[a] * cols[b]
+        outs.append(jnp.sum(v * okf))
+    outs.append(jnp.sum(okf))
+    return jnp.stack(outs)

@@ -1,0 +1,339 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (calibrated:
+an 8-iteration lax.scan of 512³ matmuls reports exactly one matmul's
+flops).  Every model here is scan-over-layers, so module totals must weight
+each computation by its execution count.  This module parses the compiled
+HLO text into computations, costs each instruction locally, resolves while
+trip counts from the loop-condition constants, and folds nested loops:
+
+  total(comp) = Σ_instr local_cost
+              + Σ while_instr trips x (total(body) + total(cond))
+              + Σ fusion/call refs flops+coll(callee)   (bytes NOT added:
+                a fusion is one kernel — its body ops are not HBM traffic)
+
+Costed quantities (per device — compiled HLO is the partitioned module):
+  * flops       — dot ops: 2 x prod(output dims) x contracted size
+  * coll        — collective bytes by kind (all-reduce 2x: reduce+broadcast)
+  * hbm_bytes   — Σ over materializing instructions of output bytes +
+                  first-operand-group bytes (roofline HBM-traffic proxy)
+
+Validated in tests/test_hlo_analysis.py against cost_analysis() on
+loop-free programs (exact for dots) and against hand counts on scans.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPCODE_RE = re.compile(r"[\s)]([a-z][a-z0-9\-]*)\(")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Core traffic model: ops that materialize HBM traffic on TPU even after
+# fusion (real kernels).  Elementwise/layout glue (convert, broadcast,
+# transpose, reshape, copy, add, multiply, reduce, select, pad, slice)
+# fuses into its producer/consumer on TPU, so it goes into the separately
+# reported *upper bound* only.
+_TRAFFIC_OPS = {
+    "fusion", "scatter", "gather", "dynamic-update-slice", "dynamic-slice",
+    "custom-call", "convolution", "sort", "dot", "select-and-scatter",
+    "reduce-window", "concatenate",
+}
+_TRAFFIC_OPS_UPPER = _TRAFFIC_OPS | {
+    "copy", "convert", "transpose", "reshape", "broadcast", "reduce",
+    "pad", "slice", "rng-bit-generator", "add", "multiply", "subtract",
+    "divide", "select", "exponential", "tanh", "maximum", "minimum",
+}
+
+
+def _parse_shapes(s: str):
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(s: str) -> float:
+    total = 0
+    for dt, dims in _parse_shapes(s):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return float(total)
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_upper: float = 0.0
+    has_slice: bool = False       # computation slices an operand (fusion
+                                  # operands then count as slice-sized)
+    slice_traffic: float = 0.0    # bytes actually touched by ds/dus inside
+    has_math: bool = False        # any arithmetic op (vs pure layout glue)
+    coll: dict = field(default_factory=lambda: dict.fromkeys(COLLECTIVES, 0.0))
+    whiles: list = field(default_factory=list)
+    calls: list = field(default_factory=list)
+    const: int | None = None          # largest integer constant (trip count)
+
+
+@dataclass
+class ModuleCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    hbm_upper: float = 0.0
+    coll: dict = field(default_factory=lambda: dict.fromkeys(COLLECTIVES, 0.0))
+    coll_total: float = 0.0
+    notes: list = field(default_factory=list)
+
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(code: str, op: str) -> list[str]:
+    try:
+        args = code.split(op + "(", 1)[1].split(")")[0]
+    except IndexError:
+        return []
+    return _NAME_RE.findall(args)
+
+
+def _dot_flops(result_part: str, code: str, symbols: dict) -> float:
+    # operands are referenced by name; resolve via the symbol table
+    names = _operand_names(code, "dot")
+    lhs = None
+    if names and names[0] in symbols:
+        shp = _parse_shapes(symbols[names[0]])
+        if shp:
+            lhs = shp[-1][1]
+    out_shapes = _parse_shapes(result_part)
+    out_n = 1
+    if out_shapes:
+        for d in out_shapes[-1][1]:
+            out_n *= d
+    contracted = 1
+    m = _DOT_LHS_CONTRACT_RE.search(code)
+    if m and lhs is not None:
+        for idx in m.group(1).split(","):
+            if idx:
+                contracted *= lhs[int(idx)]
+    return 2.0 * out_n * contracted
+
+
+def parse_hlo(text: str):
+    comps: dict[str, CompCost] = {}
+    symbols: dict[str, str] = {}     # instr name -> result type string
+    entry = None
+    cur: CompCost | None = None
+    for raw in text.splitlines():
+        if not raw:
+            continue
+        if not raw.startswith(" "):
+            # possible computation header: [ENTRY] %name (...) -> ... {
+            s = raw.strip()
+            if s.endswith("{") and ("->" in s) and ("(" in s):
+                name = s.split("(")[0].replace("ENTRY", "").strip()
+                name = name.lstrip("%").rstrip()
+                cur = comps.setdefault(name, CompCost())
+                if s.startswith("ENTRY"):
+                    entry = name
+            elif s == "}":
+                cur = None
+            continue
+        if cur is None or " = " not in raw:
+            continue
+        raw = raw.replace("ROOT %", "%", 1)
+        code = raw.split(", metadata=")[0]
+        lhs_name, rhs = code.split(" = ", 1)
+        lhs_name = lhs_name.strip().lstrip("%").replace("ROOT ", "")
+        if lhs_name.startswith("ROOT"):
+            lhs_name = lhs_name[4:].strip().lstrip("%")
+        # find opcode: first known-ish token before '('
+        op = None
+        for m in _OPCODE_RE.finditer(" " + rhs):
+            tok = m.group(1)
+            if tok in ("tuple", "get-tuple-element", "parameter", "bitcast",
+                       "constant", "compare", "add", "subtract", "multiply",
+                       "divide", "and", "or", "not", "select", "exponential",
+                       "iota", "maximum", "minimum"):
+                op = tok
+                break
+            op = tok
+            break
+        if op is None:
+            if "constant(" in rhs:
+                cm = _CONST_RE.search(rhs)
+                if cm:
+                    v = int(cm.group(1))
+                    cur.const = max(cur.const or 0, v)
+            continue
+        result_part = rhs.split(op + "(")[0]
+        symbols[lhs_name] = result_part
+        if op in ("add", "subtract", "multiply", "divide", "dot", "reduce",
+                  "exponential", "exponential-minus-one", "log", "power",
+                  "rsqrt", "sqrt", "tanh", "maximum", "minimum", "compare",
+                  "select", "convert", "and", "or", "xor", "negate",
+                  "scatter", "iota", "clamp", "sign", "floor", "ceil"):
+            cur.has_math = True
+
+        cm = _CONST_RE.search(rhs)
+        if cm:
+            cur.const = max(cur.const or 0, int(cm.group(1)))
+
+        if op == "while":
+            b = _WHILE_BODY_RE.search(code)
+            c = _WHILE_COND_RE.search(code)
+            if b and c:
+                cur.whiles.append((b.group(1), c.group(1)))
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVES:
+            byt = _shape_bytes(result_part)
+            cur.coll[base] += byt * (2 if base == "all-reduce" else 1)
+            cur.hbm_bytes += byt
+            cur.hbm_upper += byt
+            continue
+        if base == "dot":
+            cur.flops += _dot_flops(result_part, code, symbols)
+            opb = sum(_shape_bytes(symbols.get(n, ""))
+                      for n in _operand_names(code, op))
+            cur.hbm_bytes += _shape_bytes(result_part) + opb
+            cur.hbm_upper += _shape_bytes(result_part) + opb
+            continue
+        if base in _TRAFFIC_OPS_UPPER:
+            # slicing ops touch only the slice, not the whole operand —
+            # counting full operands overcounted scan-xs slicing by the
+            # trip count (measured 1.4 PB/step on falcon-mamba train).
+            names = _operand_names(code, op)
+            if base in ("dynamic-slice", "slice", "gather"):
+                t = 2 * _shape_bytes(result_part)
+            elif base == "dynamic-update-slice":
+                upd = _shape_bytes(symbols.get(names[1], "")) \
+                    if len(names) > 1 else _shape_bytes(result_part)
+                t = 2 * upd
+            elif base == "scatter":
+                upd = _shape_bytes(symbols.get(names[2], "")) \
+                    if len(names) > 2 else _shape_bytes(result_part)
+                t = 2 * upd
+            elif base == "fusion":
+                # a fusion whose body dynamic-slices/updates its parameter
+                # (the scan-xs / scan-residual-stacking patterns) touches
+                # only the slices, not the whole buffers: in-loop fusions
+                # that dus into a stacked residual buffer would otherwise
+                # count the full stack once per trip (measured 610 TB on
+                # falcon-mamba; real traffic is the 8 MB update per trip).
+                res = _shape_bytes(result_part)
+                callee = None
+                cm2 = _CALLS_RE.search(code)
+                if cm2 is not None:
+                    callee = comps.get(cm2.group(1))
+                if callee is not None and callee.has_slice \
+                        and callee.slice_traffic > 0:
+                    t = callee.slice_traffic \
+                        + sum(min(_shape_bytes(symbols.get(n2, "")),
+                                  callee.slice_traffic)
+                              for n2 in names)
+                elif callee is not None and not callee.has_math:
+                    # pure layout glue (copy/transpose/bitcast chains):
+                    # loop-state copies that TPU aliases in place — count
+                    # in the upper bound only.
+                    cur.hbm_upper += res
+                    continue
+                else:
+                    opb = sum(_shape_bytes(symbols.get(n2, ""))
+                              for n2 in names)
+                    t = res + opb
+            else:
+                opb = sum(_shape_bytes(symbols.get(n, "")) for n in names)
+                t = _shape_bytes(result_part) + opb
+            if base in ("dynamic-slice", "slice", "gather",
+                        "dynamic-update-slice", "scatter"):
+                cur.has_slice = True
+                cur.slice_traffic += t
+            cur.hbm_upper += t
+            if base in _TRAFFIC_OPS:
+                cur.hbm_bytes += t
+        for mm in _CALLS_RE.finditer(code):
+            cur.calls.append(mm.group(1))
+        bm = _BRANCH_RE.search(code)
+        if bm:
+            for b in bm.group(1).split(","):
+                cur.calls.append(b.strip().lstrip("%"))
+    return comps, entry
+
+
+def analyze_hlo(text: str) -> ModuleCost:
+    comps, entry = parse_hlo(text)
+    mc = ModuleCost()
+    memo: dict[str, tuple] = {}
+
+    def cond_trips(cond_name: str):
+        c = comps.get(cond_name)
+        if c is None:
+            return None
+        if c.const is not None:
+            return c.const
+        # constant may live in a fused compare computation
+        for child in c.calls:
+            cc = comps.get(child)
+            if cc is not None and cc.const is not None:
+                return cc.const
+        return None
+
+    def total(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return (0.0, 0.0, dict.fromkeys(COLLECTIVES, 0.0))
+        c = comps[name]
+        fl, hb, hu = c.flops, c.hbm_bytes, c.hbm_upper
+        co = dict(c.coll)
+        for child in c.calls:
+            cf, _, _, cc = total(child, stack + (name,))
+            fl += cf                       # flops & collectives of fusion
+            for k in co:                   # bodies count; bytes do not
+                co[k] += cc[k]
+        for body, cond in c.whiles:
+            trips = cond_trips(cond)
+            if trips is None:
+                trips = 1
+                mc.notes.append(f"unresolved trip count for {body}")
+            bf, bh, bu, bc = total(body, stack + (name,))
+            fl += trips * bf
+            hb += trips * bh
+            hu += trips * bu
+            for k in co:
+                co[k] += trips * bc[k]
+        memo[name] = (fl, hb, hu, co)
+        return memo[name]
+
+    if entry:
+        fl, hb, hu, co = total(entry)
+        mc.flops = fl
+        mc.hbm_bytes = hb
+        mc.hbm_upper = hu
+        mc.coll = co
+        mc.coll_total = sum(co.values())
+    return mc

@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON records.
+
+    PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | chips | bytes/dev | fits 16G | "
+             "compile s | status |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["arch"].startswith("engine"):
+            continue
+        mem = r.get("bytes_per_device", 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{mem:.2f} GB | {'yes' if r.get('fits_hbm') else 'NO'} | "
+            f"{r.get('timings', {}).get('compile_s', 0):.0f} | "
+            f"{r['status']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh: str = "single") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | MODEL_FLOPS | useful ratio | one-line lever |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok" \
+                or r["arch"].startswith("engine"):
+            continue
+        lever = _lever(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['bottleneck']} | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {lever} |")
+    return "\n".join(lines)
+
+
+def _lever(r) -> str:
+    b = r["bottleneck"]
+    if b == "collective":
+        ar = r["coll_detail"].get("all-reduce", 0)
+        ag = r["coll_detail"].get("all-gather", 0)
+        if ar > ag:
+            return "reduce-scatter the grad all-reduce / overlap DP"
+        return "cache FSDP gathers across fwd+bwd (or widen TP)"
+    if b == "memory":
+        if r["shape"].startswith("decode"):
+            return "KV-cache layout/quantization; batch more requests"
+        if "mamba" in r["arch"] or "zamba" in r["arch"]:
+            return "larger SSM chunk / fused scan kernel"
+        return "fuse attention tiles (flash) / chunked loss"
+    return "increase per-device batch; reduce padding waste"
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(out_dir)
+    ok = [r for r in recs if r["status"] == "ok"]
+    print(f"## Dry-run summary: {len(ok)}/{len(recs)} cells ok\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Roofline (multi-pod, 512 chips)\n")
+    print(roofline_table(recs, "multi"))
+
+
+if __name__ == "__main__":
+    main()

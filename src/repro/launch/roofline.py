@@ -1,0 +1,151 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs            / (chips x 197 TFLOP/s bf16)
+    memory     = HLO_bytes_accessed   / (chips x 819 GB/s HBM)
+    collective = collective_bytes     / (chips x 50 GB/s/link ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  collective_bytes is
+parsed out of the compiled HLO: we sum the *result-shape* bytes of every
+all-gather / all-to-all / collective-permute, operand bytes of every
+reduce-scatter, and 2x bytes for all-reduce (reduce + broadcast phases of a
+ring).  This counts bytes crossing the ICI fabric once per ring traversal —
+a standard first-order model (actual rings move (n-1)/n of it).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum collective bytes by op kind from compiled HLO text."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        b = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            b *= 2                      # reduce + broadcast phases
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float              # 6·N·D (active-N for MoE)
+    bytes_per_device: float         # peak memory from memory_analysis
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0       # MODEL_FLOPS / HLO_FLOPs
+    coll_detail: Optional[dict] = None
+
+    def finalize(self):
+        # cost_analysis() on a partitioned module reports PER-DEVICE flops
+        # and bytes (calibrated empirically: a 4-way-sharded matmul reports
+        # global/4), so each term divides by a single chip's roof — which
+        # equals the spec's global/(chips x roof).
+        self.compute_s = self.hlo_flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        global_flops = self.hlo_flops * self.chips
+        self.useful_ratio = (self.model_flops / global_flops
+                             if global_flops else 0.0)
+        return self
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+def model_flops_for_cell(cfg, cell) -> float:
+    """6·N·D for training; 2·N·D per generated/processed token at
+    inference (forward only)."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    tokens = cell.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def analyze(arch: str, cell, mesh_name: str, chips: int, cfg,
+            cost: dict, mem_bytes: float, hlo_text: str) -> Roofline:
+    """Costs come from the trip-count-aware HLO model (hlo_analysis.py);
+    raw cost_analysis() numbers are recorded alongside for reference (they
+    undercount scan bodies — calibrated in tests/test_hlo_analysis.py)."""
+    from .hlo_analysis import analyze_hlo
+    mc = analyze_hlo(hlo_text)
+    coll = dict(mc.coll)
+    coll["total"] = mc.coll_total
+    r = Roofline(
+        arch=arch, shape=cell.name, mesh=mesh_name, chips=chips,
+        hlo_flops=mc.flops,
+        hlo_bytes=mc.hbm_bytes,
+        coll_bytes=mc.coll_total,
+        model_flops=model_flops_for_cell(cfg, cell),
+        bytes_per_device=mem_bytes,
+        coll_detail={**coll,
+                     "hbm_bytes_upper_unfused": mc.hbm_upper,
+                     "xla_cost_flops_per_dev_scanbody_once":
+                         float(cost.get("flops", 0.0)),
+                     "xla_cost_bytes_per_dev_scanbody_once":
+                         float(cost.get("bytes accessed", 0.0)),
+                     "notes": mc.notes[:5]},
+    )
+    return r.finalize()

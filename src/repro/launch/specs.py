@@ -1,0 +1,200 @@
+"""Abstract inputs (ShapeDtypeStruct) + shardings per (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins for every
+model input — no device allocation; the same pattern serves both the
+multi-pod dry-run and the real launcher (which replaces the structs with
+device arrays of identical shape/sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ShapeCell, get_config
+from ..models.config import ModelConfig
+from ..models.transformer import (decode_state_spec, init_decode_state,
+                                  init_model, model_spec)
+from ..train.optimizer import init_opt_state, opt_state_spec
+from .mesh import batch_axes
+
+
+def _batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Shard batch over (pod, data) when divisible; else replicate (e.g.
+    long_500k batch=1, which shards the sequence/state instead)."""
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if global_batch % n == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P()
+
+
+def _src_len(cell: ShapeCell) -> int:
+    # encoder memory length for enc-dec cells (audio frontend stub)
+    return min(cell.seq_len, 4096)
+
+
+def abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the data batch."""
+    B, S = cell.global_batch, cell.seq_len
+    bspec = _batch_spec(mesh, B)
+    embed_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cell.kind == "train":
+        shapes, specs = {}, {}
+        if cfg.embeds_input:
+            shapes["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                    embed_dt)
+            specs["embeds"] = P(*bspec, None, None)
+        else:
+            shapes["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["tokens"] = P(*bspec, None)
+        if cfg.family == "encdec":
+            shapes["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, _src_len(cell), cfg.d_model), embed_dt)
+            specs["src_embeds"] = P(*bspec, None, None)
+            shapes["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["tokens"] = P(*bspec, None)
+        shapes["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["labels"] = P(*bspec, None)
+        return shapes, specs
+    if cell.kind == "prefill":
+        shapes, specs = {}, {}
+        if cfg.embeds_input:
+            shapes["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                    embed_dt)
+            specs["embeds"] = P(*bspec, None, None)
+        else:
+            shapes["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["tokens"] = P(*bspec, None)
+        if cfg.family == "encdec":
+            shapes["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, _src_len(cell), cfg.d_model), embed_dt)
+            specs["src_embeds"] = P(*bspec, None, None)
+            shapes["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["tokens"] = P(*bspec, None)
+        return shapes, specs
+    # decode: one token per sequence
+    return ({"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)},
+            {"tokens": P(*bspec, None)})
+
+
+def param_structs(cfg: ModelConfig):
+    """Abstract params via eval_shape — no allocation."""
+    return jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def decode_state_structs(cfg: ModelConfig, cell: ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, B, S, mem_len=_src_len(cell)))
+
+
+def _shard_free_dim(spec: P, shape: tuple, axis: str, axis_size: int,
+                    min_elems: int = 1 << 16) -> P:
+    """Add ``axis`` on the last unsharded, divisible dim of a leaf (the
+    ZeRO-1/FSDP transform).  Leaves smaller than min_elems stay put."""
+    n = 1
+    for d in shape:
+        n *= d
+    if n < min_elems:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    flat = [a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+    if axis in flat:
+        return spec                              # already sharded over axis
+    # Prefer the second-to-last dim: in every matmul layout here that is
+    # the *contracted* dim, so GSPMD resolves the sharded einsum by
+    # all-gathering the (small) weight — true FSDP.  Sharding an output
+    # dim instead conflicts with the batch sharding of the activations and
+    # GSPMD resolves it by all-gathering the *tokens* (measured: dbrx
+    # collective term 32s -> ~2s; EXPERIMENTS.md §Perf).
+    ndim = len(shape)
+    order = [ndim - 2, ndim - 1] + list(range(ndim - 3, 0, -1))
+    for i in order:
+        if i <= 0 or i >= ndim:
+            continue
+        if entries[i] is None and shape[i] % axis_size == 0:
+            entries[i] = axis
+            return P(*entries)
+    return spec
+
+
+def _apply_zero(spec_tree, struct_tree, mesh: Mesh) -> dict:
+    size = mesh.shape.get("data", 1)
+    return jax.tree.map(
+        lambda s, t: _shard_free_dim(s, t.shape, "data", size),
+        spec_tree, struct_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_wanted(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """FSDP the params when bf16 weights per device would exceed ~3 GB
+    under pure TP (the dbrx-132b / llava-34b regime)."""
+    per_dev = 2 * cfg.param_count() / mesh.shape.get("model", 1)
+    return per_dev > 3e9
+
+
+def cell_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                   with_opt: bool = True, fsdp: str = "auto"):
+    """All shardings for one cell: returns dict with
+    params/opt_state/batch/state NamedSharding trees + struct trees.
+
+    Distributed-optimizer policy: optimizer moments always get the ZeRO-1
+    transform (sharded over ``data`` on a free dim); params additionally get
+    FSDP (same transform) when the arch is too big for pure TP."""
+    def fit(s: P) -> P:
+        """Drop axes the mesh doesn't have (single-pod mesh has no 'pod')."""
+        names = set(mesh.axis_names)
+        entries = []
+        for e in s:
+            if isinstance(e, tuple):
+                kept = tuple(a for a in e if a in names)
+                entries.append(kept if len(kept) > 1
+                               else (kept[0] if kept else None))
+            elif e is not None and e not in names:
+                entries.append(None)
+            else:
+                entries.append(e)
+        return P(*entries)
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, fit(s)), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    pspec = model_spec(cfg)
+    pstructs = param_structs(cfg)
+    use_fsdp = fsdp_wanted(cfg, mesh) if fsdp == "auto" else (fsdp == "on")
+    if use_fsdp:
+        pspec = _apply_zero(pspec, pstructs, mesh)
+    out = {
+        "params_structs": pstructs,
+        "params_shardings": ns(pspec),
+        "fsdp": use_fsdp,
+    }
+    bshapes, bspecs = batch_specs(cfg, cell, mesh)
+    out["batch_structs"] = bshapes
+    out["batch_shardings"] = ns(bspecs)
+    if cell.kind == "train" and with_opt:
+        out["opt_structs"] = jax.eval_shape(init_opt_state, pstructs)
+        ospec = opt_state_spec(pspec)
+        ospec["m"] = _apply_zero(ospec["m"], pstructs, mesh)
+        ospec["v"] = _apply_zero(ospec["v"], pstructs, mesh)
+        out["opt_shardings"] = ns(ospec)
+    if cell.kind in ("decode", "prefill"):
+        seq_shard = _batch_spec(mesh, cell.global_batch) == P()
+        sspec = decode_state_spec(cfg, seq_shard=seq_shard)
+        out["state_structs"] = decode_state_structs(cfg, cell)
+        out["state_shardings"] = ns(sspec)
+    return out

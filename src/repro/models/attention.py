@@ -1,0 +1,289 @@
+"""Grouped-query attention: blockwise (flash-style) training path + cached
+decode path, with sliding-window support.
+
+Layout convention (the universal GQA-TP scheme, DESIGN.md §7): q is kept as
+(B, T, K, G, h) — K = kv heads, G = q-heads-per-kv — and k/v as (B, S, K, h).
+Sharding rule: the K axis is sharded over ``model``; each device holds a kv
+head *and all of its q group*, so scores/out einsums need no cross-device
+attention traffic.  Works for any K (GSPMD pads non-divisible K).  The
+alternative "replicate_kv" scheme (kv replicated, q heads sharded) is the
+§Perf hillclimb comparator for decode shapes.
+
+The training path is a doubly-blockwise online-softmax attention (q tiles ×
+kv tiles under lax.scan) so long-context prefill never materializes the
+(T, S) score matrix.  Causal tiles strictly above the diagonal are masked,
+not skipped, in the baseline; tile *skipping* is a recorded §Perf change.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype, stack: int = 0, prefix_dims=()):
+    d, K, G, h = cfg.d_model, cfg.n_kv_eff, cfg.q_per_kv, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sh = (lambda *s: ((stack,) + s) if stack else s)
+    p = {
+        "wq": dense_init(ks[0], sh(d, K, G * h), dtype),
+        "wk": dense_init(ks[1], sh(d, K, h), dtype),
+        "wv": dense_init(ks[2], sh(d, K, h), dtype),
+        "wo": dense_init(ks[3], sh(K, G * h, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(sh(K, G * h), dtype)
+        p["bk"] = jnp.zeros(sh(K, h), dtype)
+        p["bv"] = jnp.zeros(sh(K, h), dtype)
+    return p
+
+
+def attn_spec(cfg, stack: bool = False):
+    l = (None,) if stack else ()
+    p = {
+        "wq": P(*l, None, "model", None),
+        "wk": P(*l, None, "model", None),
+        "wv": P(*l, None, "model", None),
+        "wo": P(*l, "model", None, None),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(*l, "model", None)
+        p["bk"] = P(*l, "model", None)
+        p["bv"] = P(*l, "model", None)
+    return p
+
+
+def _project_qkv(p, x, xkv, cfg):
+    """x: (B, T, d) -> q (B,T,K,G,h), k/v (B,S,K,h)."""
+    K, G, h = cfg.n_kv_eff, cfg.q_per_kv, cfg.head_dim
+    q = jnp.einsum("btd,dkf->btkf", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", xkv, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", xkv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(q.shape[0], q.shape[1], K, G, h)
+    return q, k, v
+
+
+def _out_proj(p, o, cfg):
+    """o: (B, T, K, G, h) -> (B, T, d)."""
+    B, T, K, G, h = o.shape
+    return jnp.einsum("btkf,kfd->btd", o.reshape(B, T, K, G * h), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention core
+# ---------------------------------------------------------------------------
+
+
+def _tile_mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """(qc, kc) boolean validity mask."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: Optional[int],
+                        q_chunk: int, kv_chunk: int,
+                        q_offset=0, kv_valid: Optional[int] = None,
+                        skip_tiles: bool = False):
+    """Online-softmax attention.
+
+    q: (B, T, K, G, h); k, v: (B, S, K, h).  q_offset: absolute position of
+    q[0] (for decode-with-cache; may be traced).  kv_valid: number of valid
+    kv entries (rest masked; may be traced).  Returns (B, T, K, G, h).
+
+    skip_tiles: iterate only kv tiles at-or-below the diagonal per q tile
+    (legal only for causal + no cache offset); §Perf change, default off.
+    """
+    B, T, K, G, h = q.shape
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(h)
+    qc = min(q_chunk, T)
+    kc = min(kv_chunk, S)
+    nq = -(-T // qc)
+    nk = -(-S // kc)
+    Tp, Sp = nq * qc, nk * kc
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kv_lim = S if kv_valid is None else kv_valid
+
+    qs = q.reshape(B, nq, qc, K, G, h).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kc, K, h).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, K, h).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        qpos = q_offset + iq * qc + jnp.arange(qc)
+
+        def kv_step(carry, kj_and_idx):
+            m_prev, l_prev, acc = carry
+            (kj, vj), jk = kj_and_idx
+            kpos = jk * kc + jnp.arange(kc)
+            # f32 math via explicit casts (not preferred_element_type):
+            # the cast's VJP returns bf16 cotangents, so the TP dgrad
+            # all-reduces upstream move half the bytes (EXPERIMENTS §Perf).
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            mask = _tile_mask(qpos, kpos, causal, window)
+            mask &= (kpos < kv_lim)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, K, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qc, h), jnp.float32)
+        # flash-style backward: recompute the (qc, kc) probability tile in
+        # the bwd pass instead of saving it — without this, scan-AD stores
+        # the entire tiled (T, S) score matrix (measured 10 GB/device on
+        # dbrx train_4k; EXPERIMENTS.md §Perf).
+        kv_step = jax.checkpoint(kv_step)
+        if skip_tiles and causal and kc == qc:
+            # iterate only tiles j <= i via dynamic slice bound: emulate by
+            # masking the scan inputs with a where on index (cheap skip):
+            def kv_step_skip(carry, kj_and_idx):
+                (_, _), jk = kj_and_idx
+                new_carry, _ = kv_step(carry, kj_and_idx)
+                keep = jk <= iq
+                carry = jax.tree.map(
+                    lambda n, o: jnp.where(keep, n, o), new_carry, carry)
+                return carry, None
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step_skip, (m0, l0, a0), ((ks, vs), jnp.arange(nk)))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), ((ks, vs), jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)   # (B, qc, K, G, h)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tp, K, G, h)
+    return out[:, :T].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public blocks
+# ---------------------------------------------------------------------------
+
+
+def attention_block(p, x, cfg, positions, *, causal=True, xkv=None,
+                    kv_positions=None, use_rope=True, skip_tiles=False):
+    """Full attention (training / prefill).  xkv!=None => cross-attention."""
+    xkv = x if xkv is None else xkv
+    q, k, v = _project_qkv(p, x, xkv, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kp = positions if kv_positions is None else kv_positions
+        k = apply_rope(k, kp, cfg.rope_theta)
+    o = blockwise_attention(
+        q, k, v, causal=causal, window=cfg.sliding_window,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        skip_tiles=skip_tiles)
+    return _out_proj(p, o, cfg)
+
+
+def init_kv_cache(cfg, batch, max_len, dtype):
+    """Ring cache; sliding-window archs only keep ``window`` slots."""
+    slots = max_len if cfg.sliding_window is None \
+        else min(max_len, cfg.sliding_window)
+    K, h = cfg.n_kv_eff, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, slots, K, h), dtype),
+        "v": jnp.zeros((batch, slots, K, h), dtype),
+        "idx": jnp.zeros((), jnp.int32),      # absolute tokens written
+    }
+
+
+def kv_cache_spec(seq_shard: bool = False):
+    s = P(("pod", "data") if not seq_shard else None,
+          "data" if seq_shard else None, "model", None)
+    return {"k": s, "v": s, "idx": P()}
+
+
+def decode_attention_block(p, x, cfg, cache, *, xkv_cache_only=False):
+    """One-token decode: x (B, 1, d); returns (out, new_cache)."""
+    B = x.shape[0]
+    slots = cache["k"].shape[1]
+    pos = cache["idx"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    slot = jnp.mod(pos, slots)
+    zero = jnp.zeros((), slot.dtype)       # dtype-explicit under x64 too
+    ck = jax.lax.dynamic_update_slice(cache["k"], k,
+                                      (zero, slot, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                      (zero, slot, zero, zero))
+    j = jnp.arange(slots)
+    # absolute position held by ring slot j after writing at `slot`:
+    # j == slot -> pos; j > slot wraps to the previous revolution.
+    abs_pos = pos - slot + j - slots * (j > slot)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, ck,
+                   preferred_element_type=jnp.float32) \
+        / math.sqrt(cfg.head_dim)
+    ok = valid
+    if cfg.sliding_window is not None:
+        ok = ok & ((pos - abs_pos) < cfg.sliding_window)
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(cv.dtype), cv)
+    out = _out_proj(p, o, cfg)
+    return out, {"k": ck, "v": cv, "idx": pos + 1}
+
+
+def prefill_attention_block(p, x, cfg, positions, cache):
+    """Prefill S tokens and fill the cache (assumes S <= cache slots or
+    sliding-window archs where only the tail matters)."""
+    xkv = x
+    q, k, v = _project_qkv(p, x, xkv, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = blockwise_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    out = _out_proj(p, o, cfg)
+    S = x.shape[1]
+    slots = cache["k"].shape[1]
+    if slots >= S:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, 0, 0, 0))
+    else:   # sliding window: keep the tail, at ring positions (abs % slots)
+        ck = jax.lax.dynamic_slice_in_dim(k, S - slots, slots, axis=1)
+        cv = jax.lax.dynamic_slice_in_dim(v, S - slots, slots, axis=1)
+        shift = (S - slots) % slots
+        ck = jnp.roll(ck, shift, axis=1)
+        cv = jnp.roll(cv, shift, axis=1)
+    return out, {"k": ck, "v": cv,
+                 "idx": jnp.asarray(S, jnp.int32)}

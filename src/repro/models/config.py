@@ -1,0 +1,167 @@
+"""Model configuration covering all assigned architecture families."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | ssm | moe | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None     # SWA width (h2o-danube)
+    act: str = "swiglu"                      # swiglu | gelu
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_group_tokens: int = 4096          # dispatch group size (scan)
+    # --- SSM ---------------------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_version: int = 1                     # 1 = Mamba-1, 2 = Mamba-2/SSD
+    ssm_head_dim: int = 64                   # Mamba-2 head dim
+    ssm_chunk: int = 64                      # chunked-scan length
+    # --- hybrid (zamba2): shared attn block every k SSM layers -------------
+    attn_every: int = 0
+    # --- enc-dec (seamless) --------------------------------------------------
+    n_enc_layers: int = 0
+    cross_attn: bool = False
+    # --- frontend stubs -------------------------------------------------------
+    embeds_input: bool = False               # vlm/audio: precomputed embeds
+    # --- performance knobs (hillclimbed in §Perf) ----------------------------
+    attn_q_chunk: int = 1024                 # blockwise attention q tile
+    attn_kv_chunk: int = 2048                # blockwise attention kv tile
+    remat: bool = True
+    # sharding scheme for GQA TP: "kv" (shard kv-head dim; universal) or
+    # "replicate_kv" (replicate kv, shard q heads; needs n_heads % tp == 0)
+    attn_shard: str = "kv"
+    # where MoE tokens are dispatched: "ep" (experts over model axis)
+    moe_shard: str = "ep"
+    # TP divisibility padding: sharded head/vocab dims are rounded up to a
+    # multiple of tp_pad (pjit requires input dims divisible by the mesh
+    # axis).  1 = exact config (tests); launch sets it to the model-axis
+    # size.  Padding waste is visible in §Roofline's useful_ratio and is a
+    # §Perf hillclimb target.
+    tp_pad: int = 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def n_kv_eff(self) -> int:
+        k = self.n_kv_heads
+        return -(-k // self.tp_pad) * self.tp_pad
+
+    @property
+    def n_heads_eff(self) -> int:
+        return self.n_kv_eff * self.q_per_kv
+
+    @property
+    def vocab_eff(self) -> int:
+        return -(-self.vocab // self.tp_pad) * self.tp_pad
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, -(-self.d_model // 16))
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        return replace(
+            self,
+            n_layers=2,
+            n_enc_layers=2 if self.n_enc_layers else 0,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            d_head=16,
+            d_ff=128,
+            vocab=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            sliding_window=16 if self.sliding_window else None,
+            attn_every=2 if self.attn_every else 0,
+            attn_q_chunk=16,
+            attn_kv_chunk=16,
+            router_group_tokens=64,
+            dtype="float32",
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline bookkeeping)."""
+        d, ff, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        h = self.head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        attn = d * nq * h + 2 * d * nkv * h + nq * h * d
+        if self.qkv_bias:
+            attn += (nq + 2 * nkv) * h
+        mlp_dense = 3 * d * ff if self.act == "swiglu" else 2 * d * ff
+        total = 0
+        if self.family == "ssm" or (self.family == "hybrid"):
+            di, N = self.d_inner, self.ssm_state
+            if self.ssm_version == 1:
+                ssm = (d * 2 * di + di * self.ssm_conv
+                       + di * (self.dt_rank + 2 * N) + self.dt_rank * di
+                       + di * N + di + di * d)
+            else:
+                H = self.ssm_heads
+                ssm = (d * 2 * di + di * self.ssm_conv
+                       + d * 2 * N + d * H + 2 * H + di + di * d)
+            if self.family == "ssm":
+                total += L * ssm
+            else:
+                total += L * ssm
+                n_shared = L // max(self.attn_every, 1)
+                total += attn + mlp_dense      # one shared block
+        elif self.family == "moe":
+            E = self.n_experts
+            total += L * (attn + d * E + E * 3 * d * ff)
+        elif self.family == "encdec":
+            enc = self.n_enc_layers * (attn + mlp_dense)
+            dec = L * (2 * attn + mlp_dense)
+            total += enc + dec
+        else:
+            total += L * (attn + mlp_dense)
+        total += V * d * (1 if self.tie_embeddings else 2)
+        total += (L + 2) * d                    # norms (approx)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of E experts)."""
+        if self.family != "moe" or not self.n_experts:
+            return self.param_count()
+        d, ff, L = self.d_model, self.d_ff, self.n_layers
+        full = self.param_count()
+        all_experts = L * self.n_experts * 3 * d * ff
+        active = L * self.top_k * 3 * d * ff
+        return full - all_experts + active

@@ -1,0 +1,209 @@
+"""Shared neural building blocks (pure JAX; dtype-explicit everywhere).
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+function has a twin ``*_spec`` producing a PartitionSpec pytree of the same
+structure, so the launcher can build NamedShardings without touching real
+arrays (dry-run uses jax.eval_shape over init).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+_HINT_MESH = None
+
+
+def set_hint_mesh(mesh):
+    """Register the mesh used by activation sharding hints.  Called by the
+    launcher/dry-run before tracing; None disables hints (unit tests)."""
+    global _HINT_MESH
+    _HINT_MESH = mesh
+
+
+def _ambient_mesh():
+    return _HINT_MESH
+
+
+def act_hint(x):
+    """Activation sharding constraint at block boundaries: batch over
+    (pod, data), d_model over model.  This is what keeps GSPMD from
+    resolving FSDP-sharded-weight einsums by all-gathering the *batch*
+    (measured: dbrx-132b train went 375 GB/dev -> fits; EXPERIMENTS.md
+    §Perf).  No-op outside a mesh context (unit tests, single host)."""
+    mesh = _ambient_mesh()
+    if mesh is None or x.ndim < 2:
+        return x
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not batch_axes:
+        return x
+    n = 1
+    for a in batch_axes:
+        n *= mesh.shape[a]
+    entries = [None] * x.ndim
+    if x.shape[0] % n == 0 and x.shape[0] > 0:
+        entries[0] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    if "model" in mesh.axis_names and x.ndim >= 3 \
+            and x.shape[-1] % mesh.shape["model"] == 0:
+        entries[-1] = "model"
+    if all(e is None for e in entries):
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, ..., h) with time axis at -3 or given by positions shape.
+
+    Convention here: x is (B, T, K, h) or (B, T, K, G, h); positions (B, T).
+    """
+    h = x.shape[-1]
+    half = h // 2
+    freqs = rope_frequencies(h, theta)                       # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (B, T, half)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    extra = x.ndim - 3                                       # head axes count
+    for _ in range(extra):
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, act, dtype, stack: int = 0):
+    ks = jax.random.split(key, 3)
+    sh = (lambda *s: ((stack,) + s) if stack else s)
+    p = {"w1": dense_init(ks[0], sh(d_model, d_ff), dtype)}
+    if act == "swiglu":
+        p["w3"] = dense_init(ks[1], sh(d_model, d_ff), dtype)
+    p["w2"] = dense_init(ks[2], sh(d_ff, d_model), dtype)
+    return p
+
+
+def mlp_spec(act, stack: bool = False):
+    l = (None,) if stack else ()
+    p = {"w1": P(*l, None, "model"), "w2": P(*l, "model", None)}
+    if act == "swiglu":
+        p["w3"] = P(*l, None, "model")
+    return p
+
+
+def mlp_apply(p, x, act: str):
+    h = jnp.einsum("btd,df->btf", x, p["w1"])
+    if act == "swiglu":
+        g = jnp.einsum("btd,df->btf", x, p["w3"])
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("btf,fd->btd", h, p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return {"w": dense_init(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed_spec():
+    return {"w": P("model", None)}
+
+
+def embed_apply(p, ids):
+    return jnp.take(p["w"], ids, axis=0)
+
+
+def unembed_init(key, d_model, vocab, dtype):
+    return {"w": dense_init(key, (d_model, vocab), dtype)}
+
+
+def unembed_spec():
+    return {"w": P(None, "model")}
+
+
+def unembed_apply(p, x):
+    return jnp.einsum("btd,dv->btv", x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def next_token_loss(logits, labels, mask=None):
+    """Cross-entropy over (possibly vocab-sharded) logits.
+
+    logits: (B, T, V); labels: (B, T) int32; mask: (B, T) {0,1}."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

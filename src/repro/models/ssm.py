@@ -1,0 +1,297 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD), both in
+chunked form — lax.scan over time chunks with an inter-chunk recurrent
+state, so no (T, d_inner, N) tensor is ever materialized and decode is the
+chunk==1 special case of the same recurrence.
+
+Shapes follow the papers:
+  Mamba-1 (arXiv:2312.00752): per-channel state, h_t = a_t h_{t-1} + b_t,
+      a_t = exp(Δ_t A), b_t = Δ_t u_t B_t;  y_t = C_t · h_t + D u_t.
+  Mamba-2 / SSD (arXiv:2405.21060): per-head scalar decay; within-chunk
+      attention-like quadratic form + inter-chunk state passing.
+
+Sharding: d_inner (Mamba-1 channels / Mamba-2 heads) over ``model``; the
+recurrent state is (B, d_inner, N) resp. (B, H, P, N), sharded the same way
+— recurrence is purely local to the shard (no collectives inside the scan).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_init(key, cfg, dtype, stack: int = 0):
+    d, di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    sh = (lambda *s: ((stack,) + s) if stack else s)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    if stack:
+        A = jnp.tile(A[None], (stack, 1, 1))
+    return {
+        "in_proj": dense_init(ks[0], sh(d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], sh(di, cfg.ssm_conv), dtype, scale=0.5),
+        "conv_b": jnp.zeros(sh(di), dtype),
+        "x_proj": dense_init(ks[2], sh(di, R + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], sh(R, di), dtype),
+        "dt_bias": jnp.zeros(sh(di), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones(sh(di), jnp.float32),
+        "out_proj": dense_init(ks[4], sh(di, d), dtype),
+    }
+
+
+def mamba1_spec(stack: bool = False):
+    l = (None,) if stack else ()
+    return {
+        "in_proj": P(*l, None, "model"),
+        "conv_w": P(*l, "model", None),
+        "conv_b": P(*l, "model"),
+        "x_proj": P(*l, "model", None),
+        "dt_proj": P(*l, None, "model"),
+        "dt_bias": P(*l, "model"),
+        "A_log": P(*l, "model", None),
+        "D": P(*l, "model"),
+        "out_proj": P(*l, "model", None),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """u: (B, T, di); w: (di, k) depthwise causal conv.
+    state: (B, k-1, di) carry-in; returns (out, new_state)."""
+    B, T, di = u.shape
+    k = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, k - 1, di), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)          # (B, T+k-1, di)
+    out = jnp.zeros((B, T, di), jnp.float32)
+    for i in range(k):                                  # static unroll (k=4)
+        out = out + ext[:, i:i + T].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)[None, None]
+    out = out + b.astype(jnp.float32)
+    new_state = ext[:, T:]
+    return out.astype(u.dtype), new_state
+
+
+def mamba1_scan(u, dt, Bt, Ct, A, D, h0, chunk: int):
+    """Chunked selective scan.
+    u, dt: (B, T, di); Bt, Ct: (B, T, N); A: (di, N); h0: (B, di, N).
+    Returns (y (B, T, di) f32, hT)."""
+    B, T, di = u.shape
+    N = Bt.shape[-1]
+    c = min(chunk, T)
+    nc = -(-T // c)
+    pad = nc * c - T
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, pad), (0, 0)))
+    uc = u.reshape(B, nc, c, di).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nc, c, di).transpose(1, 0, 2, 3)
+    Bc = Bt.reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+    Cc = Ct.reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        ui, dti, Bi, Ci = inp                          # (B, c, ·)
+        # per-step decay and input: a (B,c,di,N), b (B,c,di,N)
+        dA = dti[..., None] * A[None, None]            # (B,c,di,N), <= 0
+        a = jnp.exp(dA)                                # in (0, 1]: stable
+        b = (dti * ui)[..., None] * Bi[:, :, None, :]  # (B,c,di,N)
+
+        # within-chunk linear recurrence h_t = a_t h_{t-1} + b_t via a
+        # numerically-stable associative scan on (a, b) pairs (all factors
+        # are decays <= 1, so no overflow — unlike the cumsum formulation).
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+        hs = bb + aa * h[:, None]                      # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Ci)
+        hT = hs[:, -1]
+        return hT, y
+
+    # remat the chunk: without this, scan-AD saves the (B, c, di, N)
+    # associative-scan intermediates for every chunk — ~20 GB/device and
+    # the dominant HBM term on falcon-mamba train (EXPERIMENTS.md §Perf).
+    hT, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                          (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * c, di)[:, :T]
+    y = y + u[:, :T].astype(jnp.float32) * D[None, None]
+    return y, hT
+
+
+def mamba1_block(p, x, cfg, state=None):
+    """x: (B, T, d) -> (B, T, d).  state: None (train) or dict with
+    'conv' (B, k-1, di) and 'ssm' (B, di, N) for cached decode."""
+    B, T, d = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    proj = jnp.einsum("btd,de->bte", u, p["x_proj"])
+    dt_r, Bt, Ct = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((B, di, N), jnp.float32) if state is None else state["ssm"]
+    y, hT = mamba1_scan(u, dt, Bt.astype(jnp.float32),
+                        Ct.astype(jnp.float32), A, p["D"], h0,
+                        cfg.ssm_chunk if T > 1 else 1)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    new_state = {"conv": new_conv, "ssm": hT}
+    return out, new_state
+
+
+def mamba1_state_init(cfg, batch, dtype):
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state),
+                             jnp.float32)}
+
+
+def mamba1_state_spec():
+    return {"conv": P(("pod", "data"), None, "model"),
+            "ssm": P(("pod", "data"), "model", None)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg, dtype, stack: int = 0):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    sh = (lambda *s: ((stack,) + s) if stack else s)
+    return {
+        "in_proj": dense_init(ks[0], sh(d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], sh(di, cfg.ssm_conv), dtype, scale=0.5),
+        "conv_b": jnp.zeros(sh(di), dtype),
+        "bc_proj": dense_init(ks[2], sh(d, 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], sh(d, H), dtype),
+        "dt_bias": jnp.zeros(sh(H), jnp.float32),
+        "A_log": jnp.zeros(sh(H), jnp.float32),
+        "D": jnp.ones(sh(H), jnp.float32),
+        "out_proj": dense_init(ks[4], sh(di, d), dtype),
+    }
+
+
+def mamba2_spec(stack: bool = False):
+    l = (None,) if stack else ()
+    return {
+        "in_proj": P(*l, None, "model"),
+        "conv_w": P(*l, "model", None),
+        "conv_b": P(*l, "model"),
+        "bc_proj": P(*l, None, None),
+        "dt_proj": P(*l, None, "model"),
+        "dt_bias": P(*l, "model"),
+        "A_log": P(*l, "model"),
+        "D": P(*l, "model"),
+        "out_proj": P(*l, "model", None),
+    }
+
+
+def _segsum(x):
+    """log-space cumulative decay matrix: L[i, j] = sum_{j<k<=i} x_k
+    (lower-triangular), -inf above diagonal.  x: (..., c)."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_ssd(xh, dt, A, Bt, Ct, h0, chunk: int):
+    """SSD chunked recurrence.
+    xh: (B, T, H, Pd); dt: (B, T, H); A: (H,) negative;
+    Bt, Ct: (B, T, N); h0: (B, H, Pd, N).
+    Returns (y (B,T,H,Pd) f32, hT)."""
+    B, T, H, Pd = xh.shape
+    N = Bt.shape[-1]
+    c = min(chunk, T)
+    nc = -(-T // c)
+    pad = nc * c - T
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, pad), (0, 0)))
+    xc = xh.reshape(B, nc, c, H, Pd).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nc, c, H).transpose(1, 0, 2, 3)
+    Bc = Bt.reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+    Cc = Ct.reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        xi, dti, Bi, Ci = inp
+        dA = dti * A[None, None]                       # (B,c,H)  negative
+        # intra-chunk: Y_intra = (C_i B_j^T ⊙ L_ij ⊙ dt_j) x_j
+        L = jnp.exp(_segsum(dA.transpose(0, 2, 1)))    # (B,H,c,c)
+        G = jnp.einsum("bin,bjn->bij", Ci, Bi)         # (B,c,c)
+        M = G[:, None] * L * dti.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", M, xi)
+        # inter-chunk: contribution of h (state at chunk start)
+        decay_in = jnp.exp(jnp.cumsum(dA, axis=1))     # (B,c,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Ci, h, decay_in)
+        # state update: hT = decay_total * h + sum_j decay_{j->end} dt_j B_j x_j
+        total = jnp.exp(jnp.sum(dA, axis=1))           # (B,H)
+        decay_out = jnp.exp(jnp.sum(dA, axis=1)[:, None]
+                            - jnp.cumsum(dA, axis=1))  # (B,c,H)
+        dBx = jnp.einsum("bjh,bjn,bjhp->bhpn", dti * decay_out, Bi, xi)
+        hT = total[:, :, None, None] * h + dBx
+        return hT, y_intra + y_inter
+
+    hT, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                          (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * c, H, Pd)[:, :T]
+    return y, hT
+
+
+def mamba2_block(p, x, cfg, state=None):
+    B, T, d = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    bc = jnp.einsum("btd,de->bte", x, p["bc_proj"]).astype(jnp.float32)
+    Bt, Ct = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    xh = u.reshape(B, T, H, Pd)
+    h0 = jnp.zeros((B, H, Pd, N), jnp.float32) if state is None \
+        else state["ssm"]
+    y, hT = mamba2_ssd(xh.astype(jnp.float32), dt, A, Bt, Ct, h0,
+                       cfg.ssm_chunk if T > 1 else 1)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, T, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": hT}
+
+
+def mamba2_state_init(cfg, batch, dtype):
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32)}
+
+
+def mamba2_state_spec():
+    return {"conv": P(("pod", "data"), None, "model"),
+            "ssm": P(("pod", "data"), "model", None, None)}

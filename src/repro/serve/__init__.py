@@ -1,0 +1,1 @@
+from .serve_step import generate, make_decode_fn, make_prefill_fn  # noqa

@@ -1,0 +1,59 @@
+"""Serving loop: batched prefill + decode with greedy/temperature sampling.
+
+The serve path reuses the model's prefill/decode_step; this module adds the
+request-batch plumbing (continuous batching at the step granularity: each
+decode step consumes a (B, 1) token frontier; finished sequences are masked
+and their slots refilled by the driver in examples/serve_lm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import decode_step, init_decode_state, prefill
+
+
+def make_prefill_fn(cfg):
+    @jax.jit
+    def run(params, state, batch):
+        return prefill(params, cfg, state, batch)
+    return run
+
+
+def make_decode_fn(cfg, temperature: float = 0.0):
+    @jax.jit
+    def run(params, state, tokens, key):
+        logits, state = decode_step(params, cfg, state, tokens)
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if temperature > 0:
+            nxt = jax.random.categorical(key, logits / temperature)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), state
+    return run
+
+
+def generate(params, cfg, prompts, max_new_tokens: int = 16,
+             temperature: float = 0.0, eos_id: int | None = None):
+    """prompts: (B, S) int32.  Returns (B, max_new_tokens) int32."""
+    B, S = prompts.shape
+    state = init_decode_state(cfg, B, S + max_new_tokens)
+    pf = make_prefill_fn(cfg)
+    dec = make_decode_fn(cfg, temperature)
+    logits, state = pf(params, state, {"tokens": prompts})
+    tok = jnp.argmax(logits[:, -1, :].astype(jnp.float32),
+                     axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    key = jax.random.PRNGKey(0)
+    done = jnp.zeros((B, 1), bool)
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        tok, state = dec(params, state, tok, sub)
+        if eos_id is not None:
+            done = done | (tok == eos_id)
+            tok = jnp.where(done, eos_id, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

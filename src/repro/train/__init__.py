@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_update, init_opt_state  # noqa
+from .train_step import make_train_step  # noqa

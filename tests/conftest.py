@@ -1,0 +1,19 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core import startup
+
+
+@pytest.fixture
+def db():
+    return startup()
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

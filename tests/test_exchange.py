@@ -1,0 +1,92 @@
+"""Zero-copy + lazy conversion (paper §3.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import startup
+from repro.core.column import Column
+from repro.core.exchange import (LazyFrame, copy_for_write, export_table,
+                                 is_zero_copy_eligible, import_arrays,
+                                 to_device, zero_copy_view)
+from repro.core.types import DBType
+
+
+def test_zero_copy_shares_buffer():
+    c = Column.from_values(np.arange(1000, dtype=np.int64), DBType.INT64)
+    v = zero_copy_view(c)
+    assert np.shares_memory(v, c.data)           # no bytes moved
+
+
+def test_zero_copy_is_read_only():
+    """The mprotect write-trap, numpy edition."""
+    c = Column.from_values(np.arange(10, dtype=np.int64), DBType.INT64)
+    v = zero_copy_view(c)
+    with pytest.raises(ValueError):
+        v[0] = 99
+
+
+def test_copy_for_write_is_private():
+    c = Column.from_values(np.arange(10, dtype=np.int64), DBType.INT64)
+    w = copy_for_write(c)
+    w[0] = 99
+    assert c.data[0] == 0                        # engine data intact
+
+
+def test_eligibility_rules():
+    num = Column.from_values(np.arange(4, dtype=np.float64), DBType.FLOAT64)
+    s = Column.from_values(["a", "b"], DBType.VARCHAR)
+    dec = Column.from_values([1.5], DBType.DECIMAL, scale=2)
+    assert is_zero_copy_eligible(num)
+    assert not is_zero_copy_eligible(s)
+    assert not is_zero_copy_eligible(dec)
+
+
+def test_lazy_frame_converts_only_touched(db, rng):
+    db.create_table("t", {
+        "a": rng.integers(0, 10, 100).astype(np.int64),
+        "b": rng.uniform(0, 1, 100),
+        "s": np.asarray(["x", "y"], dtype=object)[rng.integers(0, 2, 100)],
+        "d": np.round(rng.uniform(0, 9, 100), 2),
+    })
+    res = db.scan("t").select("a", "b", "s", "d").execute()
+    lf = export_table(res, lazy=True)
+    assert isinstance(lf, LazyFrame)
+    _ = lf["s"]                       # touch one conversion-needing column
+    _ = lf["a"]                       # and one zero-copy column
+    assert lf.conversions == 1
+    assert lf.zero_copies == 1
+    assert lf.touched() == ["s", "a"]
+
+
+def test_lazy_frame_caches(db):
+    db.create_table("t", {"a": np.arange(10, dtype=np.int64)})
+    lf = export_table(db.scan("t").execute())
+    v1 = lf["a"]
+    v2 = lf["a"]
+    assert v1 is v2
+
+
+def test_to_device_roundtrip():
+    import jax.numpy as jnp
+    c = Column.from_values(np.arange(16, dtype=np.float64), DBType.FLOAT64)
+    d = to_device(c)
+    assert isinstance(d, __import__("jax").Array)
+    np.testing.assert_array_equal(np.asarray(d), c.data)
+
+
+def test_import_arrays_adopts_numeric(rng):
+    a = rng.uniform(0, 1, 100)
+    t = import_arrays("x", {"a": a})
+    assert np.shares_memory(np.asarray(t.columns["a"].data), a)
+
+
+def test_result_fetch_low_and_high(db):
+    db.create_table("t", {"a": np.arange(3, dtype=np.int64),
+                          "s": np.asarray(["p", None, "q"], dtype=object)})
+    res = db.connect().query("SELECT * FROM t")
+    assert res.nrows == 3 and res.ncols == 2
+    raw = res.fetch_raw(0)
+    assert raw.dtype == np.int64 and not raw.flags.writeable
+    vals, meta = res.fetch(1)
+    assert list(vals) == ["p", None, "q"]
+    assert meta.dbtype == DBType.VARCHAR

@@ -1,0 +1,142 @@
+"""Column-at-a-time expression evaluation incl. SQL null semantics."""
+
+import numpy as np
+import pytest
+
+from repro.core.column import StringHeap
+from repro.core.expression import (BinOp, Case, Cast, Col, DateLit,
+                                   EvalContext, Func, InList, IsNull, Like,
+                                   Lit, Not)
+from repro.core.types import DBType, NULL_SENTINEL
+
+
+def ctx(**cols):
+    arrays, meta = {}, {}
+    for name, spec in cols.items():
+        if isinstance(spec, tuple):
+            arr, t = spec[0], spec[1]
+            heap = spec[2] if len(spec) > 2 else None
+        else:
+            arr, t, heap = np.asarray(spec), DBType.FLOAT64, None
+        arrays[name] = np.asarray(arr)
+        meta[name] = (t, heap, 0)
+    return EvalContext(arrays, meta, xp=np)
+
+
+def test_arithmetic():
+    c = ctx(a=[1.0, 2.0], b=[10.0, 20.0])
+    r = (Col("a") + Col("b") * 2).eval(c)
+    np.testing.assert_allclose(r.values, [21.0, 42.0])
+
+
+def test_division_by_zero_is_null():
+    c = ctx(a=[1.0, 2.0], b=[0.0, 2.0])
+    r = (Col("a") / Col("b")).eval(c)
+    assert r.null.tolist() == [True, False]
+
+
+def test_comparison_null_is_false():
+    v = np.array([1, NULL_SENTINEL[DBType.INT64], 3], dtype=np.int64)
+    c = ctx(a=(v, DBType.INT64))
+    r = (Col("a") > 0).eval(c)
+    assert r.values.tolist() == [1, 0, 1]
+    assert r.null.tolist() == [False, True, False]
+
+
+def test_three_valued_and_or():
+    v = np.array([1, NULL_SENTINEL[DBType.INT64], 0], dtype=np.int64)
+    c = ctx(a=(v, DBType.INT64), b=(np.array([1, 1, 1], np.int64),
+                                    DBType.INT64))
+    r = ((Col("a") > 0) & (Col("b") > 0)).eval(c)
+    assert r.values.tolist() == [1, 0, 0]
+    r = ((Col("a") > 0) | (Col("b") > 0)).eval(c)
+    assert r.values.tolist() == [1, 1, 1]
+
+
+def test_null_propagation_in_arith():
+    v = np.array([1.0, np.nan])
+    c = ctx(a=v)
+    r = (Col("a") + 1).eval(c)
+    assert r.null.tolist() == [False, True]
+
+
+def test_isnull():
+    c = ctx(a=[1.0, np.nan])
+    assert IsNull(Col("a")).eval(c).values.tolist() == [0, 1]
+    assert IsNull(Col("a"), negate=True).eval(c).values.tolist() == [1, 0]
+
+
+def test_varchar_compare_on_codes():
+    heap, codes = StringHeap.encode(["b", "a", "c", None])
+    c = ctx(s=(codes, DBType.VARCHAR, heap))
+    eq = (Col("s") == "b").eval(c)
+    assert eq.values.tolist() == [1, 0, 0, 0]
+    lt = (Col("s") < "c").eval(c)
+    assert lt.values.tolist() == [1, 1, 0, 0]
+    ge = (Col("s") >= "b").eval(c)
+    assert ge.values.tolist() == [1, 0, 1, 0]
+
+
+def test_like_dictionary_fast_path():
+    heap, codes = StringHeap.encode(
+        ["PROMO BRUSHED", "ECONOMY PLATED", "PROMO TIN", None])
+    c = ctx(s=(codes, DBType.VARCHAR, heap))
+    r = Like(Col("s"), "PROMO%").eval(c)
+    assert r.values.tolist() == [1, 0, 1, 0]
+    r = Like(Col("s"), "%TIN").eval(c)
+    assert r.values.tolist() == [0, 0, 1, 0]
+
+
+def test_in_list():
+    heap, codes = StringHeap.encode(["x", "y", "z"])
+    c = ctx(s=(codes, DBType.VARCHAR, heap))
+    r = InList(Col("s"), ["x", "z"]).eval(c)
+    assert r.values.tolist() == [1, 0, 1]
+
+
+def test_between_sugar():
+    c = ctx(a=[1.0, 5.0, 10.0])
+    r = Col("a").between(2, 7).eval(c)
+    assert r.values.tolist() == [0, 1, 0]
+
+
+def test_case_when():
+    c = ctx(a=[1.0, -1.0])
+    e = Case(((Col("a") > 0, Lit(10.0)),), Lit(20.0))
+    np.testing.assert_allclose(e.eval(c).values, [10.0, 20.0])
+
+
+def test_year_function():
+    from repro.core.types import date_from_string
+    d = date_from_string(["1994-02-03", "2001-12-31"]).astype(np.int32)
+    c = ctx(d=(d, DBType.DATE))
+    assert Func("year", Col("d")).eval(c).values.tolist() == [1994, 2001]
+
+
+def test_year_function_jnp_matches_np():
+    import jax.numpy as jnp
+    from repro.core.types import date_from_string
+    days = date_from_string(
+        ["1970-01-01", "1992-03-01", "1999-12-31", "2020-02-29"]
+    ).astype(np.int32)
+    cn = ctx(d=(days, DBType.DATE))
+    r_np = Func("year", Col("d")).eval(cn).values
+    arrays = {"d": jnp.asarray(days)}
+    meta = {"d": (DBType.DATE, None, 0)}
+    cj = EvalContext(arrays, meta, xp=jnp)
+    r_j = np.asarray(Func("year", Col("d")).eval(cj).values)
+    assert r_np.tolist() == r_j.tolist()
+
+
+def test_date_literal_compare():
+    from repro.core.types import date_from_string
+    d = date_from_string(["1994-01-01", "1995-06-01"]).astype(np.int32)
+    c = ctx(d=(d, DBType.DATE))
+    r = (Col("d") < DateLit("1995-01-01")).eval(c)
+    assert r.values.tolist() == [1, 0]
+
+
+def test_cast():
+    c = ctx(a=[1.7, 2.2])
+    r = Cast(Col("a"), DBType.INT64).eval(c)
+    assert r.values.dtype == np.int64

@@ -1,0 +1,138 @@
+"""Pallas kernels: interpret-mode shape/dtype sweeps vs ref.py oracles."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.hash_group import ops as hops
+from repro.kernels.hash_group.hash_group import hash_group_call
+from repro.kernels.hash_group.ref import hash_group_ref
+from repro.kernels.imprint import ops as iops
+from repro.kernels.imprint.imprint import zone_maps_pallas
+from repro.kernels.imprint.ref import zone_maps_ref
+from repro.kernels.scan_agg import ops as sops
+from repro.kernels.scan_agg.ref import scan_agg_ref
+from repro.kernels.scan_agg.scan_agg import scan_agg_pallas
+
+
+# ---------------------------------------------------------------------------
+# imprint
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,null_frac", [(100, 0.0), (5000, 0.1),
+                                         (20480, 0.5), (2048, 1.0)])
+def test_imprint_kernel_vs_ref(rng, n, null_frac):
+    vals = rng.uniform(-100, 100, n)
+    nulls = rng.random(n) < null_frac
+    v2d, ok2d, nb = iops._prepare(vals, nulls, 2048)
+    lo, hi, inv = iops._range(vals, nulls, 16)
+    r = jnp.asarray([[lo, inv]], dtype=jnp.float32)
+    ref = zone_maps_ref(jnp.asarray(v2d), jnp.asarray(ok2d), r)
+    ker = zone_maps_pallas(jnp.asarray(v2d), jnp.asarray(ok2d), r,
+                           block_rows=2048, interpret=True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_imprint_host_vs_pallas_semantics(rng):
+    vals = rng.normal(0, 10, 12345)
+    nulls = rng.random(12345) < 0.2
+    mh = iops.build_zone_maps(vals, nulls, 2048, 16)
+    mp = iops.build_zone_maps_pallas(vals, nulls, 2048, 16, interpret=True)
+    assert (mh[2] == mp[2]).all()
+    assert (mp[0] <= mh[0]).all() and (mp[1] >= mh[1]).all()  # conservative
+
+
+# ---------------------------------------------------------------------------
+# scan_agg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C,n,block", [(1, 100, 1024), (3, 9000, 2048),
+                                       (6, 40000, 8192)])
+def test_scan_agg_sweep(rng, C, n, block):
+    cols = rng.uniform(-10, 10, (C, n))
+    ranges = np.full((C, 2), (-np.inf, np.inf))
+    ranges[0] = (-5, 5)
+    pairs = tuple((i, (i + 1) % C if C > 1 else -1) for i in range(C))
+    out = sops.fused_filter_agg(cols, ranges, pairs, block_rows=block,
+                                interpret=True)
+    mask = (cols[0] >= -5) & (cols[0] <= 5)
+    for p, (a, b) in enumerate(pairs):
+        v = cols[a] if b < 0 else cols[a] * cols[b]
+        np.testing.assert_allclose(out[p], v[mask].sum(), rtol=2e-4)
+    assert out[-1] == mask.sum()
+
+
+def test_scan_agg_kernel_vs_ref(rng):
+    C, n = 4, 16384
+    cols = rng.uniform(0, 100, (C, n)).astype(np.float32)
+    ranges = np.array([[10, 90], [-np.inf, np.inf],
+                       [0, 50], [-np.inf, np.inf]], dtype=np.float32)
+    pairs = ((1, 3), (2, -1))
+    # kernel path vs pure-jnp oracle on identical padded inputs
+    out_k = sops.fused_filter_agg(cols, ranges, pairs, interpret=True)
+    ref = np.asarray(scan_agg_ref(jnp.asarray(cols), jnp.asarray(ranges),
+                                  pairs=pairs))
+    np.testing.assert_allclose(out_k[:3], ref, rtol=2e-4)
+
+
+def test_scan_agg_no_filters_counts_all(rng):
+    cols = rng.uniform(0, 1, (2, 5000))
+    ranges = np.full((2, 2), (-np.inf, np.inf))
+    out = sops.fused_filter_agg(cols, ranges, ((0, -1),), interpret=True)
+    assert out[-1] == 5000
+
+
+def test_scan_agg_host_mirror_matches(rng):
+    cols = rng.uniform(0, 1, (3, 4096))
+    ranges = np.array([[0.2, 0.8], [-np.inf, np.inf], [-np.inf, np.inf]])
+    pairs = ((1, 2),)
+    a = sops.fused_filter_agg(cols, ranges, pairs, interpret=True)
+    b = sops.fused_filter_agg(cols, ranges, pairs, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# hash_group
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,G,V", [(100, 3, 1), (4096, 37, 4),
+                                   (10000, 256, 2)])
+def test_hash_group_sweep(rng, n, G, V):
+    gid = rng.integers(0, G, n)
+    vals = rng.normal(size=(V, n))
+    mask = rng.random(n) < 0.7
+    acc = hops.grouped_aggregate(gid, vals, G, mask=mask, interpret=True)
+    for g in range(G):
+        m = (gid == g) & mask
+        np.testing.assert_allclose(acc[g, :V], vals[:, m].sum(axis=1),
+                                   atol=1e-3)
+        assert acc[g, V] == m.sum()
+
+
+def test_hash_group_kernel_vs_ref(rng):
+    n, G, V = 8192, 64, 8
+    gid = rng.integers(0, G, n).astype(np.int32)
+    vals = rng.normal(size=(V, n)).astype(np.float32)
+    g_pad = 64
+    out_k = np.asarray(hash_group_call(jnp.asarray(gid[None]),
+                                       jnp.asarray(vals), g_pad,
+                                       block_rows=2048, interpret=True))
+    out_r = np.asarray(hash_group_ref(jnp.asarray(gid[None]),
+                                      jnp.asarray(vals), g_pad))
+    np.testing.assert_allclose(out_k, out_r, atol=1e-2)
+
+
+def test_hash_group_dtypes(rng):
+    # int64 inputs cast through float32 path
+    gid = rng.integers(0, 5, 1000)
+    vals = rng.integers(0, 100, (2, 1000)).astype(np.int64)
+    acc = hops.grouped_aggregate(gid, vals.astype(np.float64), 5,
+                                 interpret=True)
+    for g in range(5):
+        np.testing.assert_allclose(acc[g, :2],
+                                   vals[:, gid == g].sum(axis=1), rtol=1e-5)

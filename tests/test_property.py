@@ -1,0 +1,147 @@
+"""Hypothesis property tests on engine invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import Col, startup
+from repro.core.column import StringHeap
+from repro.core.types import DBType
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+ints = st.lists(st.integers(-1000, 1000), min_size=1, max_size=300)
+floats = st.lists(
+    st.floats(min_value=-1e6, max_value=1e6, allow_nan=False),
+    min_size=1, max_size=300)
+strings = st.lists(st.one_of(st.none(), st.text(
+    alphabet="abcdefg", min_size=0, max_size=6)),
+    min_size=1, max_size=200)
+
+
+def mkdb(**cols):
+    db = startup()
+    db.create_table("t", {k: np.asarray(v) if not isinstance(v, list)
+                          or not any(x is None for x in v)
+                          else v for k, v in cols.items()})
+    return db
+
+
+@given(floats, st.floats(min_value=-1e6, max_value=1e6, allow_nan=False))
+def test_filter_partitions_table(xs, threshold):
+    """|σ(p)| + |σ(¬p)| == |T| for null-free data."""
+    db = mkdb(x=np.asarray(xs))
+    lo = db.scan("t").filter(Col("x") < threshold) \
+        .agg(n=("count", None)).execute().to_pydict()["n"][0]
+    hi = db.scan("t").filter(~(Col("x") < threshold)) \
+        .agg(n=("count", None)).execute().to_pydict()["n"][0]
+    assert lo + hi == len(xs)
+
+
+@given(ints)
+def test_groupby_sums_to_total(ks):
+    db = mkdb(k=np.asarray(ks, dtype=np.int64),
+              v=np.ones(len(ks)))
+    got = db.scan("t").group_by("k").agg(s=("sum", "v")).execute()
+    total = np.asarray(got.to_pydict()["s"], dtype=float).sum()
+    assert total == len(ks)
+
+
+@given(ints)
+def test_sort_is_permutation(ks):
+    db = mkdb(k=np.asarray(ks, dtype=np.int64))
+    got = db.scan("t").order_by("k").execute().to_pydict()["k"]
+    assert sorted(ks) == [int(v) for v in got]
+
+
+@given(strings)
+def test_heap_roundtrip(ss):
+    heap, codes = StringHeap.encode(ss)
+    decoded = heap.decode(codes)
+    for orig, dec, code in zip(ss, decoded, codes):
+        if orig is None:
+            assert code == 0
+        else:
+            assert dec == orig
+
+
+@given(strings)
+def test_heap_codes_order_preserving(ss):
+    vals = [s for s in ss if s is not None]
+    assume(len(vals) >= 2)
+    heap, codes = StringHeap.encode(vals)
+    order_by_code = np.argsort(codes, kind="stable")
+    sorted_vals = [vals[i] for i in order_by_code]
+    assert sorted_vals == sorted(vals)
+
+
+@given(ints, ints)
+def test_join_cardinality_matches_bruteforce(a, b):
+    db = startup()
+    db.create_table("l", {"k": np.asarray(a, dtype=np.int64)})
+    db.create_table("r", {"k": np.asarray(b, dtype=np.int64)})
+    got = db.scan("l").join(db.scan("r"), on="k") \
+        .agg(n=("count", None)).execute().to_pydict()["n"][0]
+    brute = sum((np.asarray(b) == x).sum() for x in a)
+    assert got == brute
+
+
+@given(floats, st.floats(-1e6, 1e6, allow_nan=False),
+       st.floats(-1e6, 1e6, allow_nan=False))
+def test_imprint_never_misses(xs, lo, hi):
+    """Zone-map pruning is complete: pruned mask == exact predicate."""
+    assume(lo <= hi)
+    xs = (xs * 40)[:8000]           # large enough to build imprints
+    db = mkdb(x=np.asarray(xs))
+    im = db.index_manager.imprint_mask("t", "x", lo, hi, False, False)
+    if im is None:
+        return
+    mask, _ = im
+    exact = (np.asarray(xs) >= lo) & (np.asarray(xs) <= hi)
+    np.testing.assert_array_equal(mask, exact)
+
+
+@given(st.lists(st.sampled_from(["aa", "ab", "ba", "c", ""]),
+                min_size=1, max_size=100),
+       st.sampled_from(["a%", "%b", "%a%", "c", "_a", "%"]))
+def test_like_matches_fnmatch(ss, pattern):
+    import fnmatch
+    db = mkdb(s=np.asarray(ss, dtype=object))
+    got = db.scan("t").filter(Col("s").like(pattern)) \
+        .agg(n=("count", None)).execute().to_pydict()["n"][0]
+    pat = pattern.replace("%", "*").replace("_", "?")
+    exp = sum(fnmatch.fnmatchcase(s, pat) for s in ss)
+    assert got == exp
+
+
+@given(ints)
+def test_append_then_count(ks):
+    db = mkdb(k=np.asarray(ks, dtype=np.int64))
+    db.append("t", {"k": np.asarray(ks, dtype=np.int64)})
+    n = db.scan("t").agg(n=("count", None)).execute().to_pydict()["n"][0]
+    assert n == 2 * len(ks)
+
+
+@given(st.lists(st.integers(0, 5), min_size=8, max_size=200),
+       st.integers(2, 5))
+def test_chunked_merge_invariant(ks, n_chunks):
+    """Fig. 2: partial aggregation over any chunking merges identically."""
+    from repro.core.optimizer import optimize
+    from repro.core.parallel import ParallelExecutor, match_scan_agg
+    db = mkdb(k=np.asarray(ks, dtype=np.int64), v=np.ones(len(ks)))
+    q = db.scan("t").group_by("k").agg(s=("sum", "v"))
+    spec = match_scan_agg(optimize(q.plan, db.catalog), db.catalog)
+    assume(spec is not None)
+    ex = ParallelExecutor(db)
+    np.testing.assert_allclose(ex.run_chunked_host(spec, 1),
+                               ex.run_chunked_host(spec, n_chunks))
+
+
+@given(floats)
+def test_median_between_min_max(xs):
+    db = mkdb(x=np.asarray(xs))
+    got = db.scan("t").agg(m=("median", "x"), lo=("min", "x"),
+                           hi=("max", "x")).execute().to_pydict()
+    assert got["lo"][0] <= got["m"][0] <= got["hi"][0]

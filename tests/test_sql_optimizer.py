@@ -1,0 +1,145 @@
+"""SQL parser + optimizer passes."""
+
+import numpy as np
+import pytest
+
+from repro.core import Col, startup
+from repro.core.optimizer import fold_expr, optimize, split_conjuncts
+from repro.core.expression import BinOp, Lit
+from repro.core.relalg import (AggregateNode, FilterNode, JoinNode,
+                               ProjectNode, ScanNode, walk)
+
+
+@pytest.fixture
+def sdb(rng):
+    db = startup()
+    n = 1000
+    db.create_table("orders", {
+        "o_id": np.arange(n, dtype=np.int64),
+        "o_cust": rng.integers(0, 100, n).astype(np.int64),
+        "o_total": rng.uniform(1, 1000, n),
+        "o_status": np.asarray(["A", "B", "C"], dtype=object)[
+            rng.integers(0, 3, n)],
+    })
+    db.create_table("cust", {
+        "c_id": np.arange(100, dtype=np.int64),
+        "c_region": np.asarray(["EU", "US"], dtype=object)[
+            rng.integers(0, 2, 100)],
+    })
+    return db
+
+
+def test_sql_basic_agg(sdb):
+    out = sdb.connect().query(
+        "SELECT o_status, count(*) n, avg(o_total) a FROM orders "
+        "GROUP BY o_status ORDER BY o_status").to_pydict()
+    assert list(out["o_status"]) == ["A", "B", "C"]
+    assert sum(out["n"]) == 1000
+
+
+def test_sql_comma_join_equals_builder(sdb):
+    sql = sdb.connect().query(
+        "SELECT c_region, sum(o_total) s FROM orders, cust "
+        "WHERE o_cust = c_id GROUP BY c_region ORDER BY c_region"
+    ).to_pydict()
+    built = (sdb.scan("orders").join(sdb.scan("cust"), left_on="o_cust",
+                                     right_on="c_id")
+             .group_by("c_region").agg(s=("sum", "o_total"))
+             .order_by("c_region").execute().to_pydict())
+    np.testing.assert_allclose(sql["s"], built["s"])
+
+
+def test_sql_having(sdb):
+    out = sdb.connect().query(
+        "SELECT o_cust, count(*) n FROM orders GROUP BY o_cust "
+        "HAVING count(*) > 12 ORDER BY n DESC").to_pydict()
+    assert all(n > 12 for n in out["n"])
+
+
+def test_sql_distinct(sdb):
+    out = sdb.connect().query(
+        "SELECT DISTINCT o_status FROM orders ORDER BY o_status"
+    ).to_pydict()
+    assert list(out["o_status"]) == ["A", "B", "C"]
+
+
+def test_sql_star(sdb):
+    out = sdb.connect().query("SELECT * FROM cust LIMIT 3").to_pydict()
+    assert set(out) == {"c_id", "c_region"}
+
+
+def test_sql_case_expression(sdb):
+    out = sdb.connect().query(
+        "SELECT sum(CASE WHEN o_total > 500 THEN 1 ELSE 0 END) big "
+        "FROM orders").to_pydict()
+    direct = sdb.connect().query(
+        "SELECT count(*) n FROM orders WHERE o_total > 500").to_pydict()
+    assert out["big"][0] == direct["n"][0]
+
+
+def test_sql_errors(sdb):
+    from repro.core.sqlparser import SQLError
+    con = sdb.connect()
+    with pytest.raises(SQLError):
+        con.query("SELECT FROM orders")
+    with pytest.raises(SQLError):
+        con.query("SELECT o_id FROM nonexistent")
+
+
+# ---- optimizer ------------------------------------------------------------
+
+
+def test_constant_folding():
+    e = fold_expr(BinOp("*", Lit(3), BinOp("+", Lit(1), Lit(1))))
+    assert isinstance(e, Lit) and e.value == 6
+
+
+def test_split_conjuncts():
+    e = (Col("a") > 1) & ((Col("b") > 2) & (Col("c") > 3))
+    assert len(split_conjuncts(e)) == 3
+
+
+def test_filter_pushdown_through_join(sdb):
+    q = (sdb.scan("orders").join(sdb.scan("cust"), left_on="o_cust",
+                                 right_on="c_id")
+         .filter((Col("o_total") > 100) & (Col("c_region") == "EU")))
+    plan = optimize(q.plan, sdb.catalog)
+    # both conjuncts must sit below the join
+    for node in walk(plan):
+        if isinstance(node, JoinNode):
+            sides = [node.left, node.right]
+            assert any(isinstance(s, FilterNode) for s in sides)
+            break
+    else:
+        pytest.fail("no join in plan")
+
+
+def test_projection_pruning_reaches_scan(sdb):
+    q = sdb.scan("orders").group_by("o_status").agg(n=("count", None))
+    plan = optimize(q.plan, sdb.catalog)
+    scans = [n for n in walk(plan) if isinstance(n, ScanNode)]
+    assert scans and set(scans[0].columns) == {"o_status"}
+
+
+def test_join_sides_swap_by_cardinality(sdb):
+    # orders (1000) joined as left -> optimizer keeps big side left
+    # (build on the small side)
+    q = sdb.scan("cust").join(sdb.scan("orders"), left_on="c_id",
+                              right_on="o_cust")
+    plan = optimize(q.plan, sdb.catalog)
+    join = next(n for n in walk(plan) if isinstance(n, JoinNode))
+    left_tables = [n.table for n in walk(join.left)
+                   if isinstance(n, ScanNode)]
+    assert "orders" in left_tables
+
+
+def test_pushdown_preserves_results(sdb):
+    q = (sdb.scan("orders").join(sdb.scan("cust"), left_on="o_cust",
+                                 right_on="c_id")
+         .filter((Col("o_total") > 100) & (Col("c_region") == "EU"))
+         .group_by("o_status").agg(n=("count", None), s=("sum", "o_total"))
+         .order_by("o_status"))
+    a = q.execute(do_optimize=True).to_pydict()
+    b = q.execute(do_optimize=False).to_pydict()
+    np.testing.assert_allclose(a["s"], b["s"])
+    assert a["n"].tolist() == b["n"].tolist()

@@ -1,0 +1,187 @@
+"""Persistence (memmap columns, WAL, recovery) + optimistic concurrency."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ConflictError, DatabaseError, startup
+from repro.core.session import Database
+
+
+def _mkdb(path):
+    db = startup(str(path))
+    db.create_table("t", {"a": np.arange(100, dtype=np.int64),
+                          "s": np.asarray(["x", "y"] * 50, dtype=object),
+                          "d": np.arange(100) * 1.5})
+    return db
+
+
+def test_persist_and_reload(tmp_path):
+    db = _mkdb(tmp_path / "db1")
+    db.shutdown()
+    db2 = startup(str(tmp_path / "db1"))
+    t = db2.table("t")
+    assert t.num_rows == 100
+    assert list(t.columns["s"].to_numpy()[:2]) == ["x", "y"]
+    # memmap-backed (the paper's mmap storage model)
+    assert isinstance(t.columns["a"].data, np.memmap)
+    db2.shutdown()
+
+
+def test_wal_replay_after_crash(tmp_path):
+    db = _mkdb(tmp_path / "db2")
+    db.checkpoint()
+    # bulk append goes to the WAL; simulate crash: NO shutdown/checkpoint
+    db.append("t", {"a": np.array([999], dtype=np.int64),
+                    "s": np.asarray(["z"], dtype=object),
+                    "d": np.array([9.9])})
+    with __import__("repro.core.session", fromlist=["_open_lock"])._open_lock:
+        from repro.core.session import _open_dirs
+        _open_dirs.clear()                      # drop the lock, not the data
+    db2 = startup(str(tmp_path / "db2"))
+    t = db2.table("t")
+    assert t.num_rows == 101
+    assert t.columns["a"].to_numpy()[-1] == 999
+    assert t.columns["s"].to_numpy()[-1] == "z"
+    db2.shutdown()
+
+
+def test_in_memory_mode_discards(tmp_path):
+    db = startup()
+    db.create_table("x", {"v": np.arange(5, dtype=np.int64)})
+    db.shutdown()
+    db2 = startup()
+    assert "x" not in db2.catalog
+
+
+def test_database_locked(tmp_path):
+    db = startup(str(tmp_path / "db3"))
+    with pytest.raises(DatabaseError, match="locked"):
+        startup(str(tmp_path / "db3"))
+    db.shutdown()
+    db3 = startup(str(tmp_path / "db3"))     # reopen after shutdown ok
+    db3.shutdown()
+
+
+def test_multiple_databases_per_process(tmp_path):
+    """The paper's §5.1 limitation, fixed here: several engines at once."""
+    a = startup(str(tmp_path / "a"))
+    b = startup(str(tmp_path / "b"))
+    c = startup()
+    a.create_table("t", {"v": np.array([1], dtype=np.int64)})
+    b.create_table("t", {"v": np.array([2], dtype=np.int64)})
+    c.create_table("t", {"v": np.array([3], dtype=np.int64)})
+    assert a.table("t").columns["v"].data[0] == 1
+    assert b.table("t").columns["v"].data[0] == 2
+    assert c.table("t").columns["v"].data[0] == 3
+    a.shutdown(); b.shutdown(); c.shutdown()
+
+
+def test_snapshot_isolation(db):
+    db.create_table("t", {"v": np.array([1, 2], dtype=np.int64)})
+    con = db.connect()
+    con.begin()
+    # concurrent (autocommit) append from another connection
+    db.append("t", {"v": np.array([3], dtype=np.int64)})
+    res = con.query("SELECT count(*) n FROM t")
+    assert res.to_pydict()["n"][0] == 2          # snapshot: append invisible
+    con.rollback()
+    res = db.connect().query("SELECT count(*) n FROM t")
+    assert res.to_pydict()["n"][0] == 3
+
+
+def test_read_your_own_writes(db):
+    db.create_table("t", {"v": np.array([1], dtype=np.int64)})
+    con = db.connect()
+    con.begin()
+    con.append("t", {"v": np.array([2], dtype=np.int64)})
+    assert con.query("SELECT count(*) n FROM t").to_pydict()["n"][0] == 2
+    con.commit()
+    assert db.table("t").num_rows == 2
+
+
+def test_write_write_conflict(db):
+    db.create_table("t", {"v": np.array([1], dtype=np.int64)})
+    t1 = db.txn_manager.begin(db)
+    t2 = db.txn_manager.begin(db)
+    from repro.core.table import Table
+    chunk = Table.from_dict("t", {"v": np.array([7], dtype=np.int64)})
+    t1.append("t", chunk)
+    t2.append("t", chunk)
+    t1.commit()
+    with pytest.raises(ConflictError):
+        t2.commit()
+
+
+def test_shutdown_frees_state(db):
+    db.create_table("t", {"v": np.array([1], dtype=np.int64)})
+    db.shutdown()
+    with pytest.raises(DatabaseError):
+        db.scan("t")
+
+
+def test_checkpoint_truncates_wal(tmp_path):
+    db = _mkdb(tmp_path / "db4")
+    db.append("t", {"a": np.array([1], dtype=np.int64),
+                    "s": np.asarray(["q"], dtype=object),
+                    "d": np.array([0.1])})
+    wal = tmp_path / "db4" / "wal" / "wal.jsonl"
+    assert wal.exists() and wal.stat().st_size > 0
+    db.checkpoint()
+    assert not wal.exists() or wal.stat().st_size == 0
+    db.shutdown()
+    db2 = startup(str(tmp_path / "db4"))
+    assert db2.table("t").num_rows == 101
+    db2.shutdown()
+
+
+def test_delete_installs_new_version(db):
+    import numpy as np
+    from repro.core import Col
+    db.create_table("t", {"v": np.arange(100, dtype=np.int64)})
+    n = db.delete("t", Col("v") >= 90)
+    assert n == 10
+    assert db.table("t").num_rows == 90
+    assert db.table("t").version == 1
+
+
+def test_delete_destroys_indexes(db):
+    """Paper §3.1: indexes are destroyed on deletions."""
+    import numpy as np
+    from repro.core import Col
+    db.create_table("t", {"v": np.arange(5000, dtype=np.float64)})
+    db.index_manager.create_order_index("t", "v")
+    db.index_manager.get_imprint("t", "v")
+    db.delete("t", Col("v") < 10)
+    assert db.index_manager.get_order_index("t", "v") is None
+    # rebuilt lazily on next use, over the new version
+    mask, _ = db.index_manager.imprint_mask("t", "v", 100, 200, False, False)
+    assert mask.sum() == 101
+
+
+def test_delete_persists(tmp_path):
+    import numpy as np
+    from repro.core import Col, startup
+    db = startup(str(tmp_path / "d"))
+    db.create_table("t", {"v": np.arange(10, dtype=np.int64)})
+    db.delete("t", Col("v") > 4)
+    db.shutdown()
+    db2 = startup(str(tmp_path / "d"))
+    assert db2.table("t").num_rows == 5
+    db2.shutdown()
+
+
+def test_delete_visible_only_after_snapshot(db):
+    import numpy as np
+    from repro.core import Col
+    db.create_table("t", {"v": np.arange(10, dtype=np.int64)})
+    con = db.connect()
+    con.begin()
+    db.delete("t", Col("v") >= 5)
+    # the open snapshot still sees 10 rows
+    assert con.query("SELECT count(*) n FROM t").to_pydict()["n"][0] == 10
+    con.rollback()
+    assert db.connect().query(
+        "SELECT count(*) n FROM t").to_pydict()["n"][0] == 5

@@ -1,0 +1,119 @@
+"""Storage model: sentinels, dates, decimals, string heaps, columns."""
+
+import numpy as np
+import pytest
+
+from repro.core.column import Column, StringHeap
+from repro.core.types import (DBType, NULL_SENTINEL, date_from_string,
+                              date_to_string, date_year, decimal_decode,
+                              decimal_encode, null_mask)
+
+
+def test_null_sentinels_are_in_domain():
+    assert NULL_SENTINEL[DBType.INT32] == -(2 ** 31)
+    assert NULL_SENTINEL[DBType.INT64] == -(2 ** 63)
+    assert np.isnan(NULL_SENTINEL[DBType.FLOAT64])
+
+
+def test_null_mask_int():
+    v = np.array([1, NULL_SENTINEL[DBType.INT32], 3], dtype=np.int32)
+    assert null_mask(v, DBType.INT32).tolist() == [False, True, False]
+
+
+def test_null_mask_float_nan():
+    v = np.array([1.0, np.nan, 3.0])
+    assert null_mask(v, DBType.FLOAT64).tolist() == [False, True, False]
+
+
+def test_date_roundtrip():
+    days = date_from_string(["1992-01-01", "1998-12-31", "1970-01-01"])
+    assert days[2] == 0
+    back = date_to_string(days)
+    assert list(back) == ["1992-01-01", "1998-12-31", "1970-01-01"]
+    assert date_year(days).tolist() == [1992, 1998, 1970]
+
+
+def test_decimal_roundtrip():
+    enc = decimal_encode([1.23, -4.56, 0.0], 2)
+    assert enc.dtype == np.int64
+    assert enc.tolist() == [123, -456, 0]
+    np.testing.assert_allclose(decimal_decode(enc, 2), [1.23, -4.56, 0.0])
+
+
+def test_string_heap_order_preserving():
+    heap, codes = StringHeap.encode(["pear", "apple", None, "pear", "fig"])
+    # code 0 = NULL; codes sorted lexicographically
+    assert codes[2] == 0
+    decoded = heap.decode(codes)
+    assert decoded[0] == "pear" and decoded[1] == "apple"
+    # order preservation: apple < fig < pear
+    assert codes[1] < codes[4] < codes[0]
+    # duplicate elimination: 'pear' appears once
+    assert list(heap.values[1:]).count("pear") == 1
+
+
+def test_string_heap_bounds():
+    heap, codes = StringHeap.encode(["b", "d", "f"])
+    assert heap.code_of("d") == codes[1]
+    assert heap.code_of("zzz") == -1
+    assert heap.lower_bound("c") == codes[1]       # first >= 'c' is 'd'
+    assert heap.upper_bound("d") == codes[1] + 1
+
+
+def test_string_heap_merge_recode():
+    heap, codes = StringHeap.encode(["m", "a"])
+    new_heap, recode, new_codes = heap.merge(["z", "a", None])
+    # old codes remap and stay order preserving
+    old = new_heap.decode(recode[codes])
+    assert list(old) == ["m", "a"]
+    assert new_heap.decode(new_codes)[0] == "z"
+    assert new_codes[2] == 0
+
+
+def test_column_from_values_with_nulls():
+    c = Column.from_values([1, None, 3], DBType.INT64)
+    assert c.nulls().tolist() == [False, True, False]
+    out = c.to_numpy()
+    assert out[1] is None and out[0] == 1
+
+
+def test_column_varchar_roundtrip():
+    c = Column.from_values(["x", None, "y", "x"], DBType.VARCHAR)
+    out = c.to_numpy()
+    assert list(out) == ["x", None, "y", "x"]
+
+
+def test_column_decimal():
+    c = Column.from_values([1.25, 3.5], DBType.DECIMAL, scale=2)
+    assert c.data.dtype == np.int64
+    np.testing.assert_allclose(c.to_numpy(), [1.25, 3.5])
+
+
+def test_column_date_from_strings():
+    c = Column.from_values(["1995-06-17", None], DBType.DATE)
+    assert c.nulls().tolist() == [False, True]
+    assert c.data[0] == int(date_from_string("1995-06-17"))
+
+
+def test_column_append_varchar_merges_heaps():
+    a = Column.from_values(["b", "a"], DBType.VARCHAR)
+    b = Column.from_values(["c", "a"], DBType.VARCHAR)
+    c = a.append(b)
+    assert list(c.to_numpy()) == ["b", "a", "c", "a"]
+    # still order-preserving after merge
+    codes = c.data
+    assert codes[1] < codes[0] < codes[2]
+
+
+def test_column_take():
+    c = Column.from_values([10, 20, 30], DBType.INT64)
+    assert c.take(np.array([2, 0])).to_numpy().tolist() == [30, 10]
+
+
+def test_column_device_cache_and_evict():
+    c = Column.from_values(np.arange(8, dtype=np.int64), DBType.INT64)
+    d1 = c.device()
+    d2 = c.device()
+    assert d1 is d2                    # page-in cached
+    c.evict()
+    assert c._device is None
