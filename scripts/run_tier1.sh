@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): the full test suite, fail-fast.
+# Extra pytest args pass through, e.g.:
+#   scripts/run_tier1.sh -m "not outofcore and not slow"   # quick run
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

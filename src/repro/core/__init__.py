@@ -5,6 +5,7 @@ Public API:
     Col, Lit, DateLit, Func, Case, ...  # expression builders
 """
 
+from .buffers import BufferManager
 from .column import Column, StringHeap
 from .exchange import (LazyFrame, copy_for_write, export_table,
                        import_arrays, to_device, zero_copy_view)
@@ -17,7 +18,8 @@ from .transactions import ConflictError, TransactionError
 from .types import ColumnSchema, DBType, TableSchema
 
 __all__ = [
-    "AggSpec", "BinOp", "Case", "Cast", "Col", "Column", "ColumnSchema",
+    "AggSpec", "BinOp", "BufferManager", "Case", "Cast", "Col", "Column",
+    "ColumnSchema",
     "ConflictError", "Connection", "Database", "DatabaseError", "DateLit",
     "DBType", "Func", "InList", "IsNull", "LazyFrame", "Like", "Lit", "Not",
     "Query", "Result", "StringHeap", "Table", "TableSchema",

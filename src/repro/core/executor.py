@@ -413,6 +413,22 @@ def _rank(v: np.ndarray) -> np.ndarray:
     return inv.astype(np.int64)
 
 
+def _probe_group_state(keys: list[ExprResult], idx: np.ndarray,
+                       sample: int = 4096) -> int:
+    """Estimated distinct group count from a strided row sample (runtime
+    statistics for the spill decision).  A sample whose rows are mostly
+    distinct extrapolates linearly; a clearly repetitive one is treated as
+    low-cardinality."""
+    if len(idx) == 0:
+        return 0
+    samp = idx[::max(1, len(idx) // sample)][:sample]
+    codes, _ = _factorize(keys, samp)
+    d = len(np.unique(codes))
+    if d >= 0.5 * len(samp):
+        return int(d * len(idx) / max(1, len(samp)))
+    return 2 * d
+
+
 # ---------------------------------------------------------------------------
 # program interpreter
 # ---------------------------------------------------------------------------
@@ -424,15 +440,30 @@ class ExecStats:
     index_hits: int = 0
     imprint_blocks_skipped: int = 0
     rows_scanned: int = 0
+    spilled_ops: int = 0          # blocking ops routed to the spill tier
 
 
 class Executor:
     """Sequential host-tier interpreter.  parallel.py subclasses the
-    dispatch to run parallelizable spans under shard_map."""
+    dispatch to run parallelizable spans under shard_map.
+
+    Blocking operators (join / group / sort) consult the database's buffer
+    manager: when the estimated operator state exceeds the configured
+    ``memory_budget`` they route to the partitioned external operators in
+    spill.py, which return bit-identical results while keeping tracked
+    working memory under the budget."""
 
     def __init__(self, database):
         self.db = database
         self.stats = ExecStats()
+        self.bufman = getattr(database, "buffer_manager", None)
+
+    def _over_budget(self, est_bytes: int) -> bool:
+        """Tactical spill decision (paper optimization level 3, extended):
+        made per-instruction from actual runtime cardinalities."""
+        bm = self.bufman
+        return (bm is not None and bm.budget is not None
+                and est_bytes > bm.budget)
 
     # -- entry points -------------------------------------------------------
     def execute(self, plan: PlanNode, do_optimize: bool = True):
@@ -550,6 +581,26 @@ class Executor:
         lmask = regs[rest.pop(0)] if p["lmask"] else None
         rmask = regs[rest.pop(0)] if p["rmask"] else None
 
+        nl = len(np.asarray(lres[0].values))
+        nr = len(np.asarray(rres[0].values))
+        key_bytes = sum(np.asarray(r.values).dtype.itemsize for r in lres)
+        if self._over_budget((nl + nr) * (key_bytes + 16)):
+            from . import spill
+            if spill.spillable_join_keys(lres, rres):
+                lnull = np.zeros(nl, dtype=bool)
+                rnull = np.zeros(nr, dtype=bool)
+                for lr, rr in zip(lres, rres):
+                    lnull |= _res_nulls(lr)
+                    rnull |= _res_nulls(rr)
+                lsel = np.nonzero(
+                    (~lnull) if lmask is None else (lmask & ~lnull))[0]
+                rsel = np.nonzero(
+                    (~rnull) if rmask is None else (rmask & ~rnull))[0]
+                self.stats.spilled_ops += 1
+                self.bufman.stats.spilled_ops += 1
+                return spill.partitioned_hash_join(
+                    lres, rres, lsel, rsel, p["how"], self.bufman)
+
         lc, rc, lnull, rnull = _join_codes(lres, rres, nk)
         lsel = np.nonzero((~lnull) if lmask is None else (lmask & ~lnull))[0]
         rsel = np.nonzero((~rnull) if rmask is None else (rmask & ~rnull))[0]
@@ -588,6 +639,18 @@ class Executor:
         if nk == 0:
             gid = np.zeros(len(idx), dtype=np.int64)
             return gid, 1, idx
+        key_bytes = sum(np.asarray(k.values).dtype.itemsize for k in keys)
+        if self._over_budget(len(idx) * (key_bytes + 16)) \
+                and self._over_budget(
+                    _probe_group_state(keys, idx) * (key_bytes + 16)):
+            # big input AND big grouping state: grace-hash partition.  A
+            # low-cardinality grouping (few distinct keys) stays in memory —
+            # its blocking state is tiny no matter how large the input, and
+            # partitioning by key could never split the dominant groups.
+            from . import spill
+            self.stats.spilled_ops += 1
+            self.bufman.stats.spilled_ops += 1
+            return spill.grace_hash_groupby(keys, idx, self.bufman)
         codes, _ = _factorize(keys, idx)
         gid, n, rep = _dense_gid(codes)
         return gid, n, idx
@@ -619,6 +682,13 @@ class Executor:
         p = ins.payload
         keys = [regs[a] for a in ins.args]
         descs = p["descs"]
+        n = len(np.asarray(keys[0].values))
+        if self._over_budget(n * 8 * (len(keys) + 1)):
+            from . import spill
+            self.stats.spilled_ops += 1
+            self.bufman.stats.spilled_ops += 1
+            return spill.external_merge_sort(keys, descs, p["limit"],
+                                             self.bufman)
         arrs = [
             _sort_key_float(r, d) for r, d in zip(keys, descs)
         ]

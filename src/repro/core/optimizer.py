@@ -209,22 +209,38 @@ def _push_filters(node: PlanNode, catalog, pending: list[Expr] = None) -> PlanNo
 # ---------------------------------------------------------------------------
 
 
-def _estimate_rows(node: PlanNode, catalog) -> float:
+def estimate_rows(node: PlanNode, catalog) -> float:
+    """Cardinality estimate (paper optimization level 1 statistics).  Used
+    for join-order decisions below and by the execution tiers to predict
+    whether a plan's blocking intermediates fit the memory budget."""
     if isinstance(node, ScanNode):
         return float(catalog.table(node.table).num_rows)
     if isinstance(node, FilterNode):
-        return 0.25 * _estimate_rows(node.child, catalog)
+        return 0.25 * estimate_rows(node.child, catalog)
     if isinstance(node, JoinNode):
-        l = _estimate_rows(node.left, catalog)
-        r = _estimate_rows(node.right, catalog)
+        l = estimate_rows(node.left, catalog)
+        r = estimate_rows(node.right, catalog)
         return max(l, r)
     if isinstance(node, AggregateNode):
-        return max(1.0, 0.1 * _estimate_rows(node.child, catalog))
+        return max(1.0, 0.1 * estimate_rows(node.child, catalog))
     if isinstance(node, LimitNode):
         return float(node.n)
     if node.children:
-        return _estimate_rows(node.children[0], catalog)
+        return estimate_rows(node.children[0], catalog)
     return 1.0
+
+
+def estimate_bytes(node: PlanNode, catalog) -> float:
+    """Upper-ish bound on the widest intermediate a plan materializes:
+    max over plan nodes of (estimated rows x output width).  The parallel
+    tier uses this to keep the sharded fast path for fitting inputs and
+    leave oversized plans to the host tier's spill operators."""
+    try:
+        width = 8.0 * max(1, len(node.output_columns(catalog)))
+    except Exception:
+        width = 8.0
+    own = estimate_rows(node, catalog) * width
+    return max([own] + [estimate_bytes(c, catalog) for c in node.children])
 
 
 def _reorder_joins(node: PlanNode, catalog) -> PlanNode:
@@ -234,8 +250,8 @@ def _reorder_joins(node: PlanNode, catalog) -> PlanNode:
     node = node.with_children(
         tuple(_reorder_joins(c, catalog) for c in node.children))
     if isinstance(node, JoinNode) and node.how == "inner":
-        l = _estimate_rows(node.left, catalog)
-        r = _estimate_rows(node.right, catalog)
+        l = estimate_rows(node.left, catalog)
+        r = estimate_rows(node.right, catalog)
         if r > l * 1.5:
             # probe the big side, build on the small side: swap
             return JoinNode(node.right, node.left, node.right_keys,

@@ -219,12 +219,26 @@ def make_fragment(spec: ScanAggSpec, meta: dict, data_axis: str = "data"):
     return fragment
 
 
+def _shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: top-level ``jax.shard_map`` with
+    ``check_vma`` on newer releases, ``jax.experimental.shard_map`` with
+    ``check_rep`` on older ones."""
+    try:
+        from jax import shard_map as sm              # newer jax
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 def build_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
                      data_axis: str = "data"):
     """jit(shard_map(fragment)) with row-sharded inputs; also used by the
     multi-pod dry-run to lower the engine on the production mesh."""
-    from jax import shard_map
-
     axes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
     rowspec = P(axes if len(axes) > 1 else axes[0])
 
@@ -233,11 +247,10 @@ def build_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
         return frag(valid, **arrays)
 
     in_specs = (rowspec,) + tuple(rowspec for _ in spec.columns)
-    f = shard_map(
+    f = _shard_map_compat(
         lambda valid, *cols: merged_axis_fragment(
             valid, **dict(zip(spec.columns, cols))),
-        mesh=mesh, in_specs=in_specs, out_specs=P(),
-        check_vma=False)
+        mesh=mesh, in_specs=in_specs, out_specs=P())
     return jax.jit(f)
 
 
@@ -272,6 +285,16 @@ class ParallelExecutor(Executor):
         self.use_pallas = use_pallas
         self.distributed_hits = 0
 
+    def _fits_budget(self, plan: PlanNode, catalog) -> bool:
+        """The sharded tier is the fast path for inputs that fit in memory;
+        over-budget plans stay on the host tier, whose blocking operators
+        spill (spill.py) instead of materializing device-resident copies."""
+        budget = getattr(self.db, "memory_budget", None)
+        if budget is None:
+            return True
+        from .optimizer import estimate_bytes
+        return estimate_bytes(plan, catalog) <= budget
+
     def _default_mesh(self) -> Mesh:
         if self.mesh is not None:
             return self.mesh
@@ -283,7 +306,7 @@ class ParallelExecutor(Executor):
         if do_optimize:
             plan = optimize(plan, catalog)
         spec = match_scan_agg(plan, catalog)
-        if spec is not None:
+        if spec is not None and self._fits_budget(plan, catalog):
             table = catalog.table(spec.table)
             if table.num_rows >= MIN_ROWS_TO_SHARD:
                 try:

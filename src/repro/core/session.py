@@ -54,10 +54,19 @@ class Catalog:
 
 
 class Database:
-    """One embedded database instance (explicit state — no process globals)."""
+    """One embedded database instance (explicit state — no process globals).
 
-    def __init__(self, path: Optional[str] = None):
+    ``memory_budget`` (bytes) bounds the tracked working state of blocking
+    query operators; queries whose intermediates exceed it spill to
+    partitioned run files (out-of-core execution — the standard-RDBMS
+    feature the paper contrasts against in-memory analytics tools).  The
+    default ``None`` means unlimited: zero configuration, no spilling."""
+
+    def __init__(self, path: Optional[str] = None,
+                 memory_budget: Optional[int] = None):
+        from .buffers import BufferManager
         self.path = path
+        self.memory_budget = memory_budget
         self.catalog = Catalog()
         self.txn_manager = TransactionManager()
         self.index_manager = IndexManager(self)
@@ -67,6 +76,13 @@ class Database:
             self.storage = Storage(path)
             if self.storage.has_catalog():
                 self.catalog.tables = self.storage.load()
+        # spill files live under the database directory in persistent mode
+        # (paper §3.2: everything the instance owns is under one dir), in a
+        # private temp dir otherwise; both are created lazily on first spill.
+        self.buffer_manager = BufferManager(
+            memory_budget,
+            spill_dir=self.storage.spill_path()
+            if self.storage is not None else None)
 
     # ---- embedding API ------------------------------------------------------
     def connect(self) -> "Connection":
@@ -84,6 +100,7 @@ class Database:
         self.catalog.tables.clear()
         self.index_manager.imprints.clear()
         self.index_manager.order_indexes.clear()
+        self.buffer_manager.cleanup()
         self._shutdown = True
         if self.path is not None:
             with _open_lock:
@@ -212,19 +229,24 @@ class Database:
         return self.catalog.table(name)
 
 
-def startup(path: Optional[str] = None) -> Database:
+def startup(path: Optional[str] = None,
+            memory_budget: Optional[int] = None) -> Database:
     """monetdb_startup: persistent when ``path`` given, else in-memory.
+
+    ``memory_budget`` (bytes, default unlimited) enables out-of-core
+    execution: blocking operators spill partitioned run files to disk when
+    their working state would exceed the budget.
 
     Unlike the original (paper §5.1), several databases may be open in one
     process; a directory is single-owner ("database locked") to preserve the
     paper's on-disk locking contract."""
     if path is None:
-        return Database(None)
+        return Database(None, memory_budget=memory_budget)
     ap = os.path.abspath(path)
     with _open_lock:
         if ap in _open_dirs and not _open_dirs[ap]._shutdown:
             raise DatabaseError(f"database locked: {ap}")
-        db = Database(ap)
+        db = Database(ap, memory_budget=memory_budget)
         _open_dirs[ap] = db
     return db
 
@@ -308,9 +330,10 @@ class Connection:
             return Result(Table(TableSchema("result", ()), {}))
         if self._txn is not None:
             # run against the snapshot: materialize a view database
-            snap_db = Database(None)
+            snap_db = Database(None, memory_budget=db.memory_budget)
             snap_db.catalog.tables = self._txn.tables()
             snap_db.index_manager = IndexManager(snap_db)
+            snap_db.buffer_manager = db.buffer_manager   # shared accounting
             table = snap_db.sql(sql).execute(**kw)
         else:
             table = db.sql(sql).execute(**kw)

@@ -1,0 +1,430 @@
+"""Spill-aware (out-of-core) blocking operators.
+
+The paper's differentiator over in-memory analytics tools (§1, §4) is that a
+real RDBMS keeps working when intermediates outgrow RAM.  This module gives
+the engine that tier: each blocking operator — group/aggregate, join, sort —
+has an external variant that hash/range-partitions its input into
+memmap-backed run files (via buffers.BufferManager) and streams partitions
+back through the existing column-at-a-time kernels.
+
+Result-identity contract (asserted in tests/test_outofcore.py): every
+operator here returns *bit-identical* output to its in-memory twin in
+executor.py:
+
+* ``grace_hash_groupby`` range-partitions on the first group key with
+  sample-quantile splitters, so partitions are ordered and the concatenated
+  per-partition dense gids reproduce the global lexicographic group order of
+  ``_factorize``/``_dense_gid``;
+* ``partitioned_hash_join`` hash-partitions both sides, joins partition
+  pairs with the same ``_join_codes``/``_hash_join`` kernels, then stably
+  re-sorts the output pairs by left row — recovering the probe-order output
+  of the in-memory join;
+* ``external_merge_sort`` sorts budget-sized runs with the same
+  ``lexsort`` keys and merges with the original row index as tiebreaker,
+  which is exactly stable-lexsort order.
+
+Every partition's processing is wrapped in ``bufman.pinned`` so the tracked
+high-water mark stays under the budget; run files are deleted as soon as
+their partition is consumed.
+"""
+
+from __future__ import annotations
+
+import heapq
+import pickle
+from typing import Iterable, Iterator, Optional
+
+import numpy as np
+
+from .buffers import (BufferManager, PartitionWriter, choose_morsel_rows,
+                      choose_partitions)
+from .expression import ExprResult
+from .storage import morsel_ranges
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _key_row_bytes(results: list) -> int:
+    return sum(np.asarray(r.values).dtype.itemsize for r in results)
+
+
+def _slice_result(r: ExprResult, sl) -> ExprResult:
+    """Morsel view of an ExprResult (values + null mask, metadata shared)."""
+    return ExprResult(np.asarray(r.values)[sl], r.dbtype,
+                      None if r.null is None else np.asarray(r.null)[sl],
+                      r.heap, r.scale)
+
+
+def _gather_result(r: ExprResult, arr: np.ndarray) -> ExprResult:
+    """Rebuild an ExprResult around values read back from a spill file."""
+    return ExprResult(arr, r.dbtype, None, r.heap, r.scale)
+
+
+# ---------------------------------------------------------------------------
+# grace-hash aggregation (range-partitioned, group-order preserving)
+# ---------------------------------------------------------------------------
+
+
+def _lex_float(arr: np.ndarray) -> np.ndarray:
+    """Partitioning representation of raw key values: float64 with NaN
+    normalized to +inf (np.unique sorts NaN after inf, and co-locating the
+    two costs only balance, never correctness)."""
+    f = np.asarray(arr, dtype=np.float64)
+    return np.where(np.isnan(f), np.inf, f)
+
+
+def _composite_splitters(key_arrays: list, idx: np.ndarray,
+                         n_parts: int) -> np.ndarray:
+    """Sample-quantile splitter *tuples* over the full group key.
+
+    Partitioning on the composite key (not just the first column) keeps
+    partitions balanced when the leading key is low-cardinality — e.g.
+    GROUP BY city, fare with three cities.  Quantiles (not min/max linspace)
+    also stay balanced when the domain holds extreme values such as the
+    in-domain NULL sentinel ``-2**63``.  Returns an (n_splitters, n_keys)
+    matrix of lexicographically ascending, deduplicated boundary tuples."""
+    if n_parts <= 1:
+        return np.empty((0, len(key_arrays)), dtype=np.float64)
+    stride = max(1, len(idx) // 65536)
+    samp = idx[::stride]
+    cols = [_lex_float(a[samp]) for a in key_arrays]
+    order = np.lexsort(tuple(reversed(cols)))
+    mat = np.stack([c[order] for c in cols], axis=1)
+    picks = (np.arange(1, n_parts) * len(samp)) // n_parts
+    splitters = mat[np.clip(picks, 0, len(samp) - 1)]
+    return np.unique(splitters, axis=0)
+
+
+def _composite_partition(key_cols: list, splitters: np.ndarray) -> np.ndarray:
+    """Partition id per row: the count of splitter tuples lexicographically
+    below the row's key tuple.  Monotone in group-sort order and constant on
+    equal keys — the two properties order-preserving grace hashing needs."""
+    n = len(key_cols[0])
+    part = np.zeros(n, dtype=np.int64)
+    for s in splitters:
+        gt = np.zeros(n, dtype=bool)
+        eq = np.ones(n, dtype=bool)
+        for j, v in enumerate(key_cols):
+            gt |= eq & (v > s[j])
+            eq &= v == s[j]
+        part += gt
+    return part
+
+
+def grace_hash_groupby(keys: list, idx: np.ndarray, bufman: BufferManager):
+    """External GROUP BY: returns the same ``(gid, n_groups, idx)`` triple as
+    the in-memory ``_op_group``, with identical group numbering.
+
+    Rows are range-partitioned on the composite key tuple so partition p's
+    groups all sort before partition p+1's; within a partition the normal
+    factorize path runs, and per-partition gids are shifted by a running
+    offset.  Equal key tuples always share a partition, and NaN keys land
+    after finite values — matching ``np.unique``'s NaN-last order.
+    """
+    from .executor import _dense_gid, _factorize
+
+    n = len(idx)
+    row_bytes = _key_row_bytes(keys) + 8
+    n_parts = choose_partitions(n * row_bytes, bufman.budget)
+    morsel = choose_morsel_rows(row_bytes, bufman.budget)
+    key_arrays = [np.asarray(k.values) for k in keys]
+    splitters = _composite_splitters(key_arrays, idx, n_parts)
+
+    streams = {"idx": np.dtype(np.int64)}
+    for i, k in enumerate(keys):
+        streams[f"k{i}"] = np.asarray(k.values).dtype
+    writer = PartitionWriter(bufman, n_parts, streams, hint="grp")
+    for s, e in morsel_ranges(n, morsel):
+        sub = idx[s:e]
+        part = _composite_partition([_lex_float(ka[sub])
+                                     for ka in key_arrays], splitters)
+        chunks = {"idx": sub}
+        for i, ka in enumerate(key_arrays):
+            chunks[f"k{i}"] = ka[sub]
+        with bufman.pinned(sub.nbytes + sum(
+                ka[sub].nbytes for ka in key_arrays)):
+            writer.append(part, chunks)
+
+    out_gid, out_idx = [], []
+    offset = 0
+    for partn in writer.finalize():
+        if partn.rows == 0:
+            partn.release()
+            continue
+        with bufman.pinned(partn.nbytes):
+            arrs = partn.load()
+            sub_results = [_gather_result(k, arrs[f"k{i}"])
+                           for i, k in enumerate(keys)]
+            codes, _ = _factorize(sub_results)
+            gid, n_local, _ = _dense_gid(codes)
+            out_gid.append(gid + offset)
+            out_idx.append(arrs["idx"])
+            offset += n_local
+        partn.release()
+    if not out_gid:
+        return np.zeros(0, dtype=np.int64), 0, np.zeros(0, dtype=np.int64)
+    return (np.concatenate(out_gid).astype(np.int64), int(offset),
+            np.concatenate(out_idx).astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# partitioned (grace) hash join
+# ---------------------------------------------------------------------------
+
+
+def _hash_partition(values: np.ndarray, n_parts: int,
+                    as_float: bool) -> np.ndarray:
+    """Deterministic bucket per raw key value, identical across both sides.
+
+    Floats are normalized (-0.0 -> +0.0) then bit-hashed; integer families
+    widen to int64 so INT32 and INT64 keys bucket together."""
+    if as_float:
+        bits = (np.asarray(values, dtype=np.float64) + 0.0).view(np.uint64)
+    else:
+        bits = np.asarray(values).astype(np.int64).view(np.uint64)
+    h = bits * _GOLDEN
+    h = h ^ (h >> np.uint64(29))
+    return (h % np.uint64(n_parts)).astype(np.int64)
+
+
+def spillable_join_keys(lres: list, rres: list) -> bool:
+    """VARCHAR keys are only partitionable when both sides share one heap
+    (dictionary codes then compare directly); otherwise the in-memory path
+    must decode, so the spill tier declines."""
+    from .types import DBType
+    for lr, rr in zip(lres, rres):
+        if (lr.dbtype == DBType.VARCHAR or rr.dbtype == DBType.VARCHAR) \
+                and lr.heap is not rr.heap:
+            return False
+    return True
+
+
+def _spool_side(results: list, sel: np.ndarray, bufman: BufferManager,
+                n_parts: int, as_float: bool, hint: str):
+    row_bytes = _key_row_bytes(results) + 8
+    morsel = choose_morsel_rows(row_bytes, bufman.budget)
+    streams = {"idx": np.dtype(np.int64)}
+    for i, r in enumerate(results):
+        streams[f"k{i}"] = np.asarray(r.values).dtype
+    writer = PartitionWriter(bufman, n_parts, streams, hint=hint)
+    arrays = [np.asarray(r.values) for r in results]
+    first = arrays[0]
+    for s, e in morsel_ranges(len(sel), morsel):
+        sub = sel[s:e]
+        part = _hash_partition(first[sub], n_parts, as_float)
+        chunks = {"idx": sub}
+        for i, a in enumerate(arrays):
+            chunks[f"k{i}"] = a[sub]
+        with bufman.pinned(sub.nbytes + sum(a[sub].nbytes for a in arrays)):
+            writer.append(part, chunks)
+    return writer.finalize()
+
+
+def partitioned_hash_join(lres: list, rres: list, lsel: np.ndarray,
+                          rsel: np.ndarray, how: str,
+                          bufman: BufferManager):
+    """External equi-join.  Inputs are the *pre-null-filtered* selected row
+    positions of each side; output is the same global (lidx, ridx) pairs —
+    in the same order — as the in-memory ``_op_join``."""
+    from .executor import _hash_join, _join_codes
+    from .types import is_float
+
+    nk = len(lres)
+    as_float = any(is_float(r.dbtype) for r in (lres + rres))
+    row_bytes = _key_row_bytes(lres) + 8
+    est = (len(lsel) + len(rsel)) * row_bytes
+    n_parts = choose_partitions(est, bufman.budget)
+
+    lparts = _spool_side(lres, lsel, bufman, n_parts, as_float, "jl")
+    rparts = _spool_side(rres, rsel, bufman, n_parts, as_float, "jr")
+
+    out_l, out_r = [], []
+    for lp, rp in zip(lparts, rparts):
+        if lp.rows == 0:
+            lp.release(), rp.release()
+            continue
+        with bufman.pinned(lp.nbytes + rp.nbytes):
+            larr = lp.load()
+            rarr = rp.load()
+            lidx_g = larr["idx"]
+            ridx_g = rarr["idx"]
+            if rp.rows == 0:
+                if how == "anti":
+                    out_l.append(lidx_g)
+                elif how == "left":
+                    out_l.append(lidx_g)
+                    out_r.append(np.full(len(lidx_g), -1, dtype=np.int64))
+                # inner / semi: no matches in this partition
+            else:
+                lsub = [_gather_result(r, larr[f"k{i}"])
+                        for i, r in enumerate(lres)]
+                rsub = [_gather_result(r, rarr[f"k{i}"])
+                        for i, r in enumerate(rres)]
+                lc, rc, _, _ = _join_codes(lsub, rsub, nk)
+                lidx, ridx = _hash_join(lc, rc, how)
+                if how in ("semi", "anti"):
+                    out_l.append(lidx_g[lidx])
+                else:
+                    out_l.append(lidx_g[lidx])
+                    out_r.append(np.where(
+                        ridx < 0, -1, ridx_g[np.maximum(ridx, 0)]))
+        lp.release(), rp.release()
+
+    gl = np.concatenate(out_l).astype(np.int64) if out_l \
+        else np.zeros(0, dtype=np.int64)
+    # Recover probe order: in-memory output is sorted by global left row
+    # (ties = one left row's matches, already in right-row order within the
+    # single partition that owns the key) -> a stable sort by gl suffices.
+    order = np.argsort(gl, kind="stable")
+    if how in ("semi", "anti"):
+        return (gl[order],)
+    gr = np.concatenate(out_r).astype(np.int64) if out_r \
+        else np.zeros(0, dtype=np.int64)
+    return gl[order], gr[order]
+
+
+# ---------------------------------------------------------------------------
+# external merge sort
+# ---------------------------------------------------------------------------
+
+
+SORT_MERGE_FAN_IN = 64      # max run files open per merge pass (fd bound)
+
+
+def _write_sort_run(bufman: BufferManager, run: np.ndarray) -> str:
+    """Raw float64 row-major run file: appendable during cascade merges."""
+    path = bufman.new_spill_file("sortrun")
+    with open(path, "wb") as f:
+        f.write(np.ascontiguousarray(run).tobytes())
+    bufman.note_spilled(int(run.nbytes))
+    return path
+
+
+def _stream_sort_run(path: str, n_cols: int) -> Iterator[tuple]:
+    mm = np.memmap(path, dtype=np.float64,
+                   mode="r").reshape(-1, n_cols)   # OS-paged, not pinned
+    for i in range(mm.shape[0]):
+        row = mm[i]
+        yield tuple(float(v) for v in row[:-1]) + (int(row[-1]),)
+
+
+def external_merge_sort(keys: list, descs, limit: Optional[int],
+                        bufman: BufferManager) -> np.ndarray:
+    """External ORDER BY: returns the identical index vector np.lexsort
+    would.  Budget-sized runs are lexsorted with the same float sort keys,
+    spilled as ``(rows, n_keys+1)`` row-major float64 run files (last
+    column = original row index), then merged with the row index as
+    tiebreaker — which reproduces stable-lexsort order exactly.  When the
+    run count exceeds ``SORT_MERGE_FAN_IN``, cascade passes merge groups of
+    runs into longer runs first, bounding open file descriptors."""
+    from .executor import _sort_key_float
+
+    n = len(np.asarray(keys[0].values))
+    n_cols = len(keys) + 1
+    row_bytes = 8 * n_cols
+    if bufman.budget is not None:
+        run_rows = max(64, (bufman.budget // 2) // row_bytes)
+    else:
+        run_rows = n
+    paths = []
+    try:
+        for s, e in morsel_ranges(n, run_rows):
+            arrs = [_sort_key_float(_slice_result(r, slice(s, e)), d)
+                    for r, d in zip(keys, descs)]
+            with bufman.pinned((e - s) * row_bytes):
+                local = np.lexsort(tuple(reversed(arrs)))
+                run = np.empty((e - s, n_cols), dtype=np.float64)
+                for j, a in enumerate(arrs):
+                    run[:, j] = a[local]
+                run[:, -1] = (s + local).astype(np.float64)
+                paths.append(_write_sort_run(bufman, run))
+
+        # cascade: collapse groups of runs until one merge pass suffices
+        while len(paths) > SORT_MERGE_FAN_IN:
+            next_paths = []
+            for i in range(0, len(paths), SORT_MERGE_FAN_IN):
+                group = paths[i:i + SORT_MERGE_FAN_IN]
+                if len(group) == 1:
+                    next_paths.append(group[0])
+                    continue
+                out_path = bufman.new_spill_file("sortmerge")
+                written = 0
+                with open(out_path, "wb") as f:
+                    buf = []
+                    for item in heapq.merge(
+                            *(_stream_sort_run(p, n_cols) for p in group)):
+                        buf.append(item)
+                        if len(buf) >= 4096:
+                            b = np.asarray(buf, dtype=np.float64)
+                            f.write(b.tobytes())
+                            written += b.nbytes
+                            buf = []
+                    if buf:
+                        b = np.asarray(buf, dtype=np.float64)
+                        f.write(b.tobytes())
+                        written += b.nbytes
+                bufman.note_spilled(written)
+                for p in group:
+                    bufman.release_file(p)
+                next_paths.append(out_path)
+            paths = next_paths
+
+        if len(paths) == 1:
+            mm = np.memmap(paths[0], dtype=np.float64,
+                           mode="r").reshape(-1, n_cols)
+            idx = np.asarray(mm[:, -1], dtype=np.int64)
+            return idx[:limit] if limit is not None else idx
+
+        out = []
+        want = n if limit is None else min(limit, n)
+        for item in heapq.merge(*(_stream_sort_run(p, n_cols)
+                                  for p in paths)):
+            out.append(item[-1])
+            if len(out) >= want:
+                break
+        return np.asarray(out, dtype=np.int64)
+    finally:
+        for p in paths:
+            bufman.release_file(p)
+
+
+# ---------------------------------------------------------------------------
+# row spooler (volcano tier)
+# ---------------------------------------------------------------------------
+
+
+def spooled_row_groups(rows: Iterable[dict], key_fn, bufman: BufferManager,
+                       n_parts: int = 16) -> Iterator[tuple]:
+    """Out-of-core grouping for the row-at-a-time volcano engine: spool rows
+    to hash partitions (pickled batches), then yield ``(key, rows)`` one
+    partition at a time.  A group lives entirely in one partition, so the
+    caller can aggregate and discard each group's rows immediately."""
+    paths = [bufman.new_spill_file(f"volrows{p}") for p in range(n_parts)]
+    handles = [open(p, "wb") for p in paths]
+    try:
+        batches: list[list] = [[] for _ in range(n_parts)]
+        for row in rows:
+            p = hash(key_fn(row)) % n_parts
+            batches[p].append(row)
+            if len(batches[p]) >= 1024:
+                pickle.dump(batches[p], handles[p])
+                batches[p] = []
+        for p in range(n_parts):
+            if batches[p]:
+                pickle.dump(batches[p], handles[p])
+    finally:
+        for p, h in enumerate(handles):
+            bufman.note_spilled(h.tell())
+            h.close()
+    for p in range(n_parts):
+        groups: dict = {}
+        with open(paths[p], "rb") as f:
+            while True:
+                try:
+                    batch = pickle.load(f)
+                except EOFError:
+                    break
+                for row in batch:
+                    groups.setdefault(key_fn(row), []).append(row)
+        bufman.release_file(paths[p])
+        yield from groups.items()

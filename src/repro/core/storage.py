@@ -29,7 +29,28 @@ from .types import ColumnSchema, DBType, TableSchema
 CATALOG = "catalog.json"
 DATA_DIR = "data"
 WAL_DIR = "wal"
+SPILL_DIR = "spill"    # out-of-core run files live under the db directory
 FORMAT_VERSION = 2     # bumped on layout change; loader upgrades old dbs
+
+# Morsel granularity for streaming scans: column files are memory-mapped, so
+# a query that consumes them morsel-by-morsel (the spill tier, partitioning
+# passes) never forces the whole base table resident — the OS pages each
+# morsel-sized window in and out (paper §3.1 "Memory Management").
+MORSEL_ROWS = 1 << 16
+
+
+def morsel_ranges(n: int, morsel_rows: int = MORSEL_ROWS):
+    """Yield (start, end) row ranges covering ``n`` rows morsel-by-morsel."""
+    step = max(1, int(morsel_rows))
+    for s in range(0, int(n), step):
+        yield s, min(s + step, int(n))
+
+
+def iter_morsels(arr, morsel_rows: int = MORSEL_ROWS):
+    """Stream an array (typically an ``np.memmap`` column) in morsel-sized
+    windows; each yield is a zero-copy view of the mapped file."""
+    for s, e in morsel_ranges(len(arr), morsel_rows):
+        yield arr[s:e]
 
 
 def _atomic_write(path: str, write_fn) -> None:
@@ -106,6 +127,11 @@ class Storage:
         os.makedirs(os.path.join(root, DATA_DIR), exist_ok=True)
         os.makedirs(os.path.join(root, WAL_DIR), exist_ok=True)
         self._wal_seq = 0
+
+    def spill_path(self) -> str:
+        """Directory for out-of-core run files (created lazily by the
+        buffer manager; cleared on shutdown)."""
+        return os.path.join(self.root, SPILL_DIR)
 
     # -- catalog -------------------------------------------------------------
     def write_catalog(self, tables: dict[str, Table]) -> None:

@@ -150,19 +150,7 @@ class VolcanoExecutor:
                             out.setdefault(c, v)
                         yield out
         elif isinstance(node, AggregateNode):
-            groups: dict[tuple, list[Row]] = {}
-            for row in self._iter(node.child):
-                k = tuple(row[c] for c in node.group_by)
-                groups.setdefault(k, []).append(row)
-            if not groups and not node.group_by:
-                groups[()] = []
-            for k in sorted(groups, key=lambda kk: tuple(
-                    (v is None, v) for v in kk)):
-                rows = groups[k]
-                out = dict(zip(node.group_by, k))
-                for spec in node.aggs:
-                    out[spec.name] = _agg_rows(spec, rows)
-                yield out
+            yield from self._iter_aggregate(node)
         elif isinstance(node, OrderByNode):
             rows = list(self._iter(node.child))
             for name, desc in reversed(node.keys):
@@ -178,6 +166,44 @@ class VolcanoExecutor:
                 yield row
         else:
             raise TypeError(f"volcano cannot run {type(node).__name__}")
+
+
+    # -- aggregation (in-memory + spooled out-of-core variants) --------------
+    def _iter_aggregate(self, node: AggregateNode) -> Iterator[Row]:
+        keyf = lambda row: tuple(row[c] for c in node.group_by)
+        if self._should_spool(node):
+            # grace-style row grouping: rows spool to hash partitions on
+            # disk; each group aggregates and frees before the next loads.
+            from .spill import spooled_row_groups
+            bm = self.db.buffer_manager
+            results = [(k, _agg_group(node, k, rows)) for k, rows in
+                       spooled_row_groups(self._iter(node.child), keyf, bm)]
+            bm.stats.spilled_ops += 1
+        else:
+            groups: dict[tuple, list[Row]] = {}
+            for row in self._iter(node.child):
+                groups.setdefault(keyf(row), []).append(row)
+            results = [(k, _agg_group(node, k, rows))
+                       for k, rows in groups.items()]
+        if not results and not node.group_by:
+            results = [((), _agg_group(node, (), []))]
+        for _, out in sorted(results, key=lambda kv: tuple(
+                (v is None, v) for v in kv[0])):
+            yield out
+
+    def _should_spool(self, node: AggregateNode) -> bool:
+        bm = getattr(self.db, "buffer_manager", None)
+        if bm is None or bm.budget is None or not node.group_by:
+            return False
+        from .optimizer import estimate_bytes
+        return estimate_bytes(node.child, self.db.catalog) > bm.budget
+
+
+def _agg_group(node: AggregateNode, k: tuple, rows: list[Row]) -> Row:
+    out = dict(zip(node.group_by, k))
+    for spec in node.aggs:
+        out[spec.name] = _agg_rows(spec, rows)
+    return out
 
 
 def _sort_key(v):

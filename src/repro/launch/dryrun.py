@@ -29,6 +29,7 @@ import jax          # noqa: E402
 import numpy as np  # noqa: E402
 
 from ..configs.registry import ARCH_IDS, SHAPES, cells, get_config  # noqa: E402
+from .hlo_analysis import xla_cost  # noqa: E402
 from ..models.transformer import decode_step, prefill, train_loss  # noqa: E402
 from ..train.optimizer import AdamWConfig  # noqa: E402
 from ..train.train_step import make_train_step  # noqa: E402
@@ -102,7 +103,7 @@ def run_cell(arch: str, cell, mesh_name: str, out_dir: str,
             compiled = lowered.compile()
             t_compile = time.time()
             ma = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = xla_cost(compiled)
             hlo = compiled.as_text()
         mem_bytes = (ma.argument_size_in_bytes + ma.output_size_in_bytes
                      + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
@@ -190,7 +191,7 @@ def run_engine_cell(mesh_name: str, out_dir: str) -> dict:
             lowered = step.lower(valid, *colspecs)
             compiled = lowered.compile()
             ma = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = xla_cost(compiled)
             hlo = compiled.as_text()
         from .roofline import collective_bytes
         coll = collective_bytes(hlo)

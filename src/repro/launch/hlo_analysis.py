@@ -46,6 +46,15 @@ _DOT_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def xla_cost(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: newer jax returns
+    one properties dict, older returns a one-element list of dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
 # Core traffic model: ops that materialize HBM traffic on TPU even after
 # fusion (real kernels).  Elementwise/layout glue (convert, broadcast,
 # transpose, reshape, copy, add, multiply, reduce, select, pad, slice)

@@ -13,20 +13,30 @@ HBM_BW = 819e9                    # bytes/s per chip
 ICI_BW = 50e9                     # bytes/s per link
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: newer jax wants explicit
+    ``axis_types`` (Auto) for shard_map-style code; older releases predate
+    ``jax.sharding.AxisType`` and reject the kwarg."""
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    except AttributeError:
+        return jax.make_mesh(shape, axes)
+    try:
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    except TypeError:
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_local_mesh():
     """Whatever this host has (tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((n, 1), ("data", "model"))
 
 
 def mesh_chips(mesh) -> int:

@@ -1,0 +1,269 @@
+"""Out-of-core execution tier (core/buffers.py + core/spill.py).
+
+Contracts under test:
+
+* spill execution is **byte-identical** to in-memory execution for every
+  blocking operator (aggregate / all join flavors / sort, with and without
+  limit) across a matrix of memory budgets;
+* tracked peak buffer usage stays <= the configured budget;
+* every spill file is reclaimed by query end (and the spill dir lives under
+  the database directory in persistent mode);
+* a query whose intermediates exceed the budget completes instead of
+  requiring them resident.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Col, startup
+
+N = 40_000
+BUDGETS = [None, 50 << 20, 256 << 10, 32 << 10]
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(0)
+    fact = {
+        "k": rng.integers(0, 500, N),
+        "k2": rng.integers(0, 7, N),
+        "v": rng.normal(size=N),
+        "w": rng.integers(-100, 100, N),
+    }
+    dim = {"dk": np.arange(500, dtype=np.int64),
+           "label": rng.integers(0, 3, 500)}
+    return fact, dim
+
+
+def _build(dataset, budget):
+    fact, dim = dataset
+    db = startup(memory_budget=budget)
+    db.create_table("t", fact)
+    db.create_table("d", dim)
+    return db
+
+
+def _queries(db):
+    """One query per blocking-operator shape the spill tier covers."""
+    out = {}
+    out["agg"] = (db.scan("t").filter(Col("v") > -1.0).group_by("k", "k2")
+                  .agg(s=("sum", "v"), c=("count", None), mn=("min", "w"),
+                       mx=("max", "w"), a=("avg", "v"), md=("median", "v"),
+                       cd=("count_distinct", "w"))
+                  .execute().to_pydict())
+    out["join"] = (db.scan("t")
+                   .join(db.scan("d"), left_on="k", right_on="dk")
+                   .group_by("label").agg(s=("sum", "v"), c=("count", None))
+                   .execute().to_pydict())
+    out["leftjoin"] = (db.scan("d")
+                       .join(db.scan("t"), left_on="dk", right_on="k",
+                             how="left")
+                       .group_by("label").agg(c=("count", "v"))
+                       .execute().to_pydict())
+    out["semi"] = (db.scan("t")
+                   .join(db.scan("d").filter(Col("label") > 0),
+                         left_on="k", right_on="dk", how="semi")
+                   .agg(c=("count", None)).execute().to_pydict())
+    out["anti"] = (db.scan("t")
+                   .join(db.scan("d").filter(Col("label") > 0),
+                         left_on="k", right_on="dk", how="anti")
+                   .agg(c=("count", None)).execute().to_pydict())
+    out["topn"] = (db.scan("t").order_by(("v", True), "w", limit=1000)
+                   .select("k", "v", "w").execute().to_pydict())
+    out["fullsort"] = (db.scan("t").order_by("k2", ("w", True))
+                       .select("k2", "w", "v").execute().to_pydict())
+    return out
+
+
+def _assert_identical(a: dict, b: dict, ctx: str):
+    assert list(a) == list(b), ctx
+    for c in a:
+        if a[c].dtype == object:
+            assert list(map(str, a[c])) == list(map(str, b[c])), (ctx, c)
+        else:
+            np.testing.assert_array_equal(a[c], b[c],
+                                          err_msg=f"{ctx} col={c}")
+
+
+@pytest.fixture(scope="module")
+def baseline(dataset):
+    return _queries(_build(dataset, None))
+
+
+@pytest.mark.parametrize("budget", BUDGETS)
+def test_budget_matrix_byte_identical(dataset, baseline, budget):
+    db = _build(dataset, budget)
+    got = _queries(db)
+    for qn in baseline:
+        _assert_identical(baseline[qn], got[qn], f"budget={budget} q={qn}")
+    st = db.buffer_manager.stats
+    if budget is not None:
+        assert st.peak <= budget, (st.peak, budget)
+    if budget is not None and budget <= 256 << 10:
+        # working sets above these budgets: the spill tier must engage
+        assert st.spilled_ops > 0
+        assert st.bytes_spilled > 0
+    if budget is None or budget >= 50 << 20:
+        assert st.spilled_ops == 0       # fitting inputs: no spill overhead
+    # spill-file lifecycle: everything reclaimed by query end
+    assert db.buffer_manager.active_files == 0
+
+
+def test_exceeding_budget_completes(dataset):
+    """The acceptance query: aggregate-join over data larger than the
+    budget completes with spilling and matches the in-memory result."""
+    fact, dim = dataset
+    budget = 64 << 10
+    assert sum(a.nbytes for a in fact.values()) > budget
+    db = _build(dataset, budget)
+    base = _build(dataset, None)
+    q = lambda d: (d.scan("t")
+                   .join(d.scan("d"), left_on="k", right_on="dk")
+                   .group_by("k", "w")          # high-cardinality state
+                   .agg(s=("sum", "v"), c=("count", None))
+                   .order_by(("s", True))
+                   .execute().to_pydict())
+    _assert_identical(q(base), q(db), "agg-join-sort over budget")
+    st = db.buffer_manager.stats
+    assert st.spilled_ops >= 3          # join, group and sort all spilled
+    assert st.peak <= budget
+    assert db.buffer_manager.active_files == 0
+
+
+def test_spill_dir_under_database_directory(tmp_path):
+    """Persistent mode: run files live under <dbdir>/spill and are gone
+    after the query; shutdown clears the directory."""
+    rng = np.random.default_rng(1)
+    db = startup(str(tmp_path / "db"), memory_budget=32 << 10)
+    db.create_table("t", {"k": rng.integers(0, 1000, 20_000),
+                          "v": rng.normal(size=20_000)})
+    spill_dir = os.path.join(str(tmp_path / "db"), "spill")
+
+    seen = {"files": 0}
+    bm = db.buffer_manager
+    orig = bm.new_spill_file
+
+    def counting(hint="run"):
+        seen["files"] += 1
+        return orig(hint)
+
+    bm.new_spill_file = counting
+    res = (db.scan("t").group_by("k").agg(s=("sum", "v"))
+           .execute().to_pydict())
+    assert len(res["k"]) == 1000
+    assert seen["files"] > 0, "expected the query to spill"
+    assert os.path.isdir(spill_dir)
+    assert os.listdir(spill_dir) == []       # reclaimed at query end
+    db.shutdown()
+    assert bm.active_files == 0
+
+
+def test_memory_budget_api():
+    db = startup()
+    assert db.memory_budget is None and db.buffer_manager.budget is None
+    db2 = startup(memory_budget=1 << 20)
+    assert db2.memory_budget == 1 << 20
+    with pytest.raises(ValueError):
+        startup(memory_budget=0)
+
+
+def test_sql_path_spills_identically(dataset):
+    sql = ("SELECT k2, count(*) AS n, sum(v) AS s FROM t "
+           "WHERE w > 0 GROUP BY k2, k ORDER BY s DESC")
+    a = _build(dataset, None).connect().query(sql).to_pydict()
+    db = _build(dataset, 32 << 10)
+    b = db.connect().query(sql).to_pydict()
+    for c in a:
+        np.testing.assert_array_equal(a[c], b[c], err_msg=c)
+    assert db.buffer_manager.stats.spilled_ops > 0
+
+
+def test_volcano_spooled_aggregation(dataset):
+    """The row-at-a-time baseline engine also honors the budget: grouping
+    spools pickled row partitions and yields identical output."""
+    from repro.core.optimizer import optimize
+    from repro.core.volcano import VolcanoExecutor
+    base = _build(dataset, None)
+    db = _build(dataset, 32 << 10)
+    plan = (db.scan("t").group_by("k")
+            .agg(s=("sum", "v"), c=("count", None)).plan)
+    rows_mem = VolcanoExecutor(base).execute(optimize(plan, base.catalog))
+    spilled0 = db.buffer_manager.stats.bytes_spilled
+    rows_ooc = VolcanoExecutor(db).execute(optimize(plan, db.catalog))
+    assert rows_mem == rows_ooc
+    assert db.buffer_manager.stats.bytes_spilled > spilled0
+    assert db.buffer_manager.active_files == 0
+
+
+def test_low_cardinality_group_stays_in_memory(dataset):
+    """Grouping state for few distinct keys is tiny: the runtime probe must
+    keep it in memory even when the *input* exceeds the budget (spilling
+    could never split the dominant groups anyway)."""
+    db = _build(dataset, 32 << 10)
+    base = _build(dataset, None)
+    q = lambda d: (d.scan("t").group_by("k2")
+                   .agg(s=("sum", "v")).execute().to_pydict())
+    _assert_identical(q(base), q(db), "low-card group")
+    st = db.buffer_manager.stats
+    assert st.spilled_ops == 0
+
+
+def test_small_budget_peak_contract(dataset):
+    """Sub-32KiB budgets must also hold peak <= budget (regression: the
+    old 1024-row morsel/run floors pinned 24KiB regardless of budget)."""
+    db = _build(dataset, 16 << 10)
+    (db.scan("t").group_by("k", "w").agg(s=("sum", "v"))
+     .order_by(("s", True)).execute())
+    st = db.buffer_manager.stats
+    assert st.spilled_ops >= 2
+    assert st.peak <= 16 << 10, st.peak
+
+
+@pytest.mark.outofcore
+def test_sort_cascade_merge_bounded_fds():
+    """More sort runs than the merge fan-in (regression: the merge once
+    opened every run at once and hit EMFILE on large inputs): cascade
+    passes must kick in and the result must stay identical."""
+    from repro.core import spill
+    rng = np.random.default_rng(11)
+    n = 150_000
+    vals = {"v": rng.normal(size=n), "k": rng.integers(0, 1000, n)}
+    base = startup()
+    base.create_table("t", vals)
+    db = startup(memory_budget=32 << 10)
+    db.create_table("t", vals)
+    # 32 KiB budget, 16 B/row -> 1024-row runs -> ~147 runs > fan-in of 64
+    assert n / ((32 << 10) // 2 // 16) > spill.SORT_MERGE_FAN_IN
+    q = lambda d: (d.scan("t").order_by("v", ("k", True))
+                   .select("v", "k").execute().to_pydict())
+    _assert_identical(q(base), q(db), "cascade sort")
+    assert db.buffer_manager.stats.spilled_ops == 1
+    assert db.buffer_manager.active_files == 0
+
+
+@pytest.mark.outofcore
+@pytest.mark.slow
+def test_stress_much_larger_than_budget():
+    """~10 MB of blocking intermediates through a 1 MB budget."""
+    rng = np.random.default_rng(7)
+    n = 200_000
+    fact = {"k": rng.integers(0, 20_000, n), "v": rng.normal(size=n),
+            "w": rng.integers(0, 1_000_000, n)}
+    budget = 1 << 20
+    base = startup()
+    base.create_table("t", fact)
+    db = startup(memory_budget=budget)
+    db.create_table("t", fact)
+    q = lambda d: (d.scan("t").group_by("k")
+                   .agg(s=("sum", "v"), mx=("max", "w"))
+                   .order_by(("s", True), limit=500).execute().to_pydict())
+    _assert_identical(q(base), q(db), "stress-agg")
+    q2 = lambda d: (d.scan("t").order_by(("v", True), "w", limit=500)
+                    .select("k", "v").execute().to_pydict())
+    _assert_identical(q2(base), q2(db), "stress-sort")
+    st = db.buffer_manager.stats
+    assert st.spilled_ops >= 2
+    assert st.peak <= budget
+    assert db.buffer_manager.active_files == 0

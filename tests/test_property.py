@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'hypothesis' test extra")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
 
 from repro.core import Col, startup
 from repro.core.column import StringHeap

@@ -6,7 +6,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost
+from repro.launch.mesh import make_mesh_compat
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_model
 from repro.serve.serve_step import generate
@@ -52,7 +53,7 @@ def test_flops_plain_matmul_matches_xla():
         jax.ShapeDtypeStruct((256, 256), jnp.float32)).compile()
     mc = analyze_hlo(c.as_text())
     assert mc.flops == pytest.approx(2 * 256 ** 3)
-    assert mc.flops == pytest.approx(float(c.cost_analysis()["flops"]))
+    assert mc.flops == pytest.approx(float(xla_cost(c)["flops"]))
 
 
 def test_flops_scan_multiplies_by_trip_count():
@@ -64,7 +65,9 @@ def test_flops_scan_multiplies_by_trip_count():
     mc = analyze_hlo(c.as_text())
     assert mc.flops == pytest.approx(12 * 2 * 128 ** 3)
     # XLA's own number counts the body once — the very bug we fix
-    assert float(c.cost_analysis()["flops"]) == pytest.approx(2 * 128 ** 3)
+    # (rel tolerance: newer jax adds a handful of loop-bookkeeping flops)
+    assert float(xla_cost(c)["flops"]) == pytest.approx(2 * 128 ** 3,
+                                                        rel=1e-5)
 
 
 def test_flops_nested_scan():
@@ -85,8 +88,7 @@ def test_collective_bytes_sharded_matmul():
     from jax.sharding import NamedSharding, PartitionSpec as P
     if len(jax.devices()) < 2:
         pytest.skip("needs >1 device (dry-run process has 512)")
-    mesh = jax.make_mesh((len(jax.devices()),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((len(jax.devices()),), ("model",))
     c = jax.jit(lambda a, b: a @ b,
                 in_shardings=(NamedSharding(mesh, P(None, "model")),
                               NamedSharding(mesh, P("model", None))),

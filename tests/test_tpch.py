@@ -132,3 +132,74 @@ def test_distributed_q6(tpchdb):
     a = q.execute().to_pydict()
     b = q.execute(distributed=True).to_pydict()
     np.testing.assert_allclose(a["revenue"], b["revenue"], rtol=1e-9)
+
+
+# ---- out-of-core golden runs (spill tier vs in-memory tier) ----------------
+
+# Small enough that every blocking operator with non-trivial state
+# (the Q3 joins and sort, the high-cardinality groupings below) spills.
+SPILL_BUDGET = 16 << 10
+
+
+@pytest.fixture(scope="module")
+def tpchdb_budget():
+    db = startup(memory_budget=SPILL_BUDGET)
+    tpch.load_into(db, sf=SF, seed=3)
+    return db
+
+
+def _assert_golden(a: dict, b: dict, ctx: str):
+    for col in a:
+        if a[col].dtype == object:
+            assert list(map(str, a[col])) == list(map(str, b[col])), \
+                (ctx, col)
+        else:
+            np.testing.assert_array_equal(a[col], b[col],
+                                          err_msg=f"{ctx} {col}")
+
+
+@pytest.mark.parametrize("qname", ["q1", "q3"])
+@pytest.mark.outofcore
+def test_golden_under_budget(tpchdb, tpchdb_budget, qname):
+    """Q1/Q3 under a 16 KiB budget: byte-identical to the unbudgeted run."""
+    a = ALL_QUERIES[qname](tpchdb).execute().to_pydict()
+    b = ALL_QUERIES[qname](tpchdb_budget).execute().to_pydict()
+    _assert_golden(a, b, qname)
+
+
+@pytest.mark.outofcore
+def test_q1_style_spills_grouping_and_sort(tpchdb, tpchdb_budget):
+    """Q1 shape with a high-cardinality key (order-grain): the grouping
+    state and the sort both exceed the budget and must spill."""
+    from repro.core import Col, DateLit
+    q = lambda d: (d.scan("lineitem")
+                   .filter(Col("l_shipdate") <= DateLit("1998-09-02"))
+                   .group_by("l_orderkey")
+                   .agg(sum_qty=("sum", Col("l_quantity")),
+                        n=("count", None))
+                   .order_by(("sum_qty", True), "l_orderkey"))
+    before = tpchdb_budget.buffer_manager.stats.spilled_ops
+    _assert_golden(q(tpchdb).execute().to_pydict(),
+                   q(tpchdb_budget).execute().to_pydict(), "q1-style")
+    assert tpchdb_budget.buffer_manager.stats.spilled_ops - before >= 2
+    assert tpchdb_budget.buffer_manager.active_files == 0
+
+
+@pytest.mark.outofcore
+def test_q3_style_spills_every_blocking_op(tpchdb, tpchdb_budget):
+    """Q3 shape kept at order grain so join, grouping AND sort all carry
+    over-budget state -> all three blocking operators spill."""
+    from repro.core import Col
+    rev = Col("l_extendedprice") * (1 - Col("l_discount"))
+    q = lambda d: (d.scan("orders")
+                   .join(d.scan("lineitem"), left_on="o_orderkey",
+                         right_on="l_orderkey")
+                   .group_by("l_orderkey", "o_orderdate")
+                   .agg(revenue=("sum", rev))
+                   .order_by(("revenue", True), "l_orderkey"))
+    before = tpchdb_budget.buffer_manager.stats.spilled_ops
+    _assert_golden(q(tpchdb).execute().to_pydict(),
+                   q(tpchdb_budget).execute().to_pydict(), "q3-style")
+    assert tpchdb_budget.buffer_manager.stats.spilled_ops - before >= 3
+    assert tpchdb_budget.buffer_manager.active_files == 0
+    assert tpchdb_budget.buffer_manager.stats.peak <= SPILL_BUDGET

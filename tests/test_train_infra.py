@@ -62,8 +62,8 @@ def test_checkpoint_reshard_on_restore(tmp_path, rng):
     p = _params(rng)
     o = init_opt_state(p)
     save_checkpoint(str(tmp_path), 1, p, o)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("data",))
     sh = jax.tree.map(lambda x: NamedSharding(mesh, P()), {
         "params": p, "opt_state": o})
     p2, o2, _, _ = restore_checkpoint(str(tmp_path), shardings=sh)
