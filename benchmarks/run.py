@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_tpch    — Table 1 (TPC-H Q1-Q10, engine vs volcano row-store)
   bench_acs     — Fig. 7/8 (ACS wide-table load + statistics)
   bench_kernels — §3 hot-spot kernels
+  bench_spill   — out-of-core tier: spill codec ratio + prefetch overlap
 """
 
 from __future__ import annotations
@@ -17,12 +18,12 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: ingest,export,tpch,acs,kernels")
+                    help="comma list: ingest,export,tpch,acs,kernels,spill")
     ap.add_argument("--sf", type=float, default=0.01)
     ap.add_argument("--no-volcano", action="store_true")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
-        "ingest", "export", "tpch", "acs", "kernels"}
+        "ingest", "export", "tpch", "acs", "kernels", "spill"}
 
     print("name,us_per_call,derived")
     rows: list[str] = []
@@ -45,6 +46,10 @@ def main() -> None:
     if "kernels" in which:
         from .bench_kernels import run as r
         rows += r()
+        _flush(rows)
+    if "spill" in which:
+        from .bench_spill import run as r
+        rows += r(max(args.sf, 0.02))
         _flush(rows)
 
 

@@ -1,12 +1,22 @@
-"""Memory-budgeted buffer manager for out-of-core query execution.
+"""Memory-budgeted buffer manager + spill codec for out-of-core execution.
 
 The paper's pitch for MonetDBLite over in-memory analytics tools is that it
 keeps "features that are standard for RDBMSes, e.g. out-of-core query
-execution".  This module is the accounting half of that feature: a
-``BufferManager`` owns a configurable byte budget, tracks pinned operator
-working state (pin/unpin), and manages the lifecycle of spill files under
-the database directory (persistent mode) or a private temp directory
-(in-memory mode).
+execution".  This module is the accounting + storage half of that feature:
+
+* a ``BufferManager`` owns a configurable byte budget, tracks pinned
+  operator working state (pin/unpin), and manages the lifecycle of spill
+  files under the database directory (persistent mode) or a private temp
+  directory (in-memory mode);
+* a lightweight **spill codec** encodes every run-file stream in
+  self-describing blocks.  Integer streams (group keys, row indexes) use
+  frame-of-reference + byte-shuffle: values are rebased against the block
+  minimum, the delta bytes are transposed into per-significance planes, and
+  all-zero planes are dropped — sorted or clustered int64 keys typically
+  keep only one or two of their eight planes, cutting spill I/O 2-8x.
+  Float streams (and any block the codec cannot shrink) pass through raw.
+  Each block carries a header with the codec id, so readers never guess and
+  a stream can mix compressed and raw blocks.
 
 Contract with the spill operators (spill.py):
 
@@ -14,10 +24,12 @@ Contract with the spill operators (spill.py):
   buffer is dropped; ``peak`` therefore bounds tracked operator state, and
   tests assert ``peak <= budget``;
 * partition/run files are created through ``new_spill_file`` and registered
-  so a query abort or ``cleanup()`` can always reclaim them;
-* run files are read back as ``np.memmap`` views so the merge phase streams
-  through the OS page cache instead of pinned RAM — the same design as the
-  memory-mapped base columns (paper §3.1 "Memory Management").
+  so a query abort or ``cleanup()`` can always reclaim them; ``cleanup``
+  deletes *only* registered files — a db-owned spill directory may hold a
+  concurrent query's run files, which must survive;
+* ``SpillPartition.load`` decodes whole streams (pinned by the caller at
+  their decoded size), while ``iter_blocks`` streams a partition
+  block-by-block for re-partitioning passes that must stay under budget.
 
 ``budget=None`` (the default) means unlimited: no spilling, zero overhead —
 the paper's zero-config spirit.
@@ -30,9 +42,125 @@ import shutil
 import tempfile
 import threading
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterator, Optional
 
 import numpy as np
+
+# ---------------------------------------------------------------------------
+# spill codec: frame-of-reference + byte-shuffle, block-oriented
+# ---------------------------------------------------------------------------
+
+CODEC_RAW = 0        # payload = arr.tobytes()
+CODEC_FOR = 1        # payload = plane-bitmap byte + kept byte planes
+
+CODEC_NAMES = {"raw": CODEC_RAW, "for": CODEC_FOR}
+
+# Per-block header: codec id, row count, payload bytes, frame-of-reference
+# base value (meaningful for CODEC_FOR only).  Fixed little-endian layout so
+# files are self-describing; dtype itself comes from the stream declaration.
+_BLOCK_HDR = np.dtype([("codec", "<u1"), ("flags", "<u1"), ("n", "<u4"),
+                       ("payload", "<u8"), ("ref", "<i8")])
+BLOCK_HEADER_BYTES = _BLOCK_HDR.itemsize
+
+
+def encode_block(arr: np.ndarray, codec: int) -> bytes:
+    """Encode one stream chunk as a self-describing block.
+
+    ``codec`` is the *requested* codec; the block falls back to raw when the
+    dtype is not integral or the encoded form would not be smaller (the
+    header records what was actually used)."""
+    arr = np.ascontiguousarray(arr)
+    n = len(arr)
+    ref = 0
+    cid = CODEC_RAW
+    payload: Optional[bytes] = None
+    if codec == CODEC_FOR and arr.dtype.kind in "iu" and n > 0 \
+            and arr.dtype.itemsize in (2, 4, 8):
+        w = arr.dtype.itemsize
+        mask = (1 << (8 * w)) - 1
+        ref = int(arr.min())
+        if ref > (1 << 63) - 1:              # uint64 minima past int64 max:
+            ref -= 1 << 64                   # two's-complement into the i8
+                                             # header (decode re-masks)
+        # rebase in modular unsigned arithmetic: exact for any value mix,
+        # including the in-domain NULL sentinel -2**63
+        u = arr.view(np.dtype(f"u{w}"))
+        delta = u - np.asarray(ref & mask, dtype=f"u{w}")
+        # byte-shuffle: plane j holds byte j (LE significance) of every value
+        planes = delta.view(np.uint8).reshape(n, w).T
+        bitmap = 0
+        kept = []
+        for j in range(w):
+            if planes[j].any():
+                bitmap |= 1 << j
+                kept.append(np.ascontiguousarray(planes[j]).tobytes())
+        body = bytes([bitmap]) + b"".join(kept)
+        if len(body) < arr.nbytes:
+            payload, cid = body, CODEC_FOR
+    if payload is None:
+        payload = arr.tobytes()
+    hdr = np.zeros(1, dtype=_BLOCK_HDR)
+    hdr["codec"], hdr["n"] = cid, n
+    hdr["payload"], hdr["ref"] = len(payload), ref
+    return hdr.tobytes() + payload
+
+
+def _decode_payload(hdr, payload: bytes, dtype: np.dtype) -> np.ndarray:
+    n = int(hdr["n"])
+    if int(hdr["codec"]) == CODEC_RAW:
+        return np.frombuffer(payload, dtype=dtype, count=n)
+    w = dtype.itemsize
+    bitmap = payload[0]
+    mat = np.zeros((w, n), dtype=np.uint8)
+    p = 1
+    for j in range(w):
+        if (bitmap >> j) & 1:
+            mat[j] = np.frombuffer(payload, np.uint8, count=n, offset=p)
+            p += n
+    delta = np.ascontiguousarray(mat.T).reshape(-1).view(np.dtype(f"u{w}"))
+    ref = np.asarray(int(hdr["ref"]) & ((1 << (8 * w)) - 1), dtype=f"u{w}")
+    return (delta + ref).view(dtype)
+
+
+def decode_stream(data: bytes, dtype) -> np.ndarray:
+    """Decode a whole stream (concatenated blocks) back into one array."""
+    dtype = np.dtype(dtype)
+    parts = []
+    off, total = 0, len(data)
+    while off < total:
+        hdr = np.frombuffer(data, _BLOCK_HDR, count=1, offset=off)[0]
+        off += BLOCK_HEADER_BYTES
+        pl = int(hdr["payload"])
+        parts.append(_decode_payload(hdr, data[off:off + pl], dtype))
+        off += pl
+    if not parts:
+        return np.empty(0, dtype=dtype)
+    return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+
+def write_stream_block(f, arr: np.ndarray, codec: int,
+                       bufman: Optional["BufferManager"] = None) -> int:
+    """Encode + write one block; accounts raw vs stored bytes on ``bufman``."""
+    block = encode_block(arr, codec)
+    f.write(block)
+    if bufman is not None:
+        bufman.note_spilled(int(arr.nbytes), len(block))
+    return len(block)
+
+
+def read_stream_block(f, dtype) -> Optional[np.ndarray]:
+    """Read + decode the next block from an open file; None at EOF."""
+    hb = f.read(BLOCK_HEADER_BYTES)
+    if len(hb) < BLOCK_HEADER_BYTES:
+        return None
+    hdr = np.frombuffer(hb, _BLOCK_HDR)[0]
+    payload = f.read(int(hdr["payload"]))
+    return _decode_payload(hdr, payload, np.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# buffer manager
+# ---------------------------------------------------------------------------
 
 
 @dataclass
@@ -40,18 +168,32 @@ class BufferStats:
     pinned: int = 0              # bytes currently pinned
     peak: int = 0                # high-water mark of pinned bytes
     spill_count: int = 0         # spill files created
-    bytes_spilled: int = 0       # total bytes written to spill files
+    bytes_spilled: int = 0       # post-codec bytes actually written
+    bytes_spilled_raw: int = 0   # pre-codec (logical) spilled bytes
     spilled_ops: int = 0         # blocking operators that took the spill path
+    prefetch_hits: int = 0       # partitions served by the async prefetcher
+    repartitions: int = 0        # oversized partitions split recursively
+
+    @property
+    def bytes_spilled_compressed(self) -> int:
+        """Alias of ``bytes_spilled``, named for the raw/compressed pair."""
+        return self.bytes_spilled
 
 
 class BufferManager:
     """Byte-budget accounting + spill-file lifecycle for one database."""
 
     def __init__(self, budget: Optional[int] = None,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 codec: str = "for", prefetch: bool = True):
         if budget is not None and budget <= 0:
             raise ValueError(f"memory budget must be positive, got {budget}")
+        if codec not in CODEC_NAMES:
+            raise ValueError(f"spill_codec must be one of "
+                             f"{sorted(CODEC_NAMES)}, got {codec!r}")
         self.budget = budget
+        self.codec = CODEC_NAMES[codec]
+        self.prefetch = bool(prefetch)
         self._spill_dir = spill_dir          # created lazily on first spill
         self._owns_dir = spill_dir is None   # temp dir -> remove on cleanup
         self._dir_ready = False
@@ -117,15 +259,25 @@ class BufferManager:
             self.stats.spill_count += 1
         return path
 
-    def note_spilled(self, nbytes: int) -> None:
+    def note_spilled(self, raw_nbytes: int,
+                     stored_nbytes: Optional[int] = None) -> None:
+        """Record one spill write: logical (pre-codec) vs stored bytes."""
+        raw_nbytes = int(raw_nbytes)
+        stored = raw_nbytes if stored_nbytes is None else int(stored_nbytes)
         with self._lock:
-            self.stats.bytes_spilled += int(nbytes)
+            self.stats.bytes_spilled += stored
+            self.stats.bytes_spilled_raw += raw_nbytes
 
     def release_file(self, path: str) -> None:
         with self._lock:
             self._files.discard(path)
-        if os.path.exists(path):
+        # unlink outside the accounting lock (pin/unpin/note_spilled stay
+        # hot); a concurrent release of the same path is tolerated instead
+        # of raced-for — unlink errors on a missing file are expected
+        try:
             os.unlink(path)
+        except OSError:
+            pass
 
     @property
     def active_files(self) -> int:
@@ -133,40 +285,52 @@ class BufferManager:
 
     # ---- lifecycle ---------------------------------------------------------
     def cleanup(self) -> None:
-        """Delete every registered spill file (and the temp dir if owned)."""
+        """Delete every *registered* spill file (and the temp dir if owned).
+
+        A db-owned spill directory is shared by every connection of this
+        database: only files this manager registered are removed, never the
+        whole directory listing (a concurrent query's run files survive).
+        Stale files from a crashed process are reclaimed at startup instead
+        (``Storage.reclaim_spill``)."""
         with self._lock:
             files = list(self._files)
             self._files.clear()
         for p in files:
-            if os.path.exists(p):
-                os.unlink(p)
-        if self._dir_ready and self._spill_dir \
+            try:
+                os.unlink(p)       # tolerate a concurrent release_file win
+            except OSError:
+                pass
+        if self._owns_dir and self._dir_ready and self._spill_dir \
                 and os.path.isdir(self._spill_dir):
-            if self._owns_dir:
-                shutil.rmtree(self._spill_dir, ignore_errors=True)
-                self._dir_ready = False
-            else:
-                # db-owned spill dir: keep the directory, drop stale content
-                for name in os.listdir(self._spill_dir):
-                    try:
-                        os.unlink(os.path.join(self._spill_dir, name))
-                    except OSError:
-                        pass
+            shutil.rmtree(self._spill_dir, ignore_errors=True)
+            self._dir_ready = False
 
 
 class PartitionWriter:
     """Hash/range-partitioned spill writer: N partitions x M named streams.
 
-    Each (partition, stream) pair is one flat binary file of a fixed dtype;
-    ``append`` scatters row chunks to their partitions, ``finalize`` returns
-    per-partition readers.  This is the grace-hash fan-out file layout."""
+    Each (partition, stream) pair is one file of codec blocks of a fixed
+    dtype; ``append`` scatters row chunks to their partitions (one block per
+    touched stream per call, so blocks stay row-aligned across a
+    partition's streams), ``finalize`` returns per-partition readers, and
+    ``abort`` closes + releases everything after a mid-spool error.  This is
+    the grace-hash fan-out file layout.
+
+    Block granularity follows the caller's morsel: under very small budgets
+    a morsel scattered over many partitions makes small header-heavy
+    blocks, which is accepted — consolidating them would need a write
+    buffer of n_parts * block_bytes, i.e. exactly the memory the budget
+    denies (the repartition path coalesces its input blocks back up to a
+    morsel before re-scattering for the same reason)."""
 
     MAX_PARTITIONS = 64      # bounded fd usage; 64 * budget/4 input headroom
 
     def __init__(self, bufman: BufferManager, n_parts: int,
-                 streams: dict[str, np.dtype], hint: str = "part"):
+                 streams: dict[str, np.dtype], hint: str = "part",
+                 codec: Optional[int] = None):
         self.bufman = bufman
         self.n_parts = int(n_parts)
+        self.codec = bufman.codec if codec is None else int(codec)
         self.streams = {k: np.dtype(v) for k, v in streams.items()}
         self._paths = [{s: bufman.new_spill_file(f"{hint}{p}.{s}")
                         for s in streams} for p in range(self.n_parts)]
@@ -187,19 +351,29 @@ class PartitionWriter:
                 if h is None:
                     h = open(self._paths[p][s], "wb")
                     self._handles[p][s] = h
-                data = np.ascontiguousarray(
-                    arr[m].astype(self.streams[s], copy=False))
-                h.write(data.tobytes())
-                self.bufman.note_spilled(int(data.nbytes))
+                data = arr[m].astype(self.streams[s], copy=False)
+                write_stream_block(h, data, self.codec, self.bufman)
             self._rows[p] += n
 
-    def finalize(self) -> list["SpillPartition"]:
+    def _close(self) -> None:
         for hs in self._handles:
-            for h in hs.values():
+            for s, h in hs.items():
                 if h is not None:
                     h.close()
+                    hs[s] = None
+
+    def finalize(self) -> list["SpillPartition"]:
+        self._close()
         return [SpillPartition(self.bufman, self._paths[p], self.streams,
                                self._rows[p]) for p in range(self.n_parts)]
+
+    def abort(self) -> None:
+        """Error path: close handles and release every partition file, so a
+        query that dies mid-spool leaks nothing until db cleanup()."""
+        self._close()
+        for paths in self._paths:
+            for p in paths.values():
+                self.bufman.release_file(p)
 
 
 class SpillPartition:
@@ -214,26 +388,66 @@ class SpillPartition:
 
     @property
     def nbytes(self) -> int:
+        """Decoded (logical) size — what ``load`` materializes and what the
+        caller pins; the on-disk footprint may be smaller via the codec."""
         return sum(self.rows * dt.itemsize for dt in self.streams.values())
 
-    def load(self) -> dict[str, np.ndarray]:
-        """Read every stream into RAM (caller pins via ``pinned`` around the
-        partition's processing; empty partitions are zero-length arrays)."""
+    def read_streams(self) -> dict[str, bytes]:
+        """The I/O half of ``load``: raw (still-encoded) stream bytes.  The
+        async prefetcher runs this off-thread — plain file reads release the
+        GIL, whereas numpy decode work would contend with the consumer — and
+        the consumer decodes on arrival via ``decode_streams``."""
+        if self.rows == 0:
+            return {s: b"" for s in self.streams}
         out = {}
-        for s, dt in self.streams.items():
-            if self.rows == 0:
-                out[s] = np.empty(0, dtype=dt)
-            else:
-                out[s] = np.fromfile(self.paths[s], dtype=dt)
+        for s in self.streams:
+            with open(self.paths[s], "rb") as f:
+                out[s] = f.read()
         return out
+
+    def decode_streams(self, raw: dict[str, bytes]) -> dict[str, np.ndarray]:
+        """The CPU half of ``load`` (empty partitions are zero-length)."""
+        return {s: (np.empty(0, dtype=dt) if self.rows == 0
+                    else decode_stream(raw[s], dt))
+                for s, dt in self.streams.items()}
+
+    def load(self) -> dict[str, np.ndarray]:
+        """Read + decode every stream into RAM (caller pins via ``pinned``
+        around the partition's processing)."""
+        return self.decode_streams(self.read_streams())
+
+    def iter_blocks(self) -> Iterator[dict[str, np.ndarray]]:
+        """Stream the partition one row-aligned block at a time (bounded
+        memory) — the recursive-repartition path reads this way instead of
+        materializing an over-budget partition via ``load``."""
+        if self.rows == 0:
+            return
+        fs = {s: open(self.paths[s], "rb") for s in self.streams}
+        try:
+            while True:
+                blk = {}
+                for s, dt in self.streams.items():
+                    a = read_stream_block(fs[s], dt)
+                    if a is None:
+                        return
+                    blk[s] = a
+                yield blk
+        finally:
+            for f in fs.values():
+                f.close()
 
     def release(self) -> None:
         for p in self.paths.values():
             self.bufman.release_file(p)
 
 
-def choose_partitions(est_bytes: int, budget: int) -> int:
-    """Power-of-two partition count targeting ~budget/4 bytes/partition."""
+def choose_partitions(est_bytes: int, budget: Optional[int]) -> int:
+    """Power-of-two partition count targeting ~budget/4 bytes/partition.
+
+    An unlimited budget (None) never *needs* partitioning for memory; the
+    minimum fan-out keeps explicitly-requested spools valid."""
+    if budget is None:
+        return 2
     p = 1
     target = max(1, budget // 4)
     while p < PartitionWriter.MAX_PARTITIONS and est_bytes / p > target:

@@ -441,6 +441,14 @@ class ExecStats:
     imprint_blocks_skipped: int = 0
     rows_scanned: int = 0
     spilled_ops: int = 0          # blocking ops routed to the spill tier
+    # per-query spill-pipeline deltas (the BufferManager's counters are
+    # database-lifetime cumulative; these isolate this executor's programs).
+    # Best-effort under concurrency: the counters are shared per database,
+    # so queries spilling simultaneously cross-attribute each other's bytes.
+    bytes_spilled_raw: int = 0          # pre-codec bytes this query spilled
+    bytes_spilled_compressed: int = 0   # post-codec bytes actually written
+    prefetch_hits: int = 0              # partitions loaded ahead of use
+    repartitions: int = 0               # oversized partitions split again
 
 
 class Executor:
@@ -476,6 +484,10 @@ class Executor:
     def run_program(self, prog: MALProgram):
         regs: dict[str, Any] = {}
         result = None
+        bm = self.bufman
+        base = None if bm is None else (
+            bm.stats.bytes_spilled_raw, bm.stats.bytes_spilled_compressed,
+            bm.stats.prefetch_hits, bm.stats.repartitions)
         for ins in prog.instrs:
             self.stats.instructions += 1
             out = self._dispatch(ins, regs)
@@ -487,6 +499,13 @@ class Executor:
                 else:
                     for name, val in zip(ins.out, out):
                         regs[name] = val
+        if base is not None:
+            s = bm.stats
+            self.stats.bytes_spilled_raw += s.bytes_spilled_raw - base[0]
+            self.stats.bytes_spilled_compressed += \
+                s.bytes_spilled_compressed - base[1]
+            self.stats.prefetch_hits += s.prefetch_hits - base[2]
+            self.stats.repartitions += s.repartitions - base[3]
         return result
 
     # -- dispatch ------------------------------------------------------------

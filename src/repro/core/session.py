@@ -63,10 +63,13 @@ class Database:
     default ``None`` means unlimited: zero configuration, no spilling."""
 
     def __init__(self, path: Optional[str] = None,
-                 memory_budget: Optional[int] = None):
+                 memory_budget: Optional[int] = None,
+                 spill_codec: str = "for", spill_prefetch: bool = True):
         from .buffers import BufferManager
         self.path = path
         self.memory_budget = memory_budget
+        self.spill_codec = spill_codec
+        self.spill_prefetch = spill_prefetch
         self.catalog = Catalog()
         self.txn_manager = TransactionManager()
         self.index_manager = IndexManager(self)
@@ -74,15 +77,31 @@ class Database:
         self._shutdown = False
         if path is not None:
             self.storage = Storage(path)
-            if self.storage.has_catalog():
-                self.catalog.tables = self.storage.load()
-        # spill files live under the database directory in persistent mode
-        # (paper §3.2: everything the instance owns is under one dir), in a
-        # private temp dir otherwise; both are created lazily on first spill.
-        self.buffer_manager = BufferManager(
-            memory_budget,
-            spill_dir=self.storage.spill_path()
-            if self.storage is not None else None)
+            try:
+                self.storage.acquire_lock()    # on-disk, cross-process
+            except RuntimeError as e:
+                raise DatabaseError(str(e)) from None
+        try:
+            if self.storage is not None:
+                if self.storage.has_catalog():
+                    self.catalog.tables = self.storage.load()
+                # crash recovery: a previous process that died mid-query
+                # may have left run files behind; the lock just acquired
+                # proves no live owner exists, so the spill dir is stale.
+                self.storage.reclaim_spill()
+            # spill files live under the database directory in persistent
+            # mode (paper §3.2: everything the instance owns is under one
+            # dir), else a private temp dir; created lazily on first spill.
+            self.buffer_manager = BufferManager(
+                memory_budget,
+                spill_dir=self.storage.spill_path()
+                if self.storage is not None else None,
+                codec=spill_codec, prefetch=spill_prefetch)
+        except BaseException:
+            # a failed open must not leave the directory locked forever
+            if self.storage is not None:
+                self.storage.release_lock()
+            raise
 
     # ---- embedding API ------------------------------------------------------
     def connect(self) -> "Connection":
@@ -101,6 +120,8 @@ class Database:
         self.index_manager.imprints.clear()
         self.index_manager.order_indexes.clear()
         self.buffer_manager.cleanup()
+        if self.storage is not None:
+            self.storage.release_lock()
         self._shutdown = True
         if self.path is not None:
             with _open_lock:
@@ -230,23 +251,36 @@ class Database:
 
 
 def startup(path: Optional[str] = None,
-            memory_budget: Optional[int] = None) -> Database:
+            memory_budget: Optional[int] = None,
+            spill_codec: str = "for",
+            spill_prefetch: bool = True) -> Database:
     """monetdb_startup: persistent when ``path`` given, else in-memory.
 
     ``memory_budget`` (bytes, default unlimited) enables out-of-core
     execution: blocking operators spill partitioned run files to disk when
     their working state would exceed the budget.
 
+    ``spill_codec`` selects the run-file encoding: ``"for"`` (default,
+    frame-of-reference + byte-shuffle on integer streams — several-fold
+    smaller spills on sorted/clustered keys) or ``"raw"``.
+    ``spill_prefetch`` toggles double-buffered background loading of spill
+    partitions (default on); prefetched bytes stay pinned inside the
+    budget.  Both are no-ops until a query actually spills.
+
     Unlike the original (paper §5.1), several databases may be open in one
     process; a directory is single-owner ("database locked") to preserve the
     paper's on-disk locking contract."""
     if path is None:
-        return Database(None, memory_budget=memory_budget)
-    ap = os.path.abspath(path)
+        return Database(None, memory_budget=memory_budget,
+                        spill_codec=spill_codec,
+                        spill_prefetch=spill_prefetch)
+    ap = os.path.realpath(path)      # symlink aliases are the same database
     with _open_lock:
         if ap in _open_dirs and not _open_dirs[ap]._shutdown:
             raise DatabaseError(f"database locked: {ap}")
-        db = Database(ap, memory_budget=memory_budget)
+        db = Database(ap, memory_budget=memory_budget,
+                      spill_codec=spill_codec,
+                      spill_prefetch=spill_prefetch)
         _open_dirs[ap] = db
     return db
 
@@ -330,7 +364,9 @@ class Connection:
             return Result(Table(TableSchema("result", ()), {}))
         if self._txn is not None:
             # run against the snapshot: materialize a view database
-            snap_db = Database(None, memory_budget=db.memory_budget)
+            snap_db = Database(None, memory_budget=db.memory_budget,
+                               spill_codec=db.spill_codec,
+                               spill_prefetch=db.spill_prefetch)
             snap_db.catalog.tables = self._txn.tables()
             snap_db.index_manager = IndexManager(snap_db)
             snap_db.buffer_manager = db.buffer_manager   # shared accounting

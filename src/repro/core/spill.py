@@ -3,45 +3,74 @@
 The paper's differentiator over in-memory analytics tools (§1, §4) is that a
 real RDBMS keeps working when intermediates outgrow RAM.  This module gives
 the engine that tier: each blocking operator — group/aggregate, join, sort —
-has an external variant that hash/range-partitions its input into
-memmap-backed run files (via buffers.BufferManager) and streams partitions
-back through the existing column-at-a-time kernels.
+has an external variant that hash/range-partitions its input into run files
+(via buffers.BufferManager) and streams partitions back through the existing
+column-at-a-time kernels.
+
+Pipeline v2 adds three coordinated mechanisms on top of the PR-1 operators:
+
+* **codec'd run files** — every stream goes through the block codec in
+  buffers.py (frame-of-reference + byte-shuffle for integer key/index
+  streams, raw passthrough for floats), cutting spill I/O several-fold on
+  sorted/clustered keys;
+* **async partition prefetch** — ``PartitionPrefetcher`` double-buffers:
+  a background thread loads partition N+1's streams while partition N is
+  processed.  Prefetched bytes are pinned in the BufferManager *before* the
+  load starts, and a prefetch is skipped entirely when pinning it would
+  exceed the budget — so the tracked ``peak <= budget`` contract survives
+  overlap;
+* **recursive repartitioning** — a group-by partition still larger than the
+  budget is re-partitioned with fresh composite-key splitters sampled from
+  its own rows (streamed block-by-block, never fully resident), to a
+  bounded depth; at the depth bound, or when every sampled key tuple is
+  equal (one giant group — unsplittable by key), it falls back to
+  whole-partition processing.
 
 Result-identity contract (asserted in tests/test_outofcore.py): every
 operator here returns *bit-identical* output to its in-memory twin in
 executor.py:
 
-* ``grace_hash_groupby`` range-partitions on the first group key with
+* ``grace_hash_groupby`` range-partitions on the composite group key with
   sample-quantile splitters, so partitions are ordered and the concatenated
   per-partition dense gids reproduce the global lexicographic group order of
-  ``_factorize``/``_dense_gid``;
+  ``_factorize``/``_dense_gid`` — recursion refines ranges *within* a
+  parent partition, preserving that order;
 * ``partitioned_hash_join`` hash-partitions both sides, joins partition
   pairs with the same ``_join_codes``/``_hash_join`` kernels, then stably
   re-sorts the output pairs by left row — recovering the probe-order output
   of the in-memory join;
 * ``external_merge_sort`` sorts budget-sized runs with the same
   ``lexsort`` keys and merges with the original row index as tiebreaker,
-  which is exactly stable-lexsort order.
+  which is exactly stable-lexsort order.  Run files keep the row index as a
+  native int64 stream (not float64), so indexes past 2^53 survive
+  bit-exactly.
 
-Every partition's processing is wrapped in ``bufman.pinned`` so the tracked
+Every partition's processing happens under pinned accounting so the tracked
 high-water mark stays under the budget; run files are deleted as soon as
-their partition is consumed.
+their partition is consumed — and on *any* error, every still-registered
+run file of the operator is released immediately (not parked until db
+cleanup()).
 """
 
 from __future__ import annotations
 
 import heapq
 import pickle
+import queue
+import threading
 from typing import Iterable, Iterator, Optional
 
 import numpy as np
 
-from .buffers import (BufferManager, PartitionWriter, choose_morsel_rows,
-                      choose_partitions)
+from .buffers import (BufferManager, CODEC_RAW, PartitionWriter,
+                      SpillPartition, choose_morsel_rows, choose_partitions,
+                      read_stream_block, write_stream_block)
 from .expression import ExprResult
 from .storage import morsel_ranges
 
 _GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+
+MAX_REPARTITION_DEPTH = 3    # recursion bound; then whole-partition fallback
 
 
 def _key_row_bytes(results: list) -> int:
@@ -61,6 +90,136 @@ def _gather_result(r: ExprResult, arr: np.ndarray) -> ExprResult:
 
 
 # ---------------------------------------------------------------------------
+# double-buffered async partition prefetch
+# ---------------------------------------------------------------------------
+
+
+class PartitionPrefetcher:
+    """Iterate partition groups with one-group-ahead background loading.
+
+    ``groups`` is a list of tuples of SpillPartition (a group is everything
+    one processing step needs at once: a single partition for group-by, a
+    build/probe pair for join).  Iteration yields ``(group, arrs)`` where
+    ``arrs`` is the tuple of decoded stream dicts, loaded either by the
+    prefetch thread (counted in ``stats.prefetch_hits``) or synchronously.
+
+    Budget contract: a group's decoded bytes are pinned *before* its load
+    begins — by the main thread at queue time for prefetches — and a
+    prefetch is skipped when pinning the next group alongside the current
+    one would exceed the budget, so double-buffering never breaks
+    ``peak <= budget``.
+
+    File-lifecycle contract (spill-leak fix): the prefetcher owns release.
+    Each group's run files are released once the consumer finishes with it,
+    and if the consumer raises (or abandons the iterator), every remaining
+    group's files are released on generator close instead of lingering
+    until db cleanup().
+
+    Groups larger than ``max_load_bytes`` are yielded with ``arrs=None``
+    (not loaded, nothing pinned): the consumer streams or re-partitions
+    them instead of materializing an over-budget load.
+    """
+
+    def __init__(self, bufman: BufferManager, groups: list[tuple],
+                 max_load_bytes: Optional[int] = None):
+        self.bufman = bufman
+        self.groups = groups
+        self.max_load_bytes = max_load_bytes
+        self._consumed = 0
+        self._jobs: Optional[queue.Queue] = None
+        self._worker: Optional[threading.Thread] = None
+
+    def _oversized(self, nbytes: int) -> bool:
+        return self.max_load_bytes is not None and nbytes > self.max_load_bytes
+
+    # one persistent daemon worker per prefetcher (started lazily, stopped
+    # on generator close): at most one job is ever outstanding, and reusing
+    # the thread keeps per-partition overhead to an event handoff
+    def _submit(self, group: tuple) -> tuple[dict, threading.Event]:
+        if self._worker is None:
+            self._jobs = queue.Queue()
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+        box: dict = {}
+        done = threading.Event()
+        self._jobs.put((group, box, done))
+        return box, done
+
+    def _run(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                return
+            group, box, done = job
+            # I/O only: raw stream bytes.  File reads release the GIL, so
+            # this genuinely overlaps the consumer; decoding (GIL-bound
+            # numpy) would contend, so it happens at consumption instead.
+            try:
+                box["raw"] = tuple(p.read_streams() for p in group)
+            except BaseException as e:           # surfaced on the main thread
+                box["err"] = e
+            done.set()
+
+    def __iter__(self):
+        bm = self.bufman
+        pend = None                  # (pinned_bytes, result box, done event)
+        try:
+            for i, group in enumerate(self.groups):
+                self._consumed = i
+                if pend is not None:
+                    pnb, box, done = pend
+                    pend = None
+                    done.wait()
+                    if "err" in box:
+                        bm.unpin(pnb)
+                        raise box["err"]
+                    try:
+                        arrs = tuple(p.decode_streams(rb) for p, rb
+                                     in zip(group, box["raw"]))
+                    except BaseException:
+                        bm.unpin(pnb)
+                        raise
+                    bm.stats.prefetch_hits += 1
+                else:
+                    nb = sum(p.nbytes for p in group)
+                    if self._oversized(nb):
+                        pnb, arrs = 0, None
+                    else:
+                        pnb = bm.pin(nb)
+                        try:
+                            arrs = tuple(p.load() for p in group)
+                        except BaseException:
+                            bm.unpin(pnb)
+                            raise
+                # never queue ahead of an oversized group: its consumer
+                # needs the remaining budget headroom to repartition
+                if bm.prefetch and arrs is not None \
+                        and i + 1 < len(self.groups):
+                    nnb = sum(p.nbytes for p in self.groups[i + 1])
+                    if not self._oversized(nnb) and not bm.would_exceed(nnb):
+                        bm.pin(nnb)
+                        box, done = self._submit(self.groups[i + 1])
+                        pend = (nnb, box, done)
+                try:
+                    yield group, arrs
+                finally:
+                    bm.unpin(pnb)
+                    for p in group:
+                        p.release()
+                self._consumed = i + 1
+        finally:
+            if pend is not None:
+                pnb, box, done = pend
+                done.wait()
+                bm.unpin(pnb)
+            if self._worker is not None:
+                self._jobs.put(None)         # stop the worker thread
+            for group in self.groups[self._consumed:]:
+                for p in group:
+                    p.release()              # release_file is idempotent
+
+
+# ---------------------------------------------------------------------------
 # grace-hash aggregation (range-partitioned, group-order preserving)
 # ---------------------------------------------------------------------------
 
@@ -73,9 +232,8 @@ def _lex_float(arr: np.ndarray) -> np.ndarray:
     return np.where(np.isnan(f), np.inf, f)
 
 
-def _composite_splitters(key_arrays: list, idx: np.ndarray,
-                         n_parts: int) -> np.ndarray:
-    """Sample-quantile splitter *tuples* over the full group key.
+def _splitters_from_sample(cols: list[np.ndarray], n_parts: int) -> np.ndarray:
+    """Sample-quantile splitter *tuples* over already-normalized key columns.
 
     Partitioning on the composite key (not just the first column) keeps
     partitions balanced when the leading key is low-cardinality — e.g.
@@ -83,16 +241,25 @@ def _composite_splitters(key_arrays: list, idx: np.ndarray,
     also stay balanced when the domain holds extreme values such as the
     in-domain NULL sentinel ``-2**63``.  Returns an (n_splitters, n_keys)
     matrix of lexicographically ascending, deduplicated boundary tuples."""
+    if n_parts <= 1 or len(cols[0]) == 0:
+        return np.empty((0, len(cols)), dtype=np.float64)
+    order = np.lexsort(tuple(reversed(cols)))
+    mat = np.stack([c[order] for c in cols], axis=1)
+    n_samp = len(cols[0])
+    picks = (np.arange(1, n_parts) * n_samp) // n_parts
+    splitters = mat[np.clip(picks, 0, n_samp - 1)]
+    return np.unique(splitters, axis=0)
+
+
+def _composite_splitters(key_arrays: list, idx: np.ndarray,
+                         n_parts: int) -> np.ndarray:
+    """Splitters from a strided sample of the selected rows (spool pass)."""
     if n_parts <= 1:
         return np.empty((0, len(key_arrays)), dtype=np.float64)
     stride = max(1, len(idx) // 65536)
     samp = idx[::stride]
-    cols = [_lex_float(a[samp]) for a in key_arrays]
-    order = np.lexsort(tuple(reversed(cols)))
-    mat = np.stack([c[order] for c in cols], axis=1)
-    picks = (np.arange(1, n_parts) * len(samp)) // n_parts
-    splitters = mat[np.clip(picks, 0, len(samp) - 1)]
-    return np.unique(splitters, axis=0)
+    return _splitters_from_sample([_lex_float(a[samp]) for a in key_arrays],
+                                  n_parts)
 
 
 def _composite_partition(key_cols: list, splitters: np.ndarray) -> np.ndarray:
@@ -111,6 +278,105 @@ def _composite_partition(key_cols: list, splitters: np.ndarray) -> np.ndarray:
     return part
 
 
+def _groupby_arrays(keys: list, arrs: dict) -> tuple:
+    """Factorize one loaded partition; returns (gid, n_groups, idx_rows)."""
+    from .executor import _dense_gid, _factorize
+
+    sub_results = [_gather_result(k, arrs[f"k{i}"])
+                   for i, k in enumerate(keys)]
+    codes, _ = _factorize(sub_results)
+    gid, n_local, _ = _dense_gid(codes)
+    return gid, n_local, arrs["idx"]
+
+
+def _repartition_groupby(keys: list, partn: SpillPartition,
+                         bufman: BufferManager, depth: int) -> tuple:
+    """Recursively split one over-budget partition (skew-proofing).
+
+    Fresh splitters come from a strided sample of the partition's *own*
+    rows — far finer resolution than the global spool pass, so anything
+    with more than one distinct key tuple splits.  The partition is read
+    block-by-block (never fully resident); sub-partitions recurse through
+    the same prefetching consumer.  Whole-partition fallback at the depth
+    bound or when the sample is a single key tuple (one giant group)."""
+    nk = len(keys)
+    budget = bufman.budget
+    if depth >= MAX_REPARTITION_DEPTH:        # before the sampling scan:
+        with bufman.pinned(partn.nbytes):     # at the bound the sample
+            return _groupby_arrays(keys, partn.load())   # would be unused
+    n_parts = choose_partitions(partn.nbytes, budget)
+
+    stride = max(1, partn.rows // 65536)
+    samples: list[list[np.ndarray]] = [[] for _ in range(nk)]
+    pos = 0
+    for blk in partn.iter_blocks():
+        bn = len(blk["idx"])
+        take = np.arange((-pos) % stride, bn, stride)
+        if len(take):
+            for i in range(nk):
+                samples[i].append(_lex_float(blk[f"k{i}"][take]))
+        pos += bn
+    cols = [np.concatenate(s) if s else np.empty(0) for s in samples]
+    if len(cols[0]) == 0 \
+            or len(np.unique(np.stack(cols, axis=1), axis=0)) <= 1:
+        # one distinct key tuple = one giant group: unsplittable by key,
+        # so re-scattering would be a no-op rewrite — process whole
+        with bufman.pinned(partn.nbytes):
+            return _groupby_arrays(keys, partn.load())
+    splitters = _splitters_from_sample(cols, n_parts)
+
+    bufman.stats.repartitions += 1
+    writer = PartitionWriter(bufman, n_parts, dict(partn.streams),
+                             hint=f"grp{depth}")
+    # coalesce the parent's (possibly tiny) blocks up to one morsel before
+    # scattering, so sub-partition files get real blocks, not confetti
+    row_bytes = sum(dt.itemsize for dt in partn.streams.values())
+    morsel = choose_morsel_rows(row_bytes, budget)
+
+    def _scatter(buf: list) -> None:
+        blk = {s: (buf[0][s] if len(buf) == 1 else
+                   np.concatenate([b[s] for b in buf]))
+               for s in partn.streams}
+        part = _composite_partition(
+            [_lex_float(blk[f"k{i}"]) for i in range(nk)], splitters)
+        with bufman.pinned(sum(a.nbytes for a in blk.values())):
+            writer.append(part, blk)
+
+    try:
+        buf, brows = [], 0
+        for blk in partn.iter_blocks():
+            buf.append(blk)
+            brows += len(blk["idx"])
+            if brows >= morsel:
+                _scatter(buf)
+                buf, brows = [], 0
+        if buf:
+            _scatter(buf)
+    except BaseException:
+        writer.abort()
+        raise
+    subs = writer.finalize()
+    partn.release()                  # parent file no longer needed
+
+    out_gid, out_idx = [], []
+    offset = 0
+    for (sp,), arrs in PartitionPrefetcher(bufman, [(p,) for p in subs],
+                                           max_load_bytes=budget):
+        if sp.rows == 0:
+            continue
+        if arrs is None:
+            gid, n_local, pidx = _repartition_groupby(keys, sp, bufman,
+                                                      depth + 1)
+        else:
+            gid, n_local, pidx = _groupby_arrays(keys, arrs[0])
+        out_gid.append(gid + offset)
+        out_idx.append(pidx)
+        offset += n_local
+    if not out_gid:
+        return np.zeros(0, dtype=np.int64), 0, np.zeros(0, dtype=np.int64)
+    return (np.concatenate(out_gid), int(offset), np.concatenate(out_idx))
+
+
 def grace_hash_groupby(keys: list, idx: np.ndarray, bufman: BufferManager):
     """External GROUP BY: returns the same ``(gid, n_groups, idx)`` triple as
     the in-memory ``_op_group``, with identical group numbering.
@@ -121,8 +387,6 @@ def grace_hash_groupby(keys: list, idx: np.ndarray, bufman: BufferManager):
     offset.  Equal key tuples always share a partition, and NaN keys land
     after finite values — matching ``np.unique``'s NaN-last order.
     """
-    from .executor import _dense_gid, _factorize
-
     n = len(idx)
     row_bytes = _key_row_bytes(keys) + 8
     n_parts = choose_partitions(n * row_bytes, bufman.budget)
@@ -134,33 +398,36 @@ def grace_hash_groupby(keys: list, idx: np.ndarray, bufman: BufferManager):
     for i, k in enumerate(keys):
         streams[f"k{i}"] = np.asarray(k.values).dtype
     writer = PartitionWriter(bufman, n_parts, streams, hint="grp")
-    for s, e in morsel_ranges(n, morsel):
-        sub = idx[s:e]
-        part = _composite_partition([_lex_float(ka[sub])
-                                     for ka in key_arrays], splitters)
-        chunks = {"idx": sub}
-        for i, ka in enumerate(key_arrays):
-            chunks[f"k{i}"] = ka[sub]
-        with bufman.pinned(sub.nbytes + sum(
-                ka[sub].nbytes for ka in key_arrays)):
-            writer.append(part, chunks)
+    try:
+        for s, e in morsel_ranges(n, morsel):
+            sub = idx[s:e]
+            part = _composite_partition([_lex_float(ka[sub])
+                                         for ka in key_arrays], splitters)
+            chunks = {"idx": sub}
+            for i, ka in enumerate(key_arrays):
+                chunks[f"k{i}"] = ka[sub]
+            with bufman.pinned(sub.nbytes + sum(
+                    ka[sub].nbytes for ka in key_arrays)):
+                writer.append(part, chunks)
+    except BaseException:
+        writer.abort()
+        raise
 
     out_gid, out_idx = [], []
     offset = 0
-    for partn in writer.finalize():
+    groups = [(p,) for p in writer.finalize()]
+    for (partn,), arrs in PartitionPrefetcher(bufman, groups,
+                                              max_load_bytes=bufman.budget):
         if partn.rows == 0:
-            partn.release()
             continue
-        with bufman.pinned(partn.nbytes):
-            arrs = partn.load()
-            sub_results = [_gather_result(k, arrs[f"k{i}"])
-                           for i, k in enumerate(keys)]
-            codes, _ = _factorize(sub_results)
-            gid, n_local, _ = _dense_gid(codes)
-            out_gid.append(gid + offset)
-            out_idx.append(arrs["idx"])
-            offset += n_local
-        partn.release()
+        if arrs is None:             # still over budget: recursive split
+            gid, n_local, pidx = _repartition_groupby(keys, partn, bufman,
+                                                      depth=1)
+        else:
+            gid, n_local, pidx = _groupby_arrays(keys, arrs[0])
+        out_gid.append(gid + offset)
+        out_idx.append(pidx)
+        offset += n_local
     if not out_gid:
         return np.zeros(0, dtype=np.int64), 0, np.zeros(0, dtype=np.int64)
     return (np.concatenate(out_gid).astype(np.int64), int(offset),
@@ -209,14 +476,19 @@ def _spool_side(results: list, sel: np.ndarray, bufman: BufferManager,
     writer = PartitionWriter(bufman, n_parts, streams, hint=hint)
     arrays = [np.asarray(r.values) for r in results]
     first = arrays[0]
-    for s, e in morsel_ranges(len(sel), morsel):
-        sub = sel[s:e]
-        part = _hash_partition(first[sub], n_parts, as_float)
-        chunks = {"idx": sub}
-        for i, a in enumerate(arrays):
-            chunks[f"k{i}"] = a[sub]
-        with bufman.pinned(sub.nbytes + sum(a[sub].nbytes for a in arrays)):
-            writer.append(part, chunks)
+    try:
+        for s, e in morsel_ranges(len(sel), morsel):
+            sub = sel[s:e]
+            part = _hash_partition(first[sub], n_parts, as_float)
+            chunks = {"idx": sub}
+            for i, a in enumerate(arrays):
+                chunks[f"k{i}"] = a[sub]
+            with bufman.pinned(sub.nbytes
+                               + sum(a[sub].nbytes for a in arrays)):
+                writer.append(part, chunks)
+    except BaseException:
+        writer.abort()
+        raise
     return writer.finalize()
 
 
@@ -236,39 +508,48 @@ def partitioned_hash_join(lres: list, rres: list, lsel: np.ndarray,
     n_parts = choose_partitions(est, bufman.budget)
 
     lparts = _spool_side(lres, lsel, bufman, n_parts, as_float, "jl")
-    rparts = _spool_side(rres, rsel, bufman, n_parts, as_float, "jr")
+    try:
+        rparts = _spool_side(rres, rsel, bufman, n_parts, as_float, "jr")
+    except BaseException:
+        for lp in lparts:
+            lp.release()
+        raise
 
-    out_l, out_r = [], []
+    # an empty probe side yields nothing for any join flavor: drop those
+    # pairs up front so the prefetcher never loads (or pins) their build side
+    groups = []
     for lp, rp in zip(lparts, rparts):
         if lp.rows == 0:
-            lp.release(), rp.release()
-            continue
-        with bufman.pinned(lp.nbytes + rp.nbytes):
-            larr = lp.load()
-            rarr = rp.load()
-            lidx_g = larr["idx"]
-            ridx_g = rarr["idx"]
-            if rp.rows == 0:
-                if how == "anti":
-                    out_l.append(lidx_g)
-                elif how == "left":
-                    out_l.append(lidx_g)
-                    out_r.append(np.full(len(lidx_g), -1, dtype=np.int64))
-                # inner / semi: no matches in this partition
+            lp.release()
+            rp.release()
+        else:
+            groups.append((lp, rp))
+
+    out_l, out_r = [], []
+    for (lp, rp), arrs in PartitionPrefetcher(bufman, groups):
+        larr, rarr = arrs
+        lidx_g = larr["idx"]
+        ridx_g = rarr["idx"]
+        if rp.rows == 0:
+            if how == "anti":
+                out_l.append(lidx_g)
+            elif how == "left":
+                out_l.append(lidx_g)
+                out_r.append(np.full(len(lidx_g), -1, dtype=np.int64))
+            # inner / semi: no matches in this partition
+        else:
+            lsub = [_gather_result(r, larr[f"k{i}"])
+                    for i, r in enumerate(lres)]
+            rsub = [_gather_result(r, rarr[f"k{i}"])
+                    for i, r in enumerate(rres)]
+            lc, rc, _, _ = _join_codes(lsub, rsub, nk)
+            lidx, ridx = _hash_join(lc, rc, how)
+            if how in ("semi", "anti"):
+                out_l.append(lidx_g[lidx])
             else:
-                lsub = [_gather_result(r, larr[f"k{i}"])
-                        for i, r in enumerate(lres)]
-                rsub = [_gather_result(r, rarr[f"k{i}"])
-                        for i, r in enumerate(rres)]
-                lc, rc, _, _ = _join_codes(lsub, rsub, nk)
-                lidx, ridx = _hash_join(lc, rc, how)
-                if how in ("semi", "anti"):
-                    out_l.append(lidx_g[lidx])
-                else:
-                    out_l.append(lidx_g[lidx])
-                    out_r.append(np.where(
-                        ridx < 0, -1, ridx_g[np.maximum(ridx, 0)]))
-        lp.release(), rp.release()
+                out_l.append(lidx_g[lidx])
+                out_r.append(np.where(
+                    ridx < 0, -1, ridx_g[np.maximum(ridx, 0)]))
 
     gl = np.concatenate(out_l).astype(np.int64) if out_l \
         else np.zeros(0, dtype=np.int64)
@@ -289,55 +570,100 @@ def partitioned_hash_join(lres: list, rres: list, lsel: np.ndarray,
 
 
 SORT_MERGE_FAN_IN = 64      # max run files open per merge pass (fd bound)
+SORT_BLOCK_ROWS = 1024      # rows per codec block inside a run file
 
 
-def _write_sort_run(bufman: BufferManager, run: np.ndarray) -> str:
-    """Raw float64 row-major run file: appendable during cascade merges."""
+def _append_sort_blocks(f, bufman: BufferManager, key_cols: list,
+                        idx: np.ndarray) -> None:
+    """Write sorted rows as row-aligned codec blocks: each key column spills
+    raw float64, the row-index column spills as FOR-shuffled *int64* —
+    end-to-end integer, so indexes past 2^53 round-trip bit-exactly (the
+    old float64 row matrix silently lost precision there)."""
+    for s, e in morsel_ranges(len(idx), SORT_BLOCK_ROWS):
+        for a in key_cols:
+            write_stream_block(f, a[s:e], CODEC_RAW, bufman)
+        write_stream_block(f, idx[s:e], bufman.codec, bufman)
+
+
+def _write_sort_run(bufman: BufferManager, key_cols: list,
+                    idx: np.ndarray) -> str:
     path = bufman.new_spill_file("sortrun")
     with open(path, "wb") as f:
-        f.write(np.ascontiguousarray(run).tobytes())
-    bufman.note_spilled(int(run.nbytes))
+        _append_sort_blocks(f, bufman, key_cols, idx)
     return path
 
 
-def _stream_sort_run(path: str, n_cols: int) -> Iterator[tuple]:
-    mm = np.memmap(path, dtype=np.float64,
-                   mode="r").reshape(-1, n_cols)   # OS-paged, not pinned
-    for i in range(mm.shape[0]):
-        row = mm[i]
-        yield tuple(float(v) for v in row[:-1]) + (int(row[-1]),)
+def _iter_sort_run(path: str, n_keys: int) -> Iterator[tuple]:
+    """Stream one run as (key..., idx) tuples, decoding one bounded block at
+    a time (the merge keeps FAN_IN blocks resident, not FAN_IN runs)."""
+    with open(path, "rb") as f:
+        while True:
+            cols = []
+            for _ in range(n_keys):
+                a = read_stream_block(f, np.float64)
+                if a is None:
+                    return
+                cols.append(a)
+            idx = read_stream_block(f, np.int64)
+            for i in range(len(idx)):
+                yield tuple(float(c[i]) for c in cols) + (int(idx[i]),)
+
+
+def _run_index_column(path: str, n_keys: int) -> np.ndarray:
+    """Read only the int64 index stream of a run (single-run fast path)."""
+    out = []
+    with open(path, "rb") as f:
+        while True:
+            for _ in range(n_keys):
+                if read_stream_block(f, np.float64) is None:
+                    if not out:
+                        return np.zeros(0, dtype=np.int64)
+                    return out[0] if len(out) == 1 else np.concatenate(out)
+            out.append(read_stream_block(f, np.int64))
+
+
+def _flush_merge_rows(f, bufman: BufferManager, buf: list,
+                      n_keys: int) -> None:
+    mat = np.asarray([t[:-1] for t in buf],
+                     dtype=np.float64).reshape(len(buf), n_keys)
+    idx = np.asarray([t[-1] for t in buf], dtype=np.int64)
+    _append_sort_blocks(
+        f, bufman, [np.ascontiguousarray(mat[:, j]) for j in range(n_keys)],
+        idx)
 
 
 def external_merge_sort(keys: list, descs, limit: Optional[int],
                         bufman: BufferManager) -> np.ndarray:
     """External ORDER BY: returns the identical index vector np.lexsort
     would.  Budget-sized runs are lexsorted with the same float sort keys,
-    spilled as ``(rows, n_keys+1)`` row-major float64 run files (last
-    column = original row index), then merged with the row index as
-    tiebreaker — which reproduces stable-lexsort order exactly.  When the
-    run count exceeds ``SORT_MERGE_FAN_IN``, cascade passes merge groups of
-    runs into longer runs first, bounding open file descriptors."""
+    spilled as block-encoded column streams (keys + int64 row index), then
+    merged with the row index as tiebreaker — which reproduces
+    stable-lexsort order exactly.  When the run count exceeds
+    ``SORT_MERGE_FAN_IN``, cascade passes merge groups of runs into longer
+    runs first, bounding open file descriptors.  Every file created here —
+    including half-written cascade outputs — is released on any exit."""
     from .executor import _sort_key_float
 
     n = len(np.asarray(keys[0].values))
-    n_cols = len(keys) + 1
-    row_bytes = 8 * n_cols
+    n_keys = len(keys)
+    row_bytes = 8 * (n_keys + 1)
     if bufman.budget is not None:
         run_rows = max(64, (bufman.budget // 2) // row_bytes)
     else:
-        run_rows = n
-    paths = []
+        run_rows = max(n, 1)
+    live: list[str] = []
     try:
+        paths = []
         for s, e in morsel_ranges(n, run_rows):
             arrs = [_sort_key_float(_slice_result(r, slice(s, e)), d)
                     for r, d in zip(keys, descs)]
             with bufman.pinned((e - s) * row_bytes):
                 local = np.lexsort(tuple(reversed(arrs)))
-                run = np.empty((e - s, n_cols), dtype=np.float64)
-                for j, a in enumerate(arrs):
-                    run[:, j] = a[local]
-                run[:, -1] = (s + local).astype(np.float64)
-                paths.append(_write_sort_run(bufman, run))
+                key_cols = [a[local] for a in arrs]
+                idx = (s + local).astype(np.int64)
+                path = _write_sort_run(bufman, key_cols, idx)
+                live.append(path)
+                paths.append(path)
 
         # cascade: collapse groups of runs until one merge pass suffices
         while len(paths) > SORT_MERGE_FAN_IN:
@@ -348,43 +674,36 @@ def external_merge_sort(keys: list, descs, limit: Optional[int],
                     next_paths.append(group[0])
                     continue
                 out_path = bufman.new_spill_file("sortmerge")
-                written = 0
+                live.append(out_path)
                 with open(out_path, "wb") as f:
                     buf = []
                     for item in heapq.merge(
-                            *(_stream_sort_run(p, n_cols) for p in group)):
+                            *(_iter_sort_run(p, n_keys) for p in group)):
                         buf.append(item)
                         if len(buf) >= 4096:
-                            b = np.asarray(buf, dtype=np.float64)
-                            f.write(b.tobytes())
-                            written += b.nbytes
+                            _flush_merge_rows(f, bufman, buf, n_keys)
                             buf = []
                     if buf:
-                        b = np.asarray(buf, dtype=np.float64)
-                        f.write(b.tobytes())
-                        written += b.nbytes
-                bufman.note_spilled(written)
+                        _flush_merge_rows(f, bufman, buf, n_keys)
                 for p in group:
                     bufman.release_file(p)
                 next_paths.append(out_path)
             paths = next_paths
 
         if len(paths) == 1:
-            mm = np.memmap(paths[0], dtype=np.float64,
-                           mode="r").reshape(-1, n_cols)
-            idx = np.asarray(mm[:, -1], dtype=np.int64)
+            idx = _run_index_column(paths[0], n_keys)
             return idx[:limit] if limit is not None else idx
 
         out = []
         want = n if limit is None else min(limit, n)
-        for item in heapq.merge(*(_stream_sort_run(p, n_cols)
+        for item in heapq.merge(*(_iter_sort_run(p, n_keys)
                                   for p in paths)):
             out.append(item[-1])
             if len(out) >= want:
                 break
         return np.asarray(out, dtype=np.int64)
     finally:
-        for p in paths:
+        for p in live:
             bufman.release_file(p)
 
 
@@ -394,37 +713,50 @@ def external_merge_sort(keys: list, descs, limit: Optional[int],
 
 
 def spooled_row_groups(rows: Iterable[dict], key_fn, bufman: BufferManager,
-                       n_parts: int = 16) -> Iterator[tuple]:
+                       n_parts: Optional[int] = None,
+                       est_bytes: int = 0) -> Iterator[tuple]:
     """Out-of-core grouping for the row-at-a-time volcano engine: spool rows
     to hash partitions (pickled batches), then yield ``(key, rows)`` one
     partition at a time.  A group lives entirely in one partition, so the
-    caller can aggregate and discard each group's rows immediately."""
+    caller can aggregate and discard each group's rows immediately.
+
+    The partition count derives from the caller's input estimate and the
+    budget (``choose_partitions``) unless given explicitly; every partition
+    file is released even when the input iterator or the consumer raises."""
+    if n_parts is None:
+        n_parts = choose_partitions(int(est_bytes), bufman.budget)
     paths = [bufman.new_spill_file(f"volrows{p}") for p in range(n_parts)]
-    handles = [open(p, "wb") for p in paths]
     try:
-        batches: list[list] = [[] for _ in range(n_parts)]
-        for row in rows:
-            p = hash(key_fn(row)) % n_parts
-            batches[p].append(row)
-            if len(batches[p]) >= 1024:
-                pickle.dump(batches[p], handles[p])
-                batches[p] = []
+        handles = [open(p, "wb") for p in paths]
+        try:
+            batches: list[list] = [[] for _ in range(n_parts)]
+            for row in rows:
+                p = hash(key_fn(row)) % n_parts
+                batches[p].append(row)
+                if len(batches[p]) >= 1024:
+                    pickle.dump(batches[p], handles[p])
+                    batches[p] = []
+            for p in range(n_parts):
+                if batches[p]:
+                    pickle.dump(batches[p], handles[p])
+        finally:
+            for h in handles:
+                bufman.note_spilled(h.tell())
+                h.close()
         for p in range(n_parts):
-            if batches[p]:
-                pickle.dump(batches[p], handles[p])
+            groups: dict = {}
+            with open(paths[p], "rb") as f:
+                while True:
+                    try:
+                        batch = pickle.load(f)
+                    except EOFError:
+                        break
+                    for row in batch:
+                        groups.setdefault(key_fn(row), []).append(row)
+            bufman.release_file(paths[p])
+            yield from groups.items()
     finally:
-        for p, h in enumerate(handles):
-            bufman.note_spilled(h.tell())
-            h.close()
-    for p in range(n_parts):
-        groups: dict = {}
-        with open(paths[p], "rb") as f:
-            while True:
-                try:
-                    batch = pickle.load(f)
-                except EOFError:
-                    break
-                for row in batch:
-                    groups.setdefault(key_fn(row), []).append(row)
-        bufman.release_file(paths[p])
-        yield from groups.items()
+        # mid-spool error, consumer error, or abandoned generator: reclaim
+        # every remaining partition file now, not at db cleanup()
+        for p in paths:
+            bufman.release_file(p)

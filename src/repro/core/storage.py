@@ -127,11 +127,68 @@ class Storage:
         os.makedirs(os.path.join(root, DATA_DIR), exist_ok=True)
         os.makedirs(os.path.join(root, WAL_DIR), exist_ok=True)
         self._wal_seq = 0
+        self._locked = False
+        self._lock_fd = -1
+
+    # -- on-disk lock --------------------------------------------------------
+    def acquire_lock(self) -> None:
+        """Single-owner directory lock (paper §3.2 "database locked"), held
+        *across processes* via flock(2) on ``<root>/LOCK`` — the in-process
+        registry in session.py only sees this process.  The kernel
+        arbitrates concurrent opens atomically, conflicts are detected even
+        through symlink aliases of the directory, and a crashed owner's
+        lock evaporates with its file descriptors — so no stale-pid
+        takeover protocol exists to race on, and ``reclaim_spill`` can
+        never destroy a live owner's run files.  The pid written inside is
+        informational (error messages only)."""
+        import fcntl
+        path = os.path.join(self.root, "LOCK")
+        fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            try:
+                owner = os.read(fd, 64).decode(errors="replace").strip()
+            except OSError:
+                owner = ""
+            os.close(fd)
+            raise RuntimeError(
+                f"database locked by process {owner or '?'}: {self.root}")
+        os.ftruncate(fd, 0)
+        os.write(fd, str(os.getpid()).encode())
+        self._lock_fd = fd
+        self._locked = True
+
+    def release_lock(self) -> None:
+        """Closing the fd drops the flock — that *is* the release.  The
+        LOCK file itself is never unlinked: removing it would let one
+        waiter lock the ghost inode while another locks a fresh file, and
+        both believe they own the directory."""
+        if not self._locked:
+            return
+        self._locked = False
+        try:
+            os.close(self._lock_fd)
+        except OSError:
+            pass
 
     def spill_path(self) -> str:
         """Directory for out-of-core run files (created lazily by the
         buffer manager; cleared on shutdown)."""
         return os.path.join(self.root, SPILL_DIR)
+
+    def reclaim_spill(self) -> None:
+        """Delete stale run files left by a crashed process.  Called at
+        database open *after* ``acquire_lock`` succeeded, so no live
+        instance — in this process or any other — can own files here."""
+        d = self.spill_path()
+        if not os.path.isdir(d):
+            return
+        for name in os.listdir(d):
+            try:
+                os.unlink(os.path.join(d, name))
+            except OSError:
+                pass
 
     # -- catalog -------------------------------------------------------------
     def write_catalog(self, tables: dict[str, Table]) -> None:

@@ -171,13 +171,17 @@ class VolcanoExecutor:
     # -- aggregation (in-memory + spooled out-of-core variants) --------------
     def _iter_aggregate(self, node: AggregateNode) -> Iterator[Row]:
         keyf = lambda row: tuple(row[c] for c in node.group_by)
-        if self._should_spool(node):
+        est = self._spool_estimate(node)
+        if est is not None:
             # grace-style row grouping: rows spool to hash partitions on
             # disk; each group aggregates and frees before the next loads.
+            # The fan-out follows the input estimate + budget, so a huge
+            # input gets enough partitions for each to fit the budget.
             from .spill import spooled_row_groups
             bm = self.db.buffer_manager
             results = [(k, _agg_group(node, k, rows)) for k, rows in
-                       spooled_row_groups(self._iter(node.child), keyf, bm)]
+                       spooled_row_groups(self._iter(node.child), keyf, bm,
+                                          est_bytes=est)]
             bm.stats.spilled_ops += 1
         else:
             groups: dict[tuple, list[Row]] = {}
@@ -191,12 +195,15 @@ class VolcanoExecutor:
                 (v is None, v) for v in kv[0])):
             yield out
 
-    def _should_spool(self, node: AggregateNode) -> bool:
+    def _spool_estimate(self, node: AggregateNode) -> Optional[int]:
+        """Input-size estimate when the aggregate should spool, else None
+        (one plan walk decides *and* sizes the partition fan-out)."""
         bm = getattr(self.db, "buffer_manager", None)
         if bm is None or bm.budget is None or not node.group_by:
-            return False
+            return None
         from .optimizer import estimate_bytes
-        return estimate_bytes(node.child, self.db.catalog) > bm.budget
+        est = estimate_bytes(node.child, self.db.catalog)
+        return est if est > bm.budget else None
 
 
 def _agg_group(node: AggregateNode, k: tuple, rows: list[Row]) -> Row:

@@ -37,9 +37,9 @@ def dataset():
     return fact, dim
 
 
-def _build(dataset, budget):
+def _build(dataset, budget, **kw):
     fact, dim = dataset
-    db = startup(memory_budget=budget)
+    db = startup(memory_budget=budget, **kw)
     db.create_table("t", fact)
     db.create_table("d", dim)
     return db
@@ -267,3 +267,296 @@ def test_stress_much_larger_than_budget():
     assert st.spilled_ops >= 2
     assert st.peak <= budget
     assert db.buffer_manager.active_files == 0
+
+
+# ---------------------------------------------------------------------------
+# spill pipeline v2: codec, prefetch, recursive repartitioning, leak fixes
+# ---------------------------------------------------------------------------
+
+
+def test_spill_codec_roundtrip_bit_exact():
+    """FOR + byte-shuffle blocks decode to the identical bit pattern across
+    sorted/clustered/random/sentinel/empty integer streams and float
+    passthrough (floats never go through FOR)."""
+    from repro.core import buffers
+    rng = np.random.default_rng(0)
+    cases = [
+        np.arange(10_000, dtype=np.int64),                        # sorted
+        np.arange(10_000, dtype=np.int64) // 7 + 1_000_000,       # clustered
+        rng.integers(-2**62, 2**62, 1000),                        # wide random
+        np.array([-2**63, 2**63 - 1, 0, -1], dtype=np.int64),     # sentinels
+        np.array([2**53 + 1, 2**53 + 3, 2**62 + 5], dtype=np.int64),
+        np.array([2**63, 2**64 - 1, 2**63 + 7], dtype=np.uint64),
+        np.arange(100, dtype=np.int32) - 50,
+        np.zeros(0, dtype=np.int64),
+        rng.normal(size=1000),                                    # float raw
+    ]
+    for a in cases:
+        a = np.asarray(a)
+        blk = buffers.encode_block(a, buffers.CODEC_FOR)
+        out = buffers.decode_stream(blk, a.dtype)
+        assert out.dtype == a.dtype
+        np.testing.assert_array_equal(out, a)
+    # clustered int64 really shrinks: 0..65535 needs 2 of 8 byte planes
+    a = np.arange(65536, dtype=np.int64)
+    assert len(buffers.encode_block(a, buffers.CODEC_FOR)) < a.nbytes / 2
+    # incompressible data falls back to a raw block (never grows past
+    # payload + header)
+    r = rng.integers(-2**62, 2**62, 4096)
+    assert len(buffers.encode_block(r, buffers.CODEC_FOR)) \
+        <= r.nbytes + buffers.BLOCK_HEADER_BYTES
+
+
+def test_sort_run_index_bit_exact_past_2_53():
+    """Regression: run files stored the row index as float64, silently
+    rounding indexes past 2^53; the index stream is now native int64 and
+    must round-trip bit-exactly."""
+    from repro.core import spill
+    from repro.core.buffers import BufferManager
+    bm = BufferManager(budget=1 << 20)
+    idx = np.array([0, 2**53 + 1, 2**53 + 3, 2**62 + 12345], dtype=np.int64)
+    assert int(np.float64(2**53 + 1)) != 2**53 + 1   # float64 would corrupt
+    keys = [np.array([1.0, 2.0, 3.0, 4.0])]
+    path = spill._write_sort_run(bm, keys, idx)
+    streamed = [t[-1] for t in spill._iter_sort_run(path, 1)]
+    assert streamed == idx.tolist()
+    np.testing.assert_array_equal(spill._run_index_column(path, 1), idx)
+    bm.cleanup()
+
+
+def test_spool_error_releases_files():
+    """Regression (spill-file leak): an input iterator that raises mid-spool
+    must leave zero registered run files — not park them until cleanup()."""
+    from repro.core.buffers import BufferManager
+    from repro.core.spill import spooled_row_groups
+
+    bm = BufferManager(budget=32 << 10)
+
+    def rows():
+        for i in range(5000):
+            yield {"k": i % 7, "v": float(i)}
+        raise RuntimeError("mid-spool failure")
+
+    with pytest.raises(RuntimeError, match="mid-spool"):
+        list(spooled_row_groups(rows(), lambda r: r["k"], bm,
+                                est_bytes=1 << 20))
+    assert bm.active_files == 0
+    bm.cleanup()
+
+
+def test_query_error_releases_spill_files(dataset, monkeypatch):
+    """Regression (spill-file leak): an operator raising while partitions
+    are being consumed must release every run file and all pinned bytes."""
+    import repro.core.executor as ex
+    db = _build(dataset, 32 << 10)
+    real = ex._factorize
+    calls = {"n": 0}
+
+    def boom(results, idx=None):
+        calls["n"] += 1
+        if calls["n"] > 2:        # fail once partition processing started
+            raise RuntimeError("boom")
+        return real(results, idx)
+
+    monkeypatch.setattr(ex, "_factorize", boom)
+    with pytest.raises(RuntimeError, match="boom"):
+        db.scan("t").group_by("k", "k2").agg(s=("sum", "v")).execute()
+    assert db.buffer_manager.active_files == 0
+    assert db.buffer_manager.stats.pinned == 0
+
+
+def test_restart_reclaims_stale_spill_files(tmp_path):
+    """Persistent mode: a crash (no shutdown()) leaves run files under
+    <dbdir>/spill; reopening the directory reclaims them and queries run."""
+    import repro.core.session as session
+    rng = np.random.default_rng(2)
+    p = str(tmp_path / "db")
+    db = startup(p, memory_budget=32 << 10)
+    db.create_table("t", {"k": rng.integers(0, 1000, 20_000),
+                          "v": rng.normal(size=20_000)})
+    # simulate dying mid-query: spill files are never released ...
+    db.buffer_manager.release_file = lambda path: None
+    db.scan("t").group_by("k").agg(s=("sum", "v")).execute()
+    spill_dir = os.path.join(p, "spill")
+    assert os.listdir(spill_dir), "expected stale run files on disk"
+    # ... and both locks die with the process (process death closes the
+    # flock'd fd exactly like release_lock does)
+    session._open_dirs.pop(os.path.realpath(p))
+    db.storage.release_lock()
+
+    db2 = startup(p, memory_budget=32 << 10)
+    assert os.listdir(spill_dir) == []           # reclaimed at open
+    res = (db2.scan("t").group_by("k").agg(s=("sum", "v"))
+           .execute().to_pydict())
+    assert len(res["k"]) == 1000
+    db2.shutdown()
+
+
+def test_cleanup_spares_unregistered_files(tmp_path):
+    """Regression: cleanup() on a db-owned spill dir used to unlink every
+    file in the directory — including a concurrent query's run files.  Only
+    files registered with this manager may be deleted."""
+    from repro.core.buffers import BufferManager
+    d = str(tmp_path / "spill")
+    bm = BufferManager(budget=1 << 20, spill_dir=d)
+    mine = bm.new_spill_file("mine")
+    open(mine, "wb").write(b"x")
+    other = os.path.join(bm.spill_dir, "concurrent.run.bin")
+    open(other, "wb").write(b"y")
+    bm.cleanup()
+    assert not os.path.exists(mine)
+    assert os.path.exists(other), "cleanup clobbered an unregistered file"
+
+
+def test_choose_partitions_unlimited_budget():
+    """Regression: choose_partitions(est, None) raised TypeError."""
+    from repro.core.buffers import choose_partitions
+    assert choose_partitions(1 << 30, None) == 2
+    assert choose_partitions(0, 1 << 20) == 2
+
+
+def test_recursive_repartition_on_oversized_partitions():
+    """An input so large that even the maximum fan-out leaves every
+    partition over budget: partitions must re-partition recursively (never
+    fully resident), keep peak <= budget, and stay byte-identical."""
+    rng = np.random.default_rng(5)
+    n = 120_000
+    data = {"a": rng.integers(0, 50_000, n).astype(np.int64),
+            "b": rng.integers(0, 1000, n).astype(np.int64),
+            "v": rng.normal(size=n)}
+    budget = 16 << 10
+    base = startup()
+    base.create_table("t", data)
+    db = startup(memory_budget=budget)
+    db.create_table("t", data)
+    q = lambda d: (d.scan("t").group_by("a", "b")
+                   .agg(s=("sum", "v"), c=("count", None))
+                   .execute().to_pydict())
+    _assert_identical(q(base), q(db), "recursive repartition")
+    st = db.buffer_manager.stats
+    assert st.repartitions > 0, "expected oversized partitions to re-split"
+    assert st.peak <= budget, (st.peak, budget)
+    assert db.buffer_manager.active_files == 0
+
+
+def test_prefetch_identity_hits_and_budget(dataset, baseline):
+    """Double-buffered prefetch: identical results, prefetch_hits > 0, and
+    the pinned double buffer never pushes peak past the budget; with
+    spill_prefetch=False the pipeline is strictly sequential (zero hits)."""
+    budget = 256 << 10
+    db_on = _build(dataset, budget)                  # prefetch defaults on
+    got_on = _queries(db_on)
+    st_on = db_on.buffer_manager.stats
+    db_off = _build(dataset, budget, spill_prefetch=False)
+    got_off = _queries(db_off)
+    st_off = db_off.buffer_manager.stats
+    for qn in baseline:
+        _assert_identical(baseline[qn], got_on[qn], f"prefetch-on q={qn}")
+        _assert_identical(baseline[qn], got_off[qn], f"prefetch-off q={qn}")
+    assert st_on.prefetch_hits > 0
+    assert st_off.prefetch_hits == 0
+    assert st_on.peak <= budget, (st_on.peak, budget)
+    assert db_on.buffer_manager.active_files == 0
+
+
+def test_codec_reduces_spilled_bytes_on_clustered_keys():
+    """Acceptance: >=2x reduction in bytes actually written for a budgeted
+    group-by over sorted/clustered int64 keys, with identical results; raw
+    (logical) bytes are tracked separately in both modes."""
+    rng = np.random.default_rng(9)
+    n = 120_000
+    data = {"k": np.sort(rng.integers(0, 5000, n)).astype(np.int64),
+            "v": rng.normal(size=n)}
+    out = {}
+    for codec in ("raw", "for"):
+        db = startup(memory_budget=256 << 10, spill_codec=codec)
+        db.create_table("t", data)
+        res = (db.scan("t").group_by("k").agg(s=("sum", "v"))
+               .execute().to_pydict())
+        st = db.buffer_manager.stats
+        assert st.spilled_ops > 0
+        assert st.bytes_spilled == st.bytes_spilled_compressed
+        out[codec] = (res, st.bytes_spilled, st.bytes_spilled_raw)
+    _assert_identical(out["raw"][0], out["for"][0], "codec identity")
+    assert out["for"][2] == out["raw"][2]            # same logical bytes
+    assert 2 * out["for"][1] <= out["raw"][1], \
+        (out["for"][1], out["raw"][1])
+
+
+def test_exec_stats_expose_per_query_spill_deltas(dataset):
+    """ExecStats carries per-query spill-pipeline counters (the buffer
+    manager's are database-lifetime cumulative)."""
+    db = _build(dataset, 256 << 10)
+    (db.scan("t").group_by("k", "w").agg(s=("sum", "v")).execute())
+    st = db.last_stats
+    assert st.spilled_ops > 0
+    assert st.bytes_spilled_raw > 0
+    assert st.bytes_spilled_compressed > 0
+    assert st.prefetch_hits > 0
+
+
+def test_giant_group_fallback_identity():
+    """Heavy skew: one key tuple owns most rows, so its partition stays over
+    budget and is unsplittable by key — recursion must detect the single
+    distinct tuple (not rewrite the partition in futile passes) and fall
+    back to whole-partition processing with identical results."""
+    rng = np.random.default_rng(13)
+    n = 120_000
+    a = rng.integers(0, 50_000, n).astype(np.int64)
+    b = rng.integers(0, 1000, n).astype(np.int64)
+    a[:int(n * 0.6)] = 123                  # dominant composite key tuple
+    b[:int(n * 0.6)] = 5
+    data = {"a": a, "b": b, "v": rng.normal(size=n)}
+    base = startup()
+    base.create_table("t", data)
+    db = startup(memory_budget=16 << 10)
+    db.create_table("t", data)
+    q = lambda d: (d.scan("t").group_by("a", "b")
+                   .agg(s=("sum", "v"), c=("count", None))
+                   .execute().to_pydict())
+    _assert_identical(q(base), q(db), "giant-group fallback")
+    st = db.buffer_manager.stats
+    assert st.spilled_ops > 0
+    assert st.repartitions > 0
+    assert db.buffer_manager.active_files == 0
+
+
+def test_on_disk_lock_blocks_foreign_process(tmp_path):
+    """The "database locked" contract must hold on disk, across processes
+    (the in-process registry cannot see other processes): while this
+    process holds the flock, a second process is refused — so its
+    open-time spill reclaim can never destroy our live run files — and
+    after shutdown (or owner death, which drops the flock with the fd) the
+    directory opens normally."""
+    import subprocess
+    import sys
+    import repro
+    src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    p = str(tmp_path / "db")
+    code = ("from repro.core import startup\n"
+            "from repro.core.session import DatabaseError\n"
+            "try:\n"
+            f"    startup({p!r}).shutdown()\n"
+            "    print('OPENED')\n"
+            "except DatabaseError as e:\n"
+            "    assert 'locked' in str(e), e\n"
+            "    print('REFUSED')\n")
+    env = {**os.environ, "PYTHONPATH": src}
+    other = lambda: subprocess.run([sys.executable, "-c", code], env=env,
+                                   capture_output=True, text=True)
+
+    db = startup(p)
+    db.create_table("t", {"v": np.arange(5, dtype=np.int64)})
+    out = other()
+    assert out.stdout.strip() == "REFUSED", (out.stdout, out.stderr)
+    db.shutdown()                            # drops the flock
+    out = other()
+    assert out.stdout.strip() == "OPENED", (out.stdout, out.stderr)
+
+    # a failed open (bad knob, validated after locking) must not leave the
+    # directory locked forever
+    with pytest.raises(ValueError):
+        startup(p, spill_codec="bogus")
+    db3 = startup(p)                         # still openable
+    assert db3.table("t").num_rows == 5
+    db3.shutdown()

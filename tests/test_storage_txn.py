@@ -40,6 +40,7 @@ def test_wal_replay_after_crash(tmp_path):
     with __import__("repro.core.session", fromlist=["_open_lock"])._open_lock:
         from repro.core.session import _open_dirs
         _open_dirs.clear()                      # drop the lock, not the data
+    db.storage.release_lock()                   # a crash closes the flock fd
     db2 = startup(str(tmp_path / "db2"))
     t = db2.table("t")
     assert t.num_rows == 101
