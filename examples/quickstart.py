@@ -110,6 +110,40 @@ print("spilled raw -> stored:", stats.bytes_spilled_raw, "->",
       "| prefetch hits:", stats.prefetch_hits,
       "| repartitions:", stats.repartitions)
 
+# --- VARCHAR spilling across dictionary heaps -------------------------------
+# VARCHAR columns execute as int32 codes into a duplicate-eliminated,
+# order-preserving string heap (paper §3.1).  String-keyed joins spill even
+# when the two sides were encoded against *different* heaps; the strategy is
+# chosen per key from the heap/budget ratio:
+#   * content-equal heaps (same object, or equal fingerprints — e.g. two
+#     separately-loaded copies of a table): partition on plain codes;
+#   * distinct heaps that fit ~budget/4: merge into one shared dictionary
+#     (StringHeap.merge) and recode both sides while spooling;
+#   * oversized heaps: spill decoded string bytes (offsets+bytes block
+#     codec) and hash-partition on those.
+# Group-by and sort on VARCHAR keys spill on their codes directly — a key
+# column has one heap, and sorted-order code assignment makes code ranges
+# string ranges.  `varchar_spills` (BufferStats and per-query ExecStats)
+# counts blocking ops that spilled with VARCHAR keys.
+sdb = startup(memory_budget=256 << 10)
+sdb.create_table("trips", {
+    "city": np.asarray(["ams", "nyc", "sfo"], dtype=object)[
+        rng.integers(0, 3, n)],
+    "fare": rng.gamma(3.0, 7.0, n),
+})
+sdb.create_table("cities", {          # separate load -> its own heap
+    "city": np.asarray(["ams", "bos", "nyc", "sfo"], dtype=object),
+    "tz": np.asarray(["CET", "EST", "EST", "PST"], dtype=object),
+})
+vj = (sdb.scan("trips")
+      .join(sdb.scan("cities"), on="city")     # string keys, distinct heaps
+      .group_by("tz").agg(rev=("sum", "fare"))
+      .execute())
+vstats = sdb.buffer_manager.stats
+print("varchar join:", vj.to_pydict(),
+      "| varchar spills:", vstats.varchar_spills,
+      "| per-query:", sdb.last_stats.varchar_spills)
+
 # --- distributed execution (paper Fig. 2 on whatever mesh exists) ----------
 dist = (db.scan("trips").filter(Col("distance_km") > 5)
         .group_by("city").agg(rev=("sum", "fare"))

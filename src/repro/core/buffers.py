@@ -15,8 +15,11 @@ execution".  This module is the accounting + storage half of that feature:
   all-zero planes are dropped — sorted or clustered int64 keys typically
   keep only one or two of their eight planes, cutting spill I/O 2-8x.
   Float streams (and any block the codec cannot shrink) pass through raw.
-  Each block carries a header with the codec id, so readers never guess and
-  a stream can mix compressed and raw blocks.
+  Variable-width string streams (object arrays, dtype ``object`` in the
+  stream declaration) use an offsets+bytes layout: a length sub-block —
+  a normal integer codec block, so it keeps the raw fallback — followed by
+  the concatenated utf-8 bytes.  Each block carries a header with the codec
+  id, so readers never guess and a stream can mix block kinds.
 
 Contract with the spill operators (spill.py):
 
@@ -52,6 +55,7 @@ import numpy as np
 
 CODEC_RAW = 0        # payload = arr.tobytes()
 CODEC_FOR = 1        # payload = plane-bitmap byte + kept byte planes
+CODEC_STR = 2        # payload = [length sub-block][concatenated utf-8 bytes]
 
 CODEC_NAMES = {"raw": CODEC_RAW, "for": CODEC_FOR}
 
@@ -63,12 +67,70 @@ _BLOCK_HDR = np.dtype([("codec", "<u1"), ("flags", "<u1"), ("n", "<u4"),
 BLOCK_HEADER_BYTES = _BLOCK_HDR.itemsize
 
 
-def encode_block(arr: np.ndarray, codec: int) -> bytes:
-    """Encode one stream chunk as a self-describing block.
+def _utf8(s) -> bytes:
+    """One string value's utf-8 bytes; already-encoded ``bytes`` pass
+    through — spool paths pre-encode each value once and hash/account/write
+    from the same bytes."""
+    return s if isinstance(s, bytes) else str(s).encode("utf-8")
+
+
+def logical_nbytes(arr: np.ndarray) -> int:
+    """Decoded (pre-codec) byte size of a stream chunk.  Fixed-width arrays
+    report ``arr.nbytes``; object arrays of strings report the utf-8 payload
+    plus a 4-byte length per value (``arr.nbytes`` would only count the
+    PyObject pointers)."""
+    arr = np.asarray(arr)
+    if arr.dtype != object:
+        return int(arr.nbytes)
+    return int(sum(len(_utf8(s)) for s in arr)) + 4 * len(arr)
+
+
+def _str_block(bs: list, codec: int) -> bytes:
+    """String (offsets+bytes) block from already-encoded utf-8 values: a
+    length sub-block — itself a normal codec block, so it inherits the
+    integer codec's raw fallback — followed by the concatenated bytes.
+    NULLs are not representable here: VARCHAR streams spill either as int32
+    dictionary codes (NULL = code 0) or as decoded strings of
+    pre-null-filtered rows."""
+    lens = np.fromiter((len(b) for b in bs), dtype=np.int32, count=len(bs))
+    body = encode_block(lens, codec) + b"".join(bs)
+    hdr = np.zeros(1, dtype=_BLOCK_HDR)
+    hdr["codec"], hdr["n"] = CODEC_STR, len(bs)
+    hdr["payload"], hdr["ref"] = len(body), 0
+    return hdr.tobytes() + body
+
+
+def _decode_str_payload(hdr, payload: bytes) -> np.ndarray:
+    n = int(hdr["n"])
+    out = np.empty(n, dtype=object)
+    if n == 0:
+        return out
+    sub = np.frombuffer(payload, _BLOCK_HDR, count=1)[0]
+    off = BLOCK_HEADER_BYTES
+    pl = int(sub["payload"])
+    lens = _decode_payload(sub, payload[off:off + pl], np.dtype(np.int32))
+    off += pl
+    ends = off + np.cumsum(lens.astype(np.int64))
+    starts = ends - lens
+    for i in range(n):
+        out[i] = payload[starts[i]:ends[i]].decode("utf-8")
+    return out
+
+
+def encode_block_ex(arr: np.ndarray, codec: int) -> tuple[bytes, int]:
+    """Encode one stream chunk; returns (block, decoded logical bytes).
 
     ``codec`` is the *requested* codec; the block falls back to raw when the
     dtype is not integral or the encoded form would not be smaller (the
-    header records what was actually used)."""
+    header records what was actually used).  Object arrays of strings always
+    take the string (offsets+bytes) layout — ``codec`` then only selects the
+    encoding of the embedded length sub-block.  Object elements may be
+    ``str`` or pre-encoded utf-8 ``bytes`` (spool paths encode each value
+    once up front and hash/pin/write from the same bytes)."""
+    if np.asarray(arr).dtype == object:
+        bs = [_utf8(s) for s in np.asarray(arr)]
+        return (_str_block(bs, codec),
+                sum(len(b) for b in bs) + 4 * len(bs))
     arr = np.ascontiguousarray(arr)
     n = len(arr)
     ref = 0
@@ -102,11 +164,19 @@ def encode_block(arr: np.ndarray, codec: int) -> bytes:
     hdr = np.zeros(1, dtype=_BLOCK_HDR)
     hdr["codec"], hdr["n"] = cid, n
     hdr["payload"], hdr["ref"] = len(payload), ref
-    return hdr.tobytes() + payload
+    return hdr.tobytes() + payload, int(arr.nbytes)
+
+
+def encode_block(arr: np.ndarray, codec: int) -> bytes:
+    """Encode one stream chunk as a self-describing block (see
+    ``encode_block_ex`` for the accounting-aware variant)."""
+    return encode_block_ex(arr, codec)[0]
 
 
 def _decode_payload(hdr, payload: bytes, dtype: np.dtype) -> np.ndarray:
     n = int(hdr["n"])
+    if int(hdr["codec"]) == CODEC_STR:
+        return _decode_str_payload(hdr, payload)
     if int(hdr["codec"]) == CODEC_RAW:
         return np.frombuffer(payload, dtype=dtype, count=n)
     w = dtype.itemsize
@@ -139,13 +209,15 @@ def decode_stream(data: bytes, dtype) -> np.ndarray:
 
 
 def write_stream_block(f, arr: np.ndarray, codec: int,
-                       bufman: Optional["BufferManager"] = None) -> int:
-    """Encode + write one block; accounts raw vs stored bytes on ``bufman``."""
-    block = encode_block(arr, codec)
+                       bufman: Optional["BufferManager"] = None
+                       ) -> tuple[int, int]:
+    """Encode + write one block; accounts raw vs stored bytes on ``bufman``
+    and returns (stored, logical) sizes — strings are encoded only once."""
+    block, logical = encode_block_ex(arr, codec)
     f.write(block)
     if bufman is not None:
-        bufman.note_spilled(int(arr.nbytes), len(block))
-    return len(block)
+        bufman.note_spilled(logical, len(block))
+    return len(block), logical
 
 
 def read_stream_block(f, dtype) -> Optional[np.ndarray]:
@@ -171,6 +243,7 @@ class BufferStats:
     bytes_spilled: int = 0       # post-codec bytes actually written
     bytes_spilled_raw: int = 0   # pre-codec (logical) spilled bytes
     spilled_ops: int = 0         # blocking operators that took the spill path
+    varchar_spills: int = 0      # spilled ops whose keys include VARCHAR
     prefetch_hits: int = 0       # partitions served by the async prefetcher
     repartitions: int = 0        # oversized partitions split recursively
 
@@ -337,6 +410,7 @@ class PartitionWriter:
         self._handles = [{s: None for s in streams}
                          for _ in range(self.n_parts)]
         self._rows = [0] * self.n_parts
+        self._nbytes = [0] * self.n_parts    # decoded (logical) bytes/part
 
     def append(self, part_ids: np.ndarray, chunks: dict[str, np.ndarray]):
         """Scatter one chunk of rows into partition files by ``part_ids``."""
@@ -352,7 +426,9 @@ class PartitionWriter:
                     h = open(self._paths[p][s], "wb")
                     self._handles[p][s] = h
                 data = arr[m].astype(self.streams[s], copy=False)
-                write_stream_block(h, data, self.codec, self.bufman)
+                _, logical = write_stream_block(h, data, self.codec,
+                                                self.bufman)
+                self._nbytes[p] += logical
             self._rows[p] += n
 
     def _close(self) -> None:
@@ -365,7 +441,8 @@ class PartitionWriter:
     def finalize(self) -> list["SpillPartition"]:
         self._close()
         return [SpillPartition(self.bufman, self._paths[p], self.streams,
-                               self._rows[p]) for p in range(self.n_parts)]
+                               self._rows[p], logical_bytes=self._nbytes[p])
+                for p in range(self.n_parts)]
 
     def abort(self) -> None:
         """Error path: close handles and release every partition file, so a
@@ -380,16 +457,22 @@ class SpillPartition:
     """One partition's streams; ``load`` pins the bytes it reads into RAM."""
 
     def __init__(self, bufman: BufferManager, paths: dict[str, str],
-                 streams: dict[str, np.dtype], rows: int):
+                 streams: dict[str, np.dtype], rows: int,
+                 logical_bytes: Optional[int] = None):
         self.bufman = bufman
         self.paths = paths
         self.streams = streams
         self.rows = int(rows)
+        self._logical = logical_bytes
 
     @property
     def nbytes(self) -> int:
         """Decoded (logical) size — what ``load`` materializes and what the
-        caller pins; the on-disk footprint may be smaller via the codec."""
+        caller pins; the on-disk footprint may be smaller via the codec.
+        The writer-tracked figure is preferred because object (string)
+        streams have no meaningful fixed itemsize."""
+        if self._logical is not None:
+            return self._logical
         return sum(self.rows * dt.itemsize for dt in self.streams.values())
 
     def read_streams(self) -> dict[str, bytes]:

@@ -33,13 +33,41 @@ class StringHeap:
     predicates and sorts operate directly on int32 codes.  Code 0 is NULL.
     """
 
-    __slots__ = ("values",)
+    __slots__ = ("values", "_fp")
 
     def __init__(self, values: Optional[np.ndarray] = None):
         # values[0] is the NULL placeholder; values[1:] sorted ascending.
         if values is None:
             values = np.array([""], dtype=object)
         self.values = values
+        self._fp: Optional[bytes] = None
+
+    def fingerprint(self) -> bytes:
+        """Content hash of the heap (cached; heaps are immutable once built).
+
+        Two heaps with equal fingerprints assign equal codes to equal
+        strings, so their columns' int32 codes are directly comparable —
+        the cheap content-equality that lets operators treat separately
+        loaded copies of the same dictionary as one."""
+        if self._fp is None:
+            import hashlib
+            h = hashlib.blake2b(digest_size=16)
+            h.update(len(self.values).to_bytes(8, "little"))
+            for v in self.values:
+                b = str(v).encode("utf-8")
+                h.update(len(b).to_bytes(4, "little"))
+                h.update(b)
+            self._fp = h.digest()
+        return self._fp
+
+    def content_equal(self, other: Optional["StringHeap"]) -> bool:
+        """True iff both heaps hold the same values in the same order."""
+        if self is other:
+            return True
+        if other is None:
+            return False
+        return (len(self.values) == len(other.values)
+                and self.fingerprint() == other.fingerprint())
 
     @classmethod
     def encode(cls, strings) -> tuple["StringHeap", np.ndarray]:
@@ -83,13 +111,30 @@ class StringHeap:
 
         ``recode_map`` maps old codes -> new codes so existing columns can be
         re-encoded (order preservation requires global re-sort on novel
-        values; appends of already-present values are O(1) in heap size).
+        values; appends of already-present values are O(1) in heap size:
+        the heap object is returned unchanged with an identity recode map,
+        never re-sorted — ``new is self`` on that path).
         """
         new_heap, new_codes = StringHeap.encode(strings)
         old_strs = self.values[1:].astype(str)
         if len(old_strs) == 0:
             recode = np.zeros(1, dtype=np.int32)
             return new_heap, recode, new_codes
+        nvals = new_heap.values[1:].astype(str)
+        if len(nvals) == 0:
+            # all-NULL input: nothing to add, heap identity preserved
+            recode = np.arange(len(self.values), dtype=np.int32)
+            return self, recode, new_codes
+        pos = np.searchsorted(old_strs, nvals)
+        safe = np.minimum(pos, len(old_strs) - 1)
+        if bool((old_strs[safe] == nvals).all()):
+            # every incoming value is already present: O(1) in heap size —
+            # no global re-sort, identity recode, same heap object
+            recode = np.arange(len(self.values), dtype=np.int32)
+            nc = np.zeros_like(new_codes)
+            mask = new_codes > 0
+            nc[mask] = (pos[new_codes[mask] - 1] + 1).astype(np.int32)
+            return self, recode, nc
         merged = np.unique(np.concatenate(
             [old_strs, new_heap.values[1:].astype(str)]))
         heap_vals = np.empty(len(merged) + 1, dtype=object)
@@ -110,6 +155,16 @@ class StringHeap:
 
     def nbytes(self) -> int:
         return int(sum(len(str(v)) for v in self.values)) + 8 * len(self.values)
+
+
+def heaps_equal(a: Optional[StringHeap], b: Optional[StringHeap]) -> bool:
+    """Content equality for possibly-absent heaps: identical objects (or
+    both absent) short-circuit; otherwise compare cached fingerprints."""
+    if a is b:
+        return True
+    if a is None or b is None:
+        return False
+    return a.content_equal(b)
 
 
 @dataclass

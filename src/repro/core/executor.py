@@ -257,12 +257,16 @@ def _join_codes(lres, rres, n_keys) -> tuple[np.ndarray, np.ndarray, np.ndarray,
     lc = rc = None
     lnull = np.zeros(len(np.asarray(lres[0].values)), dtype=bool)
     rnull = np.zeros(len(np.asarray(rres[0].values)), dtype=bool)
+    from .column import heaps_equal
     for lr, rr in zip(lres, rres):
         lv, rv = np.asarray(lr.values), np.asarray(rr.values)
         lnull |= _res_nulls(lr)
         rnull |= _res_nulls(rr)
         if lr.dbtype == DBType.VARCHAR and rr.dbtype == DBType.VARCHAR \
-                and lr.heap is not rr.heap:
+                and not heaps_equal(lr.heap, rr.heap):
+            # distinct dictionaries (by content, not object identity —
+            # separately-loaded copies of one table compare codes directly):
+            # fall back to the decoded strings
             lv = lr.heap.decode(lv).astype(str)
             rv = rr.heap.decode(rv).astype(str)
         allv = np.concatenate([lv, rv])
@@ -292,6 +296,12 @@ def _hash_join(lc, rc, how, r_order=None):
     if how == "anti":
         return np.nonzero(cnt == 0)[0], None
     if how == "left":
+        if len(rs) == 0:
+            # empty build side (e.g. every right key NULL): every probe row
+            # survives unmatched.  The general path below would index the
+            # empty order array eagerly inside np.where.
+            return (np.arange(len(lc), dtype=np.int64),
+                    np.full(len(lc), -1, dtype=np.int64))
         total = int(cnt.sum())
         cnt1 = np.maximum(cnt, 1)
         lidx = np.repeat(np.arange(len(lc), dtype=np.int64), cnt1)
@@ -441,6 +451,7 @@ class ExecStats:
     imprint_blocks_skipped: int = 0
     rows_scanned: int = 0
     spilled_ops: int = 0          # blocking ops routed to the spill tier
+    varchar_spills: int = 0       # spilled ops whose keys include VARCHAR
     # per-query spill-pipeline deltas (the BufferManager's counters are
     # database-lifetime cumulative; these isolate this executor's programs).
     # Best-effort under concurrency: the counters are shared per database,
@@ -472,6 +483,16 @@ class Executor:
         bm = self.bufman
         return (bm is not None and bm.budget is not None
                 and est_bytes > bm.budget)
+
+    def _note_spill(self, varchar: bool) -> None:
+        """Count one blocking op routed to the spill tier (per-query and
+        database-lifetime); ``varchar`` marks ops whose keys include
+        dictionary-encoded strings."""
+        self.stats.spilled_ops += 1
+        self.bufman.stats.spilled_ops += 1
+        if varchar:
+            self.stats.varchar_spills += 1
+            self.bufman.stats.varchar_spills += 1
 
     # -- entry points -------------------------------------------------------
     def execute(self, plan: PlanNode, do_optimize: bool = True):
@@ -605,7 +626,8 @@ class Executor:
         key_bytes = sum(np.asarray(r.values).dtype.itemsize for r in lres)
         if self._over_budget((nl + nr) * (key_bytes + 16)):
             from . import spill
-            if spill.spillable_join_keys(lres, rres):
+            vplan = spill.plan_varchar_join(lres, rres, self.bufman)
+            if vplan is not None:
                 lnull = np.zeros(nl, dtype=bool)
                 rnull = np.zeros(nr, dtype=bool)
                 for lr, rr in zip(lres, rres):
@@ -615,10 +637,10 @@ class Executor:
                     (~lnull) if lmask is None else (lmask & ~lnull))[0]
                 rsel = np.nonzero(
                     (~rnull) if rmask is None else (rmask & ~rnull))[0]
-                self.stats.spilled_ops += 1
-                self.bufman.stats.spilled_ops += 1
+                self._note_spill(any(a is not None for a in vplan))
                 return spill.partitioned_hash_join(
-                    lres, rres, lsel, rsel, p["how"], self.bufman)
+                    lres, rres, lsel, rsel, p["how"], self.bufman,
+                    vplan=vplan)
 
         lc, rc, lnull, rnull = _join_codes(lres, rres, nk)
         lsel = np.nonzero((~lnull) if lmask is None else (lmask & ~lnull))[0]
@@ -666,9 +688,11 @@ class Executor:
             # low-cardinality grouping (few distinct keys) stays in memory —
             # its blocking state is tiny no matter how large the input, and
             # partitioning by key could never split the dominant groups.
+            # VARCHAR keys partition on their int32 dictionary codes: a
+            # group-by key has exactly one heap, and the order-preserving
+            # code assignment makes code ranges string ranges.
             from . import spill
-            self.stats.spilled_ops += 1
-            self.bufman.stats.spilled_ops += 1
+            self._note_spill(any(k.dbtype == DBType.VARCHAR for k in keys))
             return spill.grace_hash_groupby(keys, idx, self.bufman)
         codes, _ = _factorize(keys, idx)
         gid, n, rep = _dense_gid(codes)
@@ -704,8 +728,7 @@ class Executor:
         n = len(np.asarray(keys[0].values))
         if self._over_budget(n * 8 * (len(keys) + 1)):
             from . import spill
-            self.stats.spilled_ops += 1
-            self.bufman.stats.spilled_ops += 1
+            self._note_spill(any(k.dbtype == DBType.VARCHAR for k in keys))
             return spill.external_merge_sort(keys, descs, p["limit"],
                                              self.bufman)
         arrs = [

@@ -267,6 +267,13 @@ def startup(path: Optional[str] = None,
     partitions (default on); prefetched bytes stay pinned inside the
     budget.  Both are no-ops until a query actually spills.
 
+    VARCHAR keys spill too, even when the join sides were dictionary-encoded
+    against different heaps: small dictionaries merge into one shared heap
+    (codes recoded while spooling), oversized ones partition on decoded
+    string bytes.  ``BufferStats.varchar_spills`` /
+    ``ExecStats.varchar_spills`` count blocking ops that spilled with
+    VARCHAR keys.
+
     Unlike the original (paper §5.1), several databases may be open in one
     process; a directory is single-owner ("database locked") to preserve the
     paper's on-disk locking contract."""
@@ -371,6 +378,11 @@ class Connection:
             snap_db.index_manager = IndexManager(snap_db)
             snap_db.buffer_manager = db.buffer_manager   # shared accounting
             table = snap_db.sql(sql).execute(**kw)
+            # thread per-query stats (spilled_ops, varchar_spills, spill
+            # byte deltas) to the parent database: the snapshot view is
+            # discarded, but db.last_stats must reflect the last query run
+            # through this connection regardless of transaction scope
+            db.last_stats = getattr(snap_db, "last_stats", None)
         else:
             table = db.sql(sql).execute(**kw)
         return Result(table)

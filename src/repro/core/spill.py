@@ -38,7 +38,13 @@ executor.py:
 * ``partitioned_hash_join`` hash-partitions both sides, joins partition
   pairs with the same ``_join_codes``/``_hash_join`` kernels, then stably
   re-sorts the output pairs by left row — recovering the probe-order output
-  of the in-memory join;
+  of the in-memory join.  VARCHAR keys stay partitionable even when the two
+  sides' dictionary heaps differ (``plan_varchar_join``): content-equal
+  heaps spill plain codes, small distinct heaps merge into one shared
+  dictionary both sides recode to while spooling, and oversized heaps fall
+  back to spilling decoded string bytes and hashing on those — in every
+  case equal strings land in the same partition and NULL (code 0) rows are
+  pre-filtered by the caller exactly as in memory;
 * ``external_merge_sort`` sorts budget-sized runs with the same
   ``lexsort`` keys and merges with the original row index as tiebreaker,
   which is exactly stable-lexsort order.  Run files keep the row index as a
@@ -58,13 +64,14 @@ import heapq
 import pickle
 import queue
 import threading
+import zlib
 from typing import Iterable, Iterator, Optional
 
 import numpy as np
 
 from .buffers import (BufferManager, CODEC_RAW, PartitionWriter,
                       SpillPartition, choose_morsel_rows, choose_partitions,
-                      read_stream_block, write_stream_block)
+                      logical_nbytes, read_stream_block, write_stream_block)
 from .expression import ExprResult
 from .storage import morsel_ranges
 
@@ -439,52 +446,160 @@ def grace_hash_groupby(keys: list, idx: np.ndarray, bufman: BufferManager):
 # ---------------------------------------------------------------------------
 
 
-def _hash_partition(values: np.ndarray, n_parts: int,
-                    as_float: bool) -> np.ndarray:
+_RESALT = np.uint64(0x632BE59BD9B4E019)     # odd: per-depth hash reseeding
+
+
+def _hash_partition(values: np.ndarray, n_parts: int, as_float: bool,
+                    salt: int = 0) -> np.ndarray:
     """Deterministic bucket per raw key value, identical across both sides.
 
     Floats are normalized (-0.0 -> +0.0) then bit-hashed; integer families
-    widen to int64 so INT32 and INT64 keys bucket together."""
+    widen to int64 so INT32 and INT64 keys bucket together.  ``salt``
+    decorrelates the recursive-repartition passes from the parent split
+    (without it every parent-partition row would land in one sub-bucket)."""
     if as_float:
         bits = (np.asarray(values, dtype=np.float64) + 0.0).view(np.uint64)
     else:
         bits = np.asarray(values).astype(np.int64).view(np.uint64)
-    h = bits * _GOLDEN
+    h = (bits ^ (np.uint64(salt) * _RESALT)) * _GOLDEN
     h = h ^ (h >> np.uint64(29))
     return (h % np.uint64(n_parts)).astype(np.int64)
 
 
-def spillable_join_keys(lres: list, rres: list) -> bool:
-    """VARCHAR keys are only partitionable when both sides share one heap
-    (dictionary codes then compare directly); otherwise the in-memory path
-    must decode, so the spill tier declines."""
+def _hash_partition_str(values: np.ndarray, n_parts: int,
+                        salt: int = 0) -> np.ndarray:
+    """Deterministic bucket per decoded string (``str`` or pre-encoded
+    utf-8 ``bytes``).  Python's built-in ``str`` hash is salted per process,
+    so both join sides (and a future resumed process) hash the utf-8 bytes
+    with crc32 instead, mixed through the same golden-ratio finalizer as
+    the numeric hash.  ``salt`` reseeds the crc for recursive-repartition
+    passes."""
+    from .buffers import _utf8
+    start = int(salt) & 0xFFFFFFFF
+    h = np.fromiter((zlib.crc32(_utf8(s), start) for s in values),
+                    dtype=np.uint64, count=len(values))
+    h = h * _GOLDEN
+    h = h ^ (h >> np.uint64(29))
+    return (h % np.uint64(n_parts)).astype(np.int64)
+
+
+def plan_varchar_join(lres: list, rres: list,
+                      bufman: BufferManager) -> Optional[list]:
+    """Per-key spill strategy for (possibly VARCHAR) join keys.
+
+    The paper's duplicate-eliminated string heaps mean VARCHAR columns
+    execute as int32 codes — but codes from *different* heaps are not
+    comparable.  Per key pair this returns:
+
+    * ``None`` entry — numeric key, spill raw values (unchanged path);
+    * ``("codes",)`` — heaps are content-equal (same object, or equal
+      fingerprints — e.g. two separately-loaded copies of one table), so
+      dictionary codes compare directly and spill as plain int32 streams;
+    * ``("recode", merged, lmap, rmap)`` — distinct heaps whose union fits
+      comfortably in the budget: one shared heap is built incrementally via
+      ``StringHeap.merge`` (its recode map re-keys the left side, the
+      returned new-value codes re-key the right), and both sides spool
+      already-recoded codes of that single dictionary;
+    * ``("decode",)`` — heaps too large to merge under the budget: rows
+      spill their decoded string bytes (offsets+bytes block codec) and
+      partitions hash on those bytes.
+
+    Returns ``None`` (not a list) when the pairing cannot be partitioned at
+    all: one side VARCHAR and the other numeric has no common key domain,
+    and the in-memory path must resolve it."""
+    from .column import heaps_equal
     from .types import DBType
+    # pairability first: a VARCHAR-vs-numeric key pair has no common key
+    # domain, and finding it late would waste the heap merges done for
+    # earlier key pairs (merge is O(heap), this pass is O(keys))
     for lr, rr in zip(lres, rres):
-        if (lr.dbtype == DBType.VARCHAR or rr.dbtype == DBType.VARCHAR) \
-                and lr.heap is not rr.heap:
-            return False
-    return True
+        if (lr.dbtype == DBType.VARCHAR) != (rr.dbtype == DBType.VARCHAR):
+            return None
+    actions: list = []
+    for lr, rr in zip(lres, rres):
+        if lr.dbtype != DBType.VARCHAR:
+            actions.append(None)
+            continue
+        if heaps_equal(lr.heap, rr.heap):
+            actions.append(("codes",))
+            continue
+        heap_bytes = lr.heap.nbytes() + rr.heap.nbytes()
+        if bufman.budget is None or heap_bytes <= bufman.budget // 4:
+            # the merge's working set (both heaps + the union) is pinned so
+            # peak accounting still reflects the dictionary build
+            with bufman.pinned(heap_bytes):
+                merged, lmap, rcodes = lr.heap.merge(
+                    [str(v) for v in rr.heap.values[1:]])
+            rmap = np.zeros(len(rr.heap.values), dtype=np.int32)
+            rmap[1:] = rcodes
+            actions.append(("recode", merged, lmap, rmap))
+        else:
+            actions.append(("decode",))
+    return actions
+
+
+def _plan_row_bytes(results: list, actions: Optional[list]) -> int:
+    """Estimated spooled bytes per row under a varchar plan: decoded string
+    keys count their average heap string width, everything else its dtype
+    itemsize; +8 for the row-index stream."""
+    rb = 8
+    for i, r in enumerate(results):
+        act = None if actions is None else actions[i]
+        if act is not None and act[0] == "decode":
+            h = r.heap
+            rb += max(8, h.nbytes() // max(1, len(h)))
+        else:
+            rb += np.asarray(r.values).dtype.itemsize
+    return rb
 
 
 def _spool_side(results: list, sel: np.ndarray, bufman: BufferManager,
-                n_parts: int, as_float: bool, hint: str):
-    row_bytes = _key_row_bytes(results) + 8
+                n_parts: int, as_float: bool, hint: str,
+                actions: Optional[list] = None, side: int = 0):
+    """Hash-scatter one join side to partition files.  ``actions`` is the
+    varchar plan (see ``plan_varchar_join``); ``side`` selects which recode
+    map applies (0 = left/lmap, 1 = right/rmap).  Key conversion happens per
+    morsel — recode maps index per chunk, decode materializes only one
+    morsel of strings — so full-column converted copies never exist."""
+    row_bytes = _plan_row_bytes(results, actions)
     morsel = choose_morsel_rows(row_bytes, bufman.budget)
     streams = {"idx": np.dtype(np.int64)}
+    converts: list = []
     for i, r in enumerate(results):
-        streams[f"k{i}"] = np.asarray(r.values).dtype
+        act = None if actions is None else actions[i]
+        if act is not None and act[0] == "decode":
+            streams[f"k{i}"] = np.dtype(object)
+            # decode AND utf-8 encode once per value here: the partition
+            # hash, the pin accounting, and the block writer all consume
+            # the same bytes objects instead of re-encoding the str 3x
+            def _decode_utf8(a, h=r.heap):
+                from .buffers import _utf8
+                out = h.decode(a)
+                return np.fromiter((_utf8(s) for s in out), dtype=object,
+                                   count=len(out))
+            converts.append(_decode_utf8)
+        elif act is not None and act[0] == "recode":
+            streams[f"k{i}"] = np.dtype(np.int32)
+            converts.append(lambda a, m=act[2 + side]: m[a])
+        else:
+            streams[f"k{i}"] = np.asarray(r.values).dtype
+            converts.append(None)
     writer = PartitionWriter(bufman, n_parts, streams, hint=hint)
     arrays = [np.asarray(r.values) for r in results]
-    first = arrays[0]
+    str_first = streams["k0"] == np.dtype(object)
     try:
         for s, e in morsel_ranges(len(sel), morsel):
             sub = sel[s:e]
-            part = _hash_partition(first[sub], n_parts, as_float)
             chunks = {"idx": sub}
             for i, a in enumerate(arrays):
-                chunks[f"k{i}"] = a[sub]
-            with bufman.pinned(sub.nbytes
-                               + sum(a[sub].nbytes for a in arrays)):
+                c = a[sub]
+                if converts[i] is not None:
+                    c = converts[i](c)
+                chunks[f"k{i}"] = c
+            part = (_hash_partition_str(chunks["k0"], n_parts) if str_first
+                    else _hash_partition(chunks["k0"], n_parts, as_float))
+            with bufman.pinned(sum(logical_nbytes(c)
+                                   for c in chunks.values())):
                 writer.append(part, chunks)
     except BaseException:
         writer.abort()
@@ -492,24 +607,164 @@ def _spool_side(results: list, sel: np.ndarray, bufman: BufferManager,
     return writer.finalize()
 
 
-def partitioned_hash_join(lres: list, rres: list, lsel: np.ndarray,
-                          rsel: np.ndarray, how: str,
-                          bufman: BufferManager):
-    """External equi-join.  Inputs are the *pre-null-filtered* selected row
-    positions of each side; output is the same global (lidx, ridx) pairs —
-    in the same order — as the in-memory ``_op_join``."""
+def _gather_planned(r: ExprResult, arr: np.ndarray, act) -> ExprResult:
+    """Per-partition ExprResult honoring the varchar plan: decoded-string
+    streams carry no heap (``_join_codes`` then compares the strings
+    themselves), recoded streams carry the *merged* heap on both sides (so
+    codes compare directly), everything else keeps its original metadata."""
+    if act is not None and act[0] == "decode":
+        return ExprResult(arr, r.dbtype, None, None, r.scale)
+    if act is not None and act[0] == "recode":
+        return ExprResult(arr, r.dbtype, None, act[1], r.scale)
+    return _gather_result(r, arr)
+
+
+def _join_partition_pair(lres: list, rres: list, larr: dict, rarr: dict,
+                         how: str, vplan: Optional[list]) -> tuple:
+    """Join one loaded partition pair with the in-memory kernels; returns
+    (left global rows, right global rows or None) for this pair."""
     from .executor import _hash_join, _join_codes
-    from .types import is_float
 
     nk = len(lres)
+    lidx_g, ridx_g = larr["idx"], rarr["idx"]
+    if len(ridx_g) == 0:
+        # empty build side: no matches; left keeps every probe row (and the
+        # general path would index the empty ridx_g eagerly via np.where)
+        if how in ("anti", "left"):
+            rpad = None if how == "anti" \
+                else np.full(len(lidx_g), -1, dtype=np.int64)
+            return lidx_g, rpad
+        return (lidx_g[:0],
+                None if how == "semi" else np.zeros(0, dtype=np.int64))
+    lsub = [_gather_planned(r, larr[f"k{i}"],
+                            None if vplan is None else vplan[i])
+            for i, r in enumerate(lres)]
+    rsub = [_gather_planned(r, rarr[f"k{i}"],
+                            None if vplan is None else vplan[i])
+            for i, r in enumerate(rres)]
+    lc, rc, _, _ = _join_codes(lsub, rsub, nk)
+    lidx, ridx = _hash_join(lc, rc, how)
+    if how in ("semi", "anti"):
+        return lidx_g[lidx], None
+    return (lidx_g[lidx],
+            np.where(ridx < 0, -1, ridx_g[np.maximum(ridx, 0)]))
+
+
+def _scatter_partition(partn: SpillPartition, writer: PartitionWriter,
+                       bufman: BufferManager, n_sub: int, as_float: bool,
+                       salt: int, morsel: int) -> None:
+    """Re-scatter one spilled join side block-by-block (never fully
+    resident) into ``n_sub`` sub-partitions with a re-salted hash on k0."""
+    str_first = partn.streams["k0"] == np.dtype(object)
+
+    def _flush(buf: list) -> None:
+        blk = {s: (buf[0][s] if len(buf) == 1 else
+                   np.concatenate([b[s] for b in buf]))
+               for s in partn.streams}
+        part = (_hash_partition_str(blk["k0"], n_sub, salt) if str_first
+                else _hash_partition(blk["k0"], n_sub, as_float, salt))
+        with bufman.pinned(sum(logical_nbytes(a) for a in blk.values())):
+            writer.append(part, blk)
+
+    buf, brows = [], 0
+    for blk in partn.iter_blocks():
+        buf.append(blk)
+        brows += len(blk["idx"])
+        if brows >= morsel:
+            _flush(buf)
+            buf, brows = [], 0
+    if buf:
+        _flush(buf)
+
+
+def _repartition_join(lp: SpillPartition, rp: SpillPartition, lres: list,
+                      rres: list, how: str, bufman: BufferManager,
+                      vplan: Optional[list], as_float: bool,
+                      depth: int) -> tuple:
+    """Recursively split an over-budget join partition pair (skew/cap
+    proofing): both sides re-scatter with a re-salted hash — equal keys
+    still meet in the same sub-pair — and sub-pairs stream through the same
+    prefetching consumer.  Probe order needs no care here: the caller's
+    final stable sort by global left row restores it whatever the partition
+    structure.  At the depth bound (a single hot key cannot be split by
+    hashing) the pair is processed whole."""
+    if depth >= MAX_REPARTITION_DEPTH:
+        with bufman.pinned(lp.nbytes + rp.nbytes):
+            return _join_partition_pair(lres, rres, lp.load(), rp.load(),
+                                        how, vplan)
+    nbytes = lp.nbytes + rp.nbytes
+    n_sub = choose_partitions(nbytes, bufman.budget)
+    rows = lp.rows + rp.rows
+    row_bytes = max(1, nbytes // max(1, rows))
+    morsel = choose_morsel_rows(row_bytes, bufman.budget)
+    bufman.stats.repartitions += 1
+
+    lw = PartitionWriter(bufman, n_sub, dict(lp.streams),
+                         hint=f"jl{depth}")
+    try:
+        _scatter_partition(lp, lw, bufman, n_sub, as_float, depth, morsel)
+        rw = PartitionWriter(bufman, n_sub, dict(rp.streams),
+                             hint=f"jr{depth}")
+        try:
+            _scatter_partition(rp, rw, bufman, n_sub, as_float, depth,
+                               morsel)
+        except BaseException:
+            rw.abort()
+            raise
+    except BaseException:
+        lw.abort()
+        raise
+    lp.release()
+    rp.release()
+
+    out_l, out_r = [], []
+    groups = list(zip(lw.finalize(), rw.finalize()))
+    for (slp, srp), arrs in PartitionPrefetcher(
+            bufman, groups, max_load_bytes=bufman.budget):
+        if slp.rows == 0:
+            continue
+        if arrs is None:
+            pl, pr = _repartition_join(slp, srp, lres, rres, how, bufman,
+                                       vplan, as_float, depth + 1)
+        else:
+            pl, pr = _join_partition_pair(lres, rres, arrs[0], arrs[1],
+                                          how, vplan)
+        out_l.append(pl)
+        if pr is not None:
+            out_r.append(pr)
+    empty = np.zeros(0, dtype=np.int64)
+    return (np.concatenate(out_l) if out_l else empty,
+            None if how in ("semi", "anti")
+            else (np.concatenate(out_r) if out_r else empty))
+
+
+def partitioned_hash_join(lres: list, rres: list, lsel: np.ndarray,
+                          rsel: np.ndarray, how: str,
+                          bufman: BufferManager,
+                          vplan: Optional[list] = None):
+    """External equi-join.  Inputs are the *pre-null-filtered* selected row
+    positions of each side; output is the same global (lidx, ridx) pairs —
+    in the same order — as the in-memory ``_op_join``.  ``vplan`` (from
+    ``plan_varchar_join``) makes VARCHAR keys with distinct heaps
+    partitionable: both sides either recode to one merged dictionary or
+    spill decoded string bytes, so equal strings always meet in the same
+    partition regardless of which heap coded them.  Pairs that still exceed
+    the budget after the spool's maximum fan-out re-split recursively
+    (``_repartition_join``), so ``peak <= budget`` holds for joins too."""
+    from .types import is_float
+
     as_float = any(is_float(r.dbtype) for r in (lres + rres))
-    row_bytes = _key_row_bytes(lres) + 8
-    est = (len(lsel) + len(rsel)) * row_bytes
+    # size each side with its own heap widths: under the decode strategy
+    # the two sides' average string lengths can differ arbitrarily
+    est = (len(lsel) * _plan_row_bytes(lres, vplan)
+           + len(rsel) * _plan_row_bytes(rres, vplan))
     n_parts = choose_partitions(est, bufman.budget)
 
-    lparts = _spool_side(lres, lsel, bufman, n_parts, as_float, "jl")
+    lparts = _spool_side(lres, lsel, bufman, n_parts, as_float, "jl",
+                         vplan, 0)
     try:
-        rparts = _spool_side(rres, rsel, bufman, n_parts, as_float, "jr")
+        rparts = _spool_side(rres, rsel, bufman, n_parts, as_float, "jr",
+                             vplan, 1)
     except BaseException:
         for lp in lparts:
             lp.release()
@@ -526,11 +781,16 @@ def partitioned_hash_join(lres: list, rres: list, lsel: np.ndarray,
             groups.append((lp, rp))
 
     out_l, out_r = [], []
-    for (lp, rp), arrs in PartitionPrefetcher(bufman, groups):
-        larr, rarr = arrs
-        lidx_g = larr["idx"]
-        ridx_g = rarr["idx"]
-        if rp.rows == 0:
+    for (lp, rp), arrs in PartitionPrefetcher(
+            bufman, groups, max_load_bytes=bufman.budget):
+        if arrs is None:             # pair over budget: recursive re-split
+            pl, pr = _repartition_join(lp, rp, lres, rres, how, bufman,
+                                       vplan, as_float, depth=1)
+            out_l.append(pl)
+            if pr is not None:
+                out_r.append(pr)
+        elif rp.rows == 0:
+            lidx_g = arrs[0]["idx"]
             if how == "anti":
                 out_l.append(lidx_g)
             elif how == "left":
@@ -538,18 +798,11 @@ def partitioned_hash_join(lres: list, rres: list, lsel: np.ndarray,
                 out_r.append(np.full(len(lidx_g), -1, dtype=np.int64))
             # inner / semi: no matches in this partition
         else:
-            lsub = [_gather_result(r, larr[f"k{i}"])
-                    for i, r in enumerate(lres)]
-            rsub = [_gather_result(r, rarr[f"k{i}"])
-                    for i, r in enumerate(rres)]
-            lc, rc, _, _ = _join_codes(lsub, rsub, nk)
-            lidx, ridx = _hash_join(lc, rc, how)
-            if how in ("semi", "anti"):
-                out_l.append(lidx_g[lidx])
-            else:
-                out_l.append(lidx_g[lidx])
-                out_r.append(np.where(
-                    ridx < 0, -1, ridx_g[np.maximum(ridx, 0)]))
+            pl, pr = _join_partition_pair(lres, rres, arrs[0], arrs[1],
+                                          how, vplan)
+            out_l.append(pl)
+            if pr is not None:
+                out_r.append(pr)
 
     gl = np.concatenate(out_l).astype(np.int64) if out_l \
         else np.zeros(0, dtype=np.int64)
@@ -730,8 +983,21 @@ def spooled_row_groups(rows: Iterable[dict], key_fn, bufman: BufferManager,
         handles = [open(p, "wb") for p in paths]
         try:
             batches: list[list] = [[] for _ in range(n_parts)]
+            # sniff the key type for the varchar_spills stat only until a
+            # verdict is possible: a str anywhere counts, and a fully
+            # non-None key settles a numeric shape — so the scan is O(1)
+            # rows for dense keys instead of running over the whole input
+            sniffing = True
             for row in rows:
-                p = hash(key_fn(row)) % n_parts
+                key = key_fn(row)
+                if sniffing:
+                    ks = key if isinstance(key, tuple) else (key,)
+                    if any(isinstance(v, str) for v in ks):
+                        bufman.stats.varchar_spills += 1
+                        sniffing = False
+                    elif all(v is not None for v in ks):
+                        sniffing = False
+                p = hash(key) % n_parts
                 batches[p].append(row)
                 if len(batches[p]) >= 1024:
                     pickle.dump(batches[p], handles[p])

@@ -560,3 +560,326 @@ def test_on_disk_lock_blocks_foreign_process(tmp_path):
     db3 = startup(p)                         # still openable
     assert db3.table("t").num_rows == 5
     db3.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# VARCHAR spill tier: differential budget matrix, heap strategies, fingerprint
+# ---------------------------------------------------------------------------
+
+VARCHAR_BUDGETS = [None, 1 << 20, 64 << 10]    # unlimited / 1 MiB / 64 KiB
+
+
+def _tpch_varchar_queries(db):
+    """The TPC-H queries whose plans carry VARCHAR keys: Q1 groups on
+    l_returnflag/l_linestatus, Q3 filters on c_mktsegment and joins."""
+    from repro.data.tpch_queries import ALL_QUERIES
+    return {qn: ALL_QUERIES[qn](db).execute().to_pydict()
+            for qn in ("q1", "q3")}
+
+
+@pytest.fixture(scope="module")
+def tpch_varchar_baseline():
+    from repro.data import tpch
+    db = startup()
+    tpch.load_into(db, sf=0.01, seed=3)
+    return _tpch_varchar_queries(db)
+
+
+@pytest.mark.outofcore
+@pytest.mark.parametrize("budget", VARCHAR_BUDGETS)
+def test_tpch_varchar_budget_matrix(tpch_varchar_baseline, budget):
+    """Differential harness: the VARCHAR-keyed TPC-H queries must be
+    bit-identical to the unlimited run at every budget, with the spill path
+    provably engaged (spilled_ops > 0) at the tight budgets and the peak
+    contract intact."""
+    from repro.data import tpch
+    db = startup(memory_budget=budget)
+    tpch.load_into(db, sf=0.01, seed=3)
+    got = _tpch_varchar_queries(db)
+    for qn, want in tpch_varchar_baseline.items():
+        _assert_identical(want, got[qn], f"budget={budget} {qn}")
+    st = db.buffer_manager.stats
+    if budget is None:
+        assert st.spilled_ops == 0
+    else:
+        assert st.spilled_ops > 0, f"budget={budget} never spilled"
+        assert st.peak <= budget, (st.peak, budget)
+    assert db.buffer_manager.active_files == 0
+
+
+@pytest.fixture(scope="module")
+def vdataset():
+    """String-keyed fact/dim whose VARCHAR columns are encoded against
+    *distinct* heaps (separate loads, different value sets), with NULL keys
+    mixed in — the shape the spill tier used to decline."""
+    rng = np.random.default_rng(21)
+    n = 60_000
+    words = [f"{a}{b}{c}" for a in "abcdefghij" for b in "klmnopqrst"
+             for c in "uvwxyz0123456789"]          # 1600 distinct strings
+    pick = rng.integers(0, len(words), n)
+    null_at = rng.random(n) < 0.07
+    fact = {"s": [None if null_at[i] else words[pick[i]] for i in range(n)],
+            "v": rng.normal(size=n),
+            "k": rng.integers(0, 100, n)}
+    dim_words = [words[i] for i in rng.permutation(len(words))[:1200]]
+    dim = {"s": dim_words,
+           "label": np.arange(len(dim_words), dtype=np.int64)}
+    return fact, dim
+
+
+def _vbuild(vdataset, budget):
+    fact, dim = vdataset
+    db = startup(memory_budget=budget)
+    db.create_table("t", fact)
+    db.create_table("d", dim)
+    return db
+
+
+def _vqueries(db):
+    out = {}
+    out["join"] = (db.scan("t").join(db.scan("d"), on="s")
+                   .group_by("label").agg(sv=("sum", "v"), c=("count", None))
+                   .execute().to_pydict())
+    out["semi"] = (db.scan("t").join(db.scan("d"), on="s", how="semi")
+                   .agg(c=("count", None)).execute().to_pydict())
+    out["anti"] = (db.scan("t").join(db.scan("d"), on="s", how="anti")
+                   .agg(c=("count", None)).execute().to_pydict())
+    out["group"] = (db.scan("t").group_by("s", "k")
+                    .agg(sv=("sum", "v"), c=("count", None))
+                    .execute().to_pydict())
+    out["sort"] = (db.scan("t").order_by("s", ("v", True), limit=2000)
+                   .select("s", "v").execute().to_pydict())
+    return out
+
+
+@pytest.fixture(scope="module")
+def vbaseline(vdataset):
+    return _vqueries(_vbuild(vdataset, None))
+
+
+@pytest.mark.parametrize("budget", VARCHAR_BUDGETS)
+def test_varchar_distinct_heap_budget_matrix(vdataset, vbaseline, budget):
+    """Join / group-by / sort over VARCHAR keys with distinct heaps:
+    bit-identical results — values, NULLs, and the decoded (heap) contents
+    of VARCHAR output columns — across the budget matrix, with
+    ``varchar_spills`` proving the new path ran and ``peak <= budget``."""
+    db = _vbuild(vdataset, budget)
+    got = _vqueries(db)
+    for qn in vbaseline:
+        _assert_identical(vbaseline[qn], got[qn], f"budget={budget} q={qn}")
+    st = db.buffer_manager.stats
+    if budget is None:
+        assert st.spilled_ops == 0 and st.varchar_spills == 0
+    else:
+        assert st.spilled_ops > 0 and st.varchar_spills > 0, \
+            (budget, st.spilled_ops, st.varchar_spills)
+        assert st.peak <= budget, (st.peak, budget)
+    assert db.buffer_manager.active_files == 0
+
+
+def test_varchar_join_strategy_selection(vdataset):
+    """plan_varchar_join picks the strategy from the heap/budget ratio:
+    distinct heaps merge into one shared dictionary when they fit the
+    budget, fall back to decoded string bytes when they don't — and the
+    merged dictionary is an order-preserving superset of both inputs."""
+    from repro.core import spill
+    from repro.core.expression import ExprResult
+    from repro.core.types import DBType
+
+    mk = lambda c: [ExprResult(c.data, DBType.VARCHAR, None, c.heap)]
+    big = _vbuild(vdataset, 1 << 20)
+    lres = mk(big.table("t").columns["s"])
+    rres = mk(big.table("d").columns["s"])
+    heap_bytes = lres[0].heap.nbytes() + rres[0].heap.nbytes()
+    assert heap_bytes <= (1 << 20) // 4          # merge is affordable here
+
+    plan = spill.plan_varchar_join(lres, rres, big.buffer_manager)
+    assert plan[0][0] == "recode"
+    merged, lmap, rmap = plan[0][1], plan[0][2], plan[0][3]
+    mvals = [str(v) for v in merged.values[1:]]
+    assert mvals == sorted(mvals)                # order-preserving codes
+    assert set(str(v) for v in lres[0].heap.values[1:]) <= set(mvals)
+    assert set(str(v) for v in rres[0].heap.values[1:]) <= set(mvals)
+    # recode maps preserve NULL and value identity
+    assert lmap[0] == 0 and rmap[0] == 0
+    assert [str(merged.values[c]) for c in lmap[1:]] \
+        == [str(v) for v in lres[0].heap.values[1:]]
+    assert [str(merged.values[c]) for c in rmap[1:]] \
+        == [str(v) for v in rres[0].heap.values[1:]]
+
+    tight = _vbuild(vdataset, 64 << 10)
+    assert heap_bytes > (64 << 10) // 4          # merge would blow the budget
+    plan = spill.plan_varchar_join(lres, rres, tight.buffer_manager)
+    assert plan[0] == ("decode",)
+
+
+def test_separately_loaded_copies_take_code_fast_path(monkeypatch):
+    """Regression: the spill tier used to decline VARCHAR joins whenever the
+    two heap *objects* differed (``lr.heap is not rr.heap``), so two
+    separately-loaded copies of the same table fell back to fully-resident
+    execution.  The content fingerprint routes them through the partitioned
+    fast path on plain int32 codes — no heap merge, no string decode."""
+    from repro.core import spill
+    from repro.core.column import StringHeap
+    from repro.core.expression import ExprResult
+    from repro.core.types import DBType
+
+    rng = np.random.default_rng(31)
+    vals = [f"key{i:04d}" for i in range(800)]
+    keys = [vals[i] for i in rng.integers(0, 800, 20_000)]
+    budget = 48 << 10
+    base = startup()
+    db = startup(memory_budget=budget)
+    for d in (base, db):
+        d.create_table("a", {"s": list(keys),
+                             "v": np.arange(20_000, dtype=np.int64)})
+        d.create_table("b", {"s": list(keys)})
+    ca, cb = db.table("a").columns["s"], db.table("b").columns["s"]
+    assert ca.heap is not cb.heap                # genuinely separate objects
+    assert ca.heap.content_equal(cb.heap)
+    mk = lambda c: [ExprResult(c.data, DBType.VARCHAR, None, c.heap)]
+    plan = spill.plan_varchar_join(mk(ca), mk(cb), db.buffer_manager)
+    assert plan == [("codes",)]
+
+    q = lambda d: (d.scan("a").join(d.scan("b"), on="s", how="semi")
+                   .agg(c=("count", None), sv=("sum", "v"))
+                   .execute().to_pydict())
+    want = q(base)
+    monkeypatch.setattr(StringHeap, "merge",
+                        lambda *a, **k: pytest.fail("merge on fast path"))
+    monkeypatch.setattr(StringHeap, "decode",
+                        lambda *a, **k: pytest.fail("decode on fast path"))
+    got = q(db)
+    _assert_identical(want, got, "separately-loaded copies")
+    st = db.buffer_manager.stats
+    assert st.spilled_ops > 0 and st.varchar_spills > 0
+    assert st.peak <= budget
+
+
+def test_varchar_join_recursive_repartition():
+    """Long string keys make decoded partitions outgrow the budget even at
+    the maximum spool fan-out: join partition pairs must re-split
+    recursively (re-salted hash) and keep peak <= budget with identical
+    results for every join flavor."""
+    rng = np.random.default_rng(5)
+    n = 40_000
+    words = [f"verylongstringkeypayload-{i:06d}-{'x' * 24}"
+             for i in range(4000)]
+    data = {"s": [words[i] for i in rng.integers(0, 4000, n)],
+            "v": rng.normal(size=n)}
+    dim = {"s": [words[i] for i in rng.integers(0, 3000, 3000)],
+           "m": np.arange(3000, dtype=np.int64)}
+    budget = 48 << 10
+
+    def build(b):
+        db = startup(memory_budget=b)
+        db.create_table("t", data)
+        db.create_table("d", dim)
+        return db
+
+    def q(db, how):
+        qq = db.scan("t").join(db.scan("d"), on="s", how=how)
+        if how in ("semi", "anti"):
+            return qq.agg(c=("count", None)).execute().to_pydict()
+        return (qq.group_by("m").agg(sv=("sum", "v"), c=("count", None))
+                .execute().to_pydict())
+
+    base = build(None)
+    db = build(budget)
+    for how in ("inner", "semi", "anti"):
+        _assert_identical(q(base, how), q(db, how), f"repartition {how}")
+    st = db.buffer_manager.stats
+    assert st.repartitions > 0, "expected join pairs to re-split"
+    assert st.varchar_spills > 0
+    assert st.peak <= budget, (st.peak, budget)
+    assert db.buffer_manager.active_files == 0
+    # left-join identity on a fresh db: grouping its unmatched (NULL) rows
+    # takes the pre-existing giant-group fallback, exempt from the peak
+    # contract
+    db2 = build(budget)
+    _assert_identical(q(base, "left"), q(db2, "left"), "repartition left")
+    assert db2.buffer_manager.active_files == 0
+
+
+def test_string_block_codec_roundtrip():
+    """The offsets+bytes string codec round-trips object arrays through
+    files and byte streams: unicode, empty strings, long values, empty
+    blocks — mixed with integer blocks in one stream protocol."""
+    import io
+    from repro.core import buffers
+    cases = [
+        np.asarray(["", "a", "päper", "日本語テキスト", "x" * 4096, "tab\there"],
+                   dtype=object),
+        np.asarray(["dup", "dup", "dup"], dtype=object),
+        np.empty(0, dtype=object),
+    ]
+    for arr in cases:
+        for codec in (buffers.CODEC_RAW, buffers.CODEC_FOR):
+            blk = buffers.encode_block(arr, codec)
+            out = buffers.decode_stream(blk, object)
+            assert out.dtype == object
+            assert list(out) == list(arr)
+    # multi-block stream through the file API, with spill accounting
+    bm = buffers.BufferManager(budget=1 << 20)
+    f = io.BytesIO()
+    a = np.asarray([f"s{i}" for i in range(1000)], dtype=object)
+    buffers.write_stream_block(f, a[:500], buffers.CODEC_FOR, bm)
+    buffers.write_stream_block(f, a[500:], buffers.CODEC_FOR, bm)
+    f.seek(0)
+    first = buffers.read_stream_block(f, object)
+    second = buffers.read_stream_block(f, object)
+    assert list(first) + list(second) == list(a)
+    assert buffers.read_stream_block(f, object) is None
+    assert bm.stats.bytes_spilled_raw == buffers.logical_nbytes(a)
+    bm.cleanup()
+
+
+def test_exec_stats_varchar_spills(vdataset):
+    """ExecStats mirrors the varchar spill counter per query, and the
+    transaction-scoped connection path threads it to the parent database."""
+    db = _vbuild(vdataset, 64 << 10)
+    (db.scan("t").join(db.scan("d"), on="s")
+     .agg(c=("count", None)).execute())
+    assert db.last_stats.spilled_ops > 0
+    assert db.last_stats.varchar_spills > 0
+
+    con = db.connect()
+    con.begin()
+    res = con.query("SELECT s, k, count(*) AS c, sum(v) AS sv FROM t "
+                    "GROUP BY s, k")
+    assert res.nrows > 0
+    assert db.last_stats is not None
+    assert db.last_stats.varchar_spills > 0     # threaded from the snapshot
+    con.rollback()
+
+
+def test_volcano_varchar_spool_estimate():
+    """Regression (volcano routing): estimate_bytes assumes 8 bytes per
+    column, but volcano rows hold *decoded* strings — a string-heavy
+    aggregate under-estimated and stayed fully resident.  The VARCHAR
+    surcharge (average decoded heap width) must push it onto the spooled
+    path with identical output, counted in varchar_spills."""
+    from repro.core.optimizer import optimize
+    from repro.core.volcano import VolcanoExecutor
+    rng = np.random.default_rng(7)
+    n = 4000
+    keys = [f"customer-comment-string-{i % 600:04d}-{'y' * 40}"
+            for i in range(n)]
+    vals = rng.normal(size=n).tolist()
+    base = startup()
+    db = startup(memory_budget=128 << 10)
+    for d in (base, db):
+        d.create_table("t", {"s": list(keys), "v": list(vals)})
+    # the flat estimate (4000 rows x 2 cols x 8 B = 62.5 KiB) fits the
+    # budget; only the ~70 B decoded strings push it over
+    from repro.core.optimizer import estimate_bytes
+    plan = (db.scan("t").group_by("s")
+            .agg(sv=("sum", "v"), c=("count", None)).plan)
+    flat = estimate_bytes(optimize(plan, db.catalog).children[0], db.catalog)
+    assert flat <= 128 << 10
+    rows_mem = VolcanoExecutor(base).execute(optimize(plan, base.catalog))
+    rows_ooc = VolcanoExecutor(db).execute(optimize(plan, db.catalog))
+    assert rows_mem == rows_ooc
+    st = db.buffer_manager.stats
+    assert st.spilled_ops > 0 and st.varchar_spills > 0
+    assert db.buffer_manager.active_files == 0

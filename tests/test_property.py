@@ -1,17 +1,26 @@
 """Hypothesis property tests on engine invariants."""
 
+import os
+
 import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the 'hypothesis' test extra")
 from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+from hypothesis.database import DirectoryBasedExampleDatabase  # noqa: E402
 
 from repro.core import Col, startup
 from repro.core.column import StringHeap
 from repro.core.types import DBType
 
-settings.register_profile("ci", max_examples=40, deadline=None)
+# Found counterexamples persist in-repo: CI (and every later run) replays
+# them first, so a shrunk failure from any machine becomes a regression test.
+_EXAMPLES_DIR = os.path.join(os.path.dirname(__file__),
+                             "hypothesis_examples")
+settings.register_profile(
+    "ci", max_examples=40, deadline=None,
+    database=DirectoryBasedExampleDatabase(_EXAMPLES_DIR))
 settings.load_profile("ci")
 
 
@@ -148,3 +157,106 @@ def test_median_between_min_max(xs):
     got = db.scan("t").agg(m=("median", "x"), lo=("min", "x"),
                            hi=("max", "x")).execute().to_pydict()
     assert got["lo"][0] <= got["m"][0] <= got["hi"][0]
+
+
+# ---------------------------------------------------------------------------
+# VARCHAR spilling across heaps: budgeted == in-memory, property-level
+# ---------------------------------------------------------------------------
+
+_skeys = st.lists(st.one_of(st.none(), st.text(alphabet="abcde", min_size=0,
+                                               max_size=4)),
+                  min_size=1, max_size=40)
+
+
+@st.composite
+def varchar_key_sides(draw):
+    """Two (str|None) key columns whose value sets are disjoint,
+    overlapping, or identical — each side loaded separately, so the two
+    VARCHAR columns always carry distinct heap objects."""
+    left = draw(_skeys)
+    mode = draw(st.sampled_from(["disjoint", "overlap", "identical"]))
+    if mode == "identical":
+        right = list(left)
+    elif mode == "disjoint":
+        right = [None if s is None else s + "zz" for s in draw(_skeys)]
+    else:
+        shared = [s for s in left if s is not None]
+        extra = draw(_skeys)
+        picks = (draw(st.lists(st.sampled_from(shared), max_size=20))
+                 if shared else [])
+        right = extra + picks
+    return left, right
+
+
+def _tile(keys, rows):
+    """Repeat a small drawn key list up to ``rows`` rows so the join/group
+    state reliably exceeds the tiny budgets (the spill decision is
+    cardinality-driven)."""
+    reps = -(-rows // len(keys))
+    return (keys * reps)[:rows]
+
+
+def _mk_sides(left, right, budget):
+    db = startup(memory_budget=budget)
+    lk = _tile(left, 700)
+    rk = _tile(right, 700)
+    db.create_table("l", {"s": lk, "v": np.arange(len(lk), dtype=np.int64)})
+    db.create_table("r", {"s": rk, "w": np.arange(len(rk), dtype=np.int64)})
+    return db
+
+
+# 16 KiB fits the (tiny) merged heap -> shared-dictionary strategy;
+# 1 KiB cannot even hold the heaps -> decoded-string-bytes strategy.
+_TINY_BUDGETS = [16 << 10, 1 << 10]
+
+
+def _is_varchar(db) -> bool:
+    return db.table("l").columns["s"].dbtype == DBType.VARCHAR
+
+
+@given(varchar_key_sides())
+def test_varchar_join_spill_equals_memory(sides):
+    """Budgeted join on (str|None) keys with distinct heaps == in-memory
+    join, for disjoint, overlapping and identical key sets, under both the
+    merged-heap and decoded-bytes strategies."""
+    left, right = sides
+    base = _mk_sides(left, right, None)
+    q = lambda d: (d.scan("l").join(d.scan("r"), on="s")
+                   .agg(c=("count", None), sv=("sum", "v"),
+                        sw=("sum", "w")).execute().to_pydict())
+    want = q(base)
+    for budget in _TINY_BUDGETS:
+        db = _mk_sides(left, right, budget)
+        got = q(db)
+        for c in want:
+            np.testing.assert_array_equal(want[c], got[c],
+                                          err_msg=f"budget={budget} {c}")
+        assert db.buffer_manager.stats.spilled_ops > 0
+        if _is_varchar(db):    # all-NULL draws don't infer VARCHAR at all
+            assert db.buffer_manager.stats.varchar_spills > 0
+        assert db.buffer_manager.active_files == 0
+
+
+@given(varchar_key_sides())
+def test_varchar_groupby_spill_equals_memory(sides):
+    """Budgeted group-by over a (str|None) key (composite with a
+    high-cardinality tiebreaker, so the grouping state must spill) ==
+    in-memory group-by, including the NULL group and output order."""
+    left, _ = sides
+    base = _mk_sides(left, left, None)
+    q = lambda d: (d.scan("l").group_by("s", "v")
+                   .agg(c=("count", None)).execute().to_pydict())
+    want = q(base)
+    for budget in _TINY_BUDGETS:
+        db = _mk_sides(left, left, budget)
+        got = q(db)
+        assert [None if v is None else str(v) for v in want["s"]] \
+            == [None if v is None else str(v) for v in got["s"]], budget
+        np.testing.assert_array_equal(want["v"], got["v"],
+                                      err_msg=str(budget))
+        np.testing.assert_array_equal(want["c"], got["c"],
+                                      err_msg=str(budget))
+        assert db.buffer_manager.stats.spilled_ops > 0
+        if _is_varchar(db):
+            assert db.buffer_manager.stats.varchar_spills > 0
+        assert db.buffer_manager.active_files == 0

@@ -70,6 +70,69 @@ def test_string_heap_merge_recode():
     assert new_codes[2] == 0
 
 
+def test_string_heap_merge_empty_self():
+    """Merging into an empty heap adopts the incoming dictionary whole;
+    the recode map still sends NULL to NULL."""
+    heap = StringHeap()
+    assert len(heap) == 1                      # only the NULL placeholder
+    new_heap, recode, new_codes = heap.merge(["b", None, "a", "b"])
+    assert [str(v) for v in new_heap.values[1:]] == ["a", "b"]
+    assert recode[0] == 0
+    assert list(new_codes) == [2, 0, 1, 2]
+
+
+def test_string_heap_merge_all_null_input():
+    """An all-NULL merge adds nothing: the heap object itself is returned
+    (no re-sort), the recode map is the identity, and every new code is 0."""
+    heap, _ = StringHeap.encode(["x", "y"])
+    new_heap, recode, new_codes = heap.merge([None, None, None])
+    assert new_heap is heap
+    assert list(recode) == [0, 1, 2]
+    assert list(new_codes) == [0, 0, 0]
+
+
+def test_string_heap_merge_present_values_o1_path():
+    """Appending only already-present values must not rebuild the heap:
+    the same object comes back (O(1) in heap size — no global re-sort),
+    recode is the identity, and the new codes hit the existing entries."""
+    heap, _ = StringHeap.encode(["cc", "aa", "bb"])
+    new_heap, recode, new_codes = heap.merge(["bb", None, "aa", "bb"])
+    assert new_heap is heap
+    assert list(recode) == [0, 1, 2, 3]
+    assert list(new_codes) == [heap.code_of("bb"), 0,
+                               heap.code_of("aa"), heap.code_of("bb")]
+
+
+def test_string_heap_merge_keeps_sorted_order():
+    """After any merge the heap stays sorted and the recode map is strictly
+    increasing on non-NULL codes — i.e. merge preserves code order, so
+    range predicates and sorts on recoded columns stay valid."""
+    heap, codes = StringHeap.encode(["delta", "alpha", "mike", "alpha"])
+    new_heap, recode, new_codes = heap.merge(
+        ["zulu", "bravo", "alpha", None, "echo"])
+    vals = [str(v) for v in new_heap.values[1:]]
+    assert vals == sorted(vals)
+    assert all(np.diff(recode[1:]) > 0)        # order-preserving recode
+    # both sides decode to their original strings through the merged heap
+    assert list(new_heap.decode(recode[codes])) \
+        == ["delta", "alpha", "mike", "alpha"]
+    assert [None if c == 0 else str(new_heap.values[c])
+            for c in new_codes] == ["zulu", "bravo", "alpha", None, "echo"]
+
+
+def test_string_heap_fingerprint_content_equality():
+    """Separately-built heaps with identical contents share a fingerprint;
+    any value or order difference changes it."""
+    a, _ = StringHeap.encode(["p", "q", None, "p"])
+    b, _ = StringHeap.encode(["q", None, "p"])
+    assert a is not b
+    assert a.content_equal(b) and b.content_equal(a)
+    assert a.fingerprint() == b.fingerprint()
+    c, _ = StringHeap.encode(["p", "q", "r"])
+    assert not a.content_equal(c)
+    assert not a.content_equal(None)
+
+
 def test_column_from_values_with_nulls():
     c = Column.from_values([1, None, 3], DBType.INT64)
     assert c.nulls().tolist() == [False, True, False]
