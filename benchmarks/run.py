@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_acs     — Fig. 7/8 (ACS wide-table load + statistics)
   bench_kernels — §3 hot-spot kernels
   bench_spill   — out-of-core tier: spill codec ratio + prefetch overlap
+  bench_device  — device tier: resident cache vs streamed vs host fallback
 """
 
 from __future__ import annotations
@@ -18,12 +19,13 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: ingest,export,tpch,acs,kernels,spill")
+                    help="comma list: "
+                         "ingest,export,tpch,acs,kernels,spill,device")
     ap.add_argument("--sf", type=float, default=0.01)
     ap.add_argument("--no-volcano", action="store_true")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
-        "ingest", "export", "tpch", "acs", "kernels", "spill"}
+        "ingest", "export", "tpch", "acs", "kernels", "spill", "device"}
 
     print("name,us_per_call,derived")
     rows: list[str] = []
@@ -50,6 +52,10 @@ def main() -> None:
     if "spill" in which:
         from .bench_spill import run as r
         rows += r(max(args.sf, 0.02))
+        _flush(rows)
+    if "device" in which:
+        from .bench_device import run as r
+        rows += r(args.sf)
         _flush(rows)
 
 

@@ -7,6 +7,7 @@ Public API:
 
 from .buffers import BufferManager
 from .column import Column, StringHeap
+from .device_cache import DeviceBufferManager
 from .exchange import (LazyFrame, copy_for_write, export_table,
                        import_arrays, to_device, zero_copy_view)
 from .expression import (BinOp, Case, Cast, Col, DateLit, Func, InList,

@@ -246,6 +246,13 @@ class BufferStats:
     varchar_spills: int = 0      # spilled ops whose keys include VARCHAR
     prefetch_hits: int = 0       # partitions served by the async prefetcher
     repartitions: int = 0        # oversized partitions split recursively
+    # device tier (device_cache.py): HBM-budgeted block cache counters
+    device_bytes_peak: int = 0   # high-water of tracked device-resident bytes
+    device_bytes_h2d: int = 0    # host→device bytes actually transferred
+    device_cache_hits: int = 0   # blocks served from the cross-query cache
+    device_prefetch_hits: int = 0  # batches whose transfer was issued ahead
+    device_evictions: int = 0    # blocks evicted under budget pressure
+    device_writebacks: int = 0   # dirty (intermediate) blocks copied to host
 
     @property
     def bytes_spilled_compressed(self) -> int:

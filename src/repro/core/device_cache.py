@@ -1,0 +1,318 @@
+"""Device-tier buffer manager: HBM as a budgeted cache over host memory.
+
+The paper's central memory-management trick (§3.1) is treating one tier of
+the hierarchy as a cache over the next — memory-mapped columns let the OS
+page data larger than RAM.  PRs 1-3 built that host tier (``BufferManager``
++ ``spill.py``); this module is its HBM analogue, one level up: all
+device-resident column blocks live under a ``device_budget`` byte budget,
+so the sharded fast path can *stream* tables larger than accelerator memory
+instead of declining them.
+
+``DeviceBufferManager`` owns every device-resident block:
+
+* **pin/unpin accounting** mirroring the host ``BufferManager``: blocks in
+  use by a running query are pinned; ``device_bytes_peak`` (the high-water
+  mark of tracked resident bytes) never exceeds the budget because room is
+  made *before* a transfer is issued;
+* **LRU eviction** of unpinned blocks when a new block needs room.  Clean
+  blocks (base columns — the host copy is authoritative) are simply
+  dropped; dirty blocks (query-produced intermediates, e.g. the partial-
+  aggregate carry) are copied back to host first and transparently
+  re-uploaded on next use;
+* a **cross-query cache** keyed on ``(table, column, version, shard)``:
+  repeated scans of the same column version skip the host→device transfer
+  entirely (``device_cache_hits``, and ``device_bytes_h2d`` stays flat);
+* **async prefetch** support: ``jax.device_put`` is non-blocking, so the
+  execution tier (``parallel.DistributedScanAgg``) issues batch N+1's
+  transfers while batch N computes.  ``put`` makes room by evicting
+  *unpinned* blocks only and raises ``DeviceBudgetError`` when everything
+  resident is pinned — the prefetcher stops issuing at that point, so
+  double-buffering stays inside the budget exactly like the host tier's
+  ``PartitionPrefetcher`` skips loads it cannot pin.
+
+``budget=None`` (the default) means unlimited *placement* but no
+cross-query retention: queries drop their blocks on completion, preserving
+the zero-config spirit (no silent device-memory growth).  Stats are shared
+with the host tier's ``BufferStats`` so one object reports both tiers.
+
+jax is imported lazily inside methods: constructing a manager (every
+``startup()``) must not pull in the accelerator runtime.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .buffers import BufferStats
+
+# Cache keys are 4-tuples (table, column, version, shard).  Pseudo-column
+# names starting with "#" never collide with real schema names (SQL
+# identifiers), so valid masks and query intermediates share the key space.
+VALID_PSEUDOCOL = "#valid"
+CARRY_TABLE = "#carry"
+
+
+class DeviceBudgetError(RuntimeError):
+    """Raised when a block cannot be placed: every resident block is pinned
+    and the budget leaves no room.  Callers fall back to the host tier."""
+
+
+def _jax():
+    """Lazy jax import.  x64 is forced on exactly as parallel.py does at
+    import: analytical columns are int64/float64 and a silent downcast in
+    ``device_put`` would corrupt them when this module is used before the
+    execution tier was imported."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    return jax
+
+
+@dataclass
+class _DeviceBlock:
+    array: object                # jax.Array
+    nbytes: int
+    pins: int = 0
+    dirty: bool = False          # query-produced: evict => copy back to host
+    sharding: object = None      # restored on re-upload after a writeback
+
+
+class DeviceBufferManager:
+    """Byte-budgeted ownership of all device-resident column blocks."""
+
+    def __init__(self, budget: Optional[int] = None,
+                 stats: Optional[BufferStats] = None):
+        if budget is not None and budget <= 0:
+            raise ValueError(
+                f"device budget must be positive, got {budget}")
+        self.budget = budget
+        self.stats = stats if stats is not None else BufferStats()
+        self._blocks: "OrderedDict[tuple, _DeviceBlock]" = OrderedDict()
+        self._host: dict[tuple, np.ndarray] = {}   # written-back dirty blocks
+        self._resident = 0
+        self._lock = threading.RLock()
+
+    # ---- introspection -----------------------------------------------------
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident
+
+    @property
+    def resident_blocks(self) -> int:
+        return len(self._blocks)
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._blocks
+
+    # ---- placement ---------------------------------------------------------
+    def _account(self, nbytes: int) -> None:
+        self._resident += nbytes
+        self.stats.device_bytes_peak = max(self.stats.device_bytes_peak,
+                                           self._resident)
+
+    def _make_room(self, nbytes: int) -> None:
+        """Evict LRU unpinned blocks until ``nbytes`` fits the budget.
+        Runs *before* the new block is accounted, so tracked resident bytes
+        — and therefore ``device_bytes_peak`` — never exceed the budget."""
+        if self.budget is None:
+            return
+        if nbytes > self.budget:
+            raise DeviceBudgetError(
+                f"block of {nbytes} bytes exceeds device budget "
+                f"{self.budget}")
+        while self._resident + nbytes > self.budget:
+            victim = None
+            for key, blk in self._blocks.items():     # LRU order
+                if blk.pins == 0:
+                    victim = key
+                    break
+            if victim is None:
+                raise DeviceBudgetError(
+                    f"cannot place {nbytes} bytes: "
+                    f"{self._resident} resident bytes all pinned "
+                    f"(budget {self.budget})")
+            self._evict(victim)
+
+    def _evict(self, key: tuple) -> None:
+        blk = self._blocks.pop(key)
+        if blk.dirty:
+            # query-produced intermediate: host has no authoritative copy,
+            # write back (with its sharding, so the re-upload restores the
+            # placement consumers were traced against) before dropping the
+            # device reference
+            self._host[key] = (np.asarray(blk.array), blk.sharding)
+            self.stats.device_writebacks += 1
+        self._resident -= blk.nbytes
+        self.stats.device_evictions += 1
+
+    def put(self, key: tuple, host_array: np.ndarray, sharding=None,
+            pin: bool = False, dirty: bool = False) -> object:
+        """Upload one host block (non-blocking ``jax.device_put``); evicts
+        LRU blocks first if the budget requires it.  Returns the device
+        array immediately — the transfer overlaps whatever the caller does
+        next until something forces the value (that is the prefetch
+        mechanism).  ``dirty=True`` marks re-uploaded intermediates, whose
+        only authoritative copy must follow them back out on eviction."""
+        jax = _jax()
+        arr = np.ascontiguousarray(host_array)
+        nbytes = int(arr.nbytes)
+        with self._lock:
+            if key in self._blocks:        # replace (e.g. recycled key)
+                self.drop(key)
+            self._make_room(nbytes)
+            dev = jax.device_put(arr, sharding) if sharding is not None \
+                else jax.device_put(arr)
+            self._blocks[key] = _DeviceBlock(dev, nbytes,
+                                             pins=1 if pin else 0,
+                                             dirty=dirty, sharding=sharding)
+            self._account(nbytes)
+            self.stats.device_bytes_h2d += nbytes
+            self._host.pop(key, None)
+            return dev
+
+    def adopt(self, key: tuple, device_array, nbytes: Optional[int] = None,
+              pin: bool = False, dirty: bool = True) -> object:
+        """Register an array already on device (a query-produced
+        intermediate) — accounted against the budget but no host→device
+        bytes.  Dirty blocks are copied back to host on eviction."""
+        if nbytes is None:
+            nbytes = int(np.dtype(device_array.dtype).itemsize
+                         * int(np.prod(device_array.shape)))
+        with self._lock:
+            if key in self._blocks:
+                self.drop(key)
+            self._make_room(int(nbytes))
+            self._blocks[key] = _DeviceBlock(
+                device_array, int(nbytes), pins=1 if pin else 0,
+                dirty=dirty,
+                sharding=getattr(device_array, "sharding", None))
+            self._account(int(nbytes))
+            self._host.pop(key, None)
+            return device_array
+
+    # ---- lookup ------------------------------------------------------------
+    def get(self, key: tuple, pin: bool = False):
+        """Cache lookup; bumps LRU recency and ``device_cache_hits`` on a
+        hit.  A dirty block that was evicted (written back to host) is
+        transparently re-uploaded.  Returns None on a clean miss."""
+        with self._lock:
+            blk = self._blocks.get(key)
+            if blk is not None:
+                self._blocks.move_to_end(key)
+                if pin:
+                    blk.pins += 1
+                self.stats.device_cache_hits += 1
+                return blk.array
+            entry = self._host.get(key)
+        if entry is None:
+            return None
+        host, sharding = entry
+        return self.put(key, host, sharding=sharding, pin=pin,
+                        dirty=True)                       # re-upload
+
+    def peek(self, key: tuple):
+        """Lookup without recency bump or hit accounting (the prefetch
+        consumer uses this to distinguish prefetch hits from cache hits)."""
+        with self._lock:
+            blk = self._blocks.get(key)
+            return None if blk is None else blk.array
+
+    # ---- pin accounting ----------------------------------------------------
+    def pin(self, key: tuple) -> None:
+        with self._lock:
+            self._blocks[key].pins += 1
+
+    def unpin(self, key: tuple) -> None:
+        with self._lock:
+            blk = self._blocks.get(key)
+            if blk is not None and blk.pins > 0:
+                blk.pins -= 1
+
+    # ---- explicit lifecycle ------------------------------------------------
+    def drop(self, key: tuple) -> None:
+        """Remove a block without writeback or eviction accounting (query
+        teardown of its own blocks; budget-pressure eviction is
+        ``_make_room``'s job)."""
+        with self._lock:
+            blk = self._blocks.pop(key, None)
+            if blk is not None:
+                self._resident -= blk.nbytes
+            self._host.pop(key, None)
+
+    def take_host(self, key: tuple) -> Optional[np.ndarray]:
+        """Fetch a block's value to host and drop it: device copy if
+        resident (blocks until the value is ready), else the written-back
+        host copy."""
+        with self._lock:
+            blk = self._blocks.pop(key, None)
+            if blk is not None:
+                self._resident -= blk.nbytes
+                return np.asarray(blk.array)
+            entry = self._host.pop(key, None)
+            return None if entry is None else entry[0]
+
+    def invalidate_table(self, table: str) -> None:
+        """Drop every block of one table (all columns, versions, shards) —
+        called when a table is dropped or rewritten in place."""
+        with self._lock:
+            for key in [k for k in self._blocks if k[0] == table]:
+                self.drop(key)
+            for key in [k for k in self._host if k[0] == table]:
+                self._host.pop(key, None)
+
+    def invalidate_namespace(self, ns) -> None:
+        """Drop every block whose version component carries key namespace
+        ``ns`` (a transaction snapshot's blocks, once its query ends)."""
+        def _match(k):
+            return isinstance(k[2], tuple) and len(k[2]) == 2 \
+                and k[2][0] == ns
+        with self._lock:
+            for key in [k for k in self._blocks if _match(k)]:
+                self.drop(key)
+            for key in [k for k in self._host if _match(k)]:
+                self._host.pop(key, None)
+
+    def cleanup(self) -> None:
+        """Release everything (database shutdown)."""
+        with self._lock:
+            self._blocks.clear()
+            self._host.clear()
+            self._resident = 0
+
+
+__all__ = ["DeviceBufferManager", "DeviceBudgetError", "DeviceBlockKeys",
+           "VALID_PSEUDOCOL", "CARRY_TABLE"]
+
+
+class DeviceBlockKeys:
+    """Key builders for the shared 4-tuple key space.
+
+    ``shard`` identifies the block's slice of the column and must encode
+    its geometry (the execution tier passes ``(batch_rows, batch_index)``)
+    — two slicings of the same column version are distinct blocks.
+    ``version`` may be a plain table version or a ``(namespace, version)``
+    pair: transaction snapshots use a unique namespace because their
+    tables reuse the version number the next committed write will get."""
+
+    @staticmethod
+    def column(table: str, column: str, version, shard) -> tuple:
+        return (table, column, version, shard)
+
+    @staticmethod
+    def valid(table: str, version, shard) -> tuple:
+        return (table, VALID_PSEUDOCOL, version, shard)
+
+    _seq = 0
+    _seq_lock = threading.Lock()
+
+    @classmethod
+    def carry(cls) -> tuple:
+        """Unique per-query intermediate key (never cached across queries)."""
+        with cls._seq_lock:
+            cls._seq += 1
+            return (CARRY_TABLE, "partial", cls._seq, 0)

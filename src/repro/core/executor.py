@@ -460,6 +460,35 @@ class ExecStats:
     bytes_spilled_compressed: int = 0   # post-codec bytes actually written
     prefetch_hits: int = 0              # partitions loaded ahead of use
     repartitions: int = 0               # oversized partitions split again
+    # device tier (device_cache.py / parallel.DistributedScanAgg): same
+    # best-effort per-query deltas of the shared BufferStats counters
+    device_tier: str = ""               # "", "resident", "streamed"
+    device_cache_hits: int = 0          # blocks served without a transfer
+    device_prefetch_hits: int = 0       # blocks whose copy was issued ahead
+    device_evictions: int = 0           # blocks evicted under budget pressure
+    device_bytes_h2d: int = 0           # host→device bytes this query moved
+    device_writebacks: int = 0          # dirty blocks copied back to host
+    device_bytes_peak: int = 0          # manager high-water mark (lifetime)
+
+
+# Per-query deltas of the database-lifetime BufferStats counters: the field
+# names are shared between BufferStats and ExecStats, so threading is one
+# list instead of hand-maintained positional tuples at every call site.
+SPILL_DELTA_FIELDS = ("bytes_spilled_raw", "bytes_spilled_compressed",
+                      "prefetch_hits", "repartitions")
+DEVICE_DELTA_FIELDS = ("device_cache_hits", "device_prefetch_hits",
+                       "device_evictions", "device_bytes_h2d",
+                       "device_writebacks")
+
+
+def stats_base(buffer_stats, fields) -> tuple:
+    return tuple(getattr(buffer_stats, f) for f in fields)
+
+
+def stats_apply_delta(exec_stats, buffer_stats, base, fields) -> None:
+    for f, b in zip(fields, base):
+        setattr(exec_stats, f,
+                getattr(exec_stats, f) + getattr(buffer_stats, f) - b)
 
 
 class Executor:
@@ -506,9 +535,8 @@ class Executor:
         regs: dict[str, Any] = {}
         result = None
         bm = self.bufman
-        base = None if bm is None else (
-            bm.stats.bytes_spilled_raw, bm.stats.bytes_spilled_compressed,
-            bm.stats.prefetch_hits, bm.stats.repartitions)
+        fields = SPILL_DELTA_FIELDS + DEVICE_DELTA_FIELDS
+        base = None if bm is None else stats_base(bm.stats, fields)
         for ins in prog.instrs:
             self.stats.instructions += 1
             out = self._dispatch(ins, regs)
@@ -521,12 +549,7 @@ class Executor:
                     for name, val in zip(ins.out, out):
                         regs[name] = val
         if base is not None:
-            s = bm.stats
-            self.stats.bytes_spilled_raw += s.bytes_spilled_raw - base[0]
-            self.stats.bytes_spilled_compressed += \
-                s.bytes_spilled_compressed - base[1]
-            self.stats.prefetch_hits += s.prefetch_hits - base[2]
-            self.stats.repartitions += s.repartitions - base[3]
+            stats_apply_delta(self.stats, bm.stats, base, fields)
         return result
 
     # -- dispatch ------------------------------------------------------------

@@ -10,13 +10,27 @@ Fig. 2 with the merge node lowered to an all-reduce.
 
 Two execution tiers:
 
-* ``DistributedScanAgg`` — the jit'd shard_map pipeline for the hot OLAP
-  pattern Aggregate(Filter*(Scan)) with dense group domains.  This is the
-  fragment the multi-pod dry-run lowers on the production mesh, and it uses
-  the Pallas kernels per shard when enabled.
+* ``DistributedScanAgg`` — the device tier for the hot OLAP pattern
+  Aggregate(Filter*(Scan)) with dense group domains: it streams
+  morsel-sized column batches through the HBM-budgeted block cache
+  (``device_cache.DeviceBufferManager``) and merges per-batch raw partials
+  with an order-fixed carry, so the query runs on devices whose memory is
+  smaller than the table.  The batch decomposition is *independent of the
+  device budget* — unbudgeted, generous and tight budgets all execute the
+  identical sequence of jitted batch steps, so results are bit-identical
+  across budgets and only the transfer/caching behaviour differs
+  (resident: blocks stay cached across queries; streamed: LRU eviction
+  recycles them, double-buffered prefetch overlaps the next batch's
+  host→device copy with the current batch's compute).
 * ``ParallelExecutor`` — Executor subclass that routes qualifying plans to
   the distributed tier and everything else to the (host) sequential tier,
   optionally with host-level chunking to exercise merge semantics.
+  ``optimizer.choose_device_tier`` decides streamed-device vs
+  resident-device vs host-spill from the byte estimates.
+
+``build_query_step``/``make_fragment`` (the single-shot whole-table
+fragment) remain for the multi-pod dry-run, which lowers the engine on the
+production mesh.
 
 Chunking heuristics follow the paper: the shard count comes from the mesh
 ("cores"), and small tables are not split at all (`MIN_ROWS_TO_SHARD`).
@@ -40,15 +54,20 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
+from .device_cache import (DeviceBlockKeys, DeviceBudgetError,
+                           DeviceBufferManager)
 from .executor import Executor, _res_nulls
 from .expression import EvalContext, Expr, ExprResult
-from .optimizer import optimize, split_conjuncts
+from .optimizer import choose_device_tier, optimize, split_conjuncts
 from .relalg import (AggregateNode, AggSpec, FilterNode, PlanNode,
                      ProjectNode, ScanNode)
 from .types import DBType, NULL_SENTINEL, is_float
 
 MAX_DENSE_GROUPS = 4096
 MIN_ROWS_TO_SHARD = 4096      # paper: don't split small columns
+DEVICE_BATCH_ROWS = 1 << 16   # morsel batch streamed through the device
+                              # cache; fixed per database (not per budget)
+                              # so results are budget-invariant
 _SUPPORTED_AGGS = {"count", "sum", "avg", "min", "max"}
 
 
@@ -128,68 +147,88 @@ def _eval_jnp(expr: Expr, arrays: dict, meta: dict) -> ExprResult:
     return expr.eval(ctx)
 
 
+def _fragment_mask_gid(spec: ScanAggSpec, meta: dict, valid, arrays):
+    """Shared SPMD prologue: the filter mask and the dense mixed-radix gid.
+    One definition serves both the single-shot fragment and the batched
+    raw-partial fragment — any fix to NULL masking or domain decoding
+    lands in both, preserving their bit-identity."""
+    mask = valid
+    for conj in spec.conjuncts:
+        r = _eval_jnp(conj, arrays, meta)
+        m = r.values != 0
+        if r.null is not None:
+            m = m & ~r.null
+        mask = mask & m
+    if spec.group_keys:
+        gid = jnp.zeros(valid.shape, dtype=jnp.int32)
+        for k, (off, card) in zip(spec.group_keys, spec.key_domains):
+            t, heap, scale = meta[k]
+            kv = arrays[k]
+            code = (kv.astype(jnp.float64) - off).astype(jnp.int32) \
+                if t not in (DBType.VARCHAR,) else kv.astype(jnp.int32)
+            code = jnp.clip(code, 0, card - 1)
+            gid = gid * card + code
+    else:
+        gid = jnp.zeros(valid.shape, dtype=jnp.int32)
+    return mask, gid
+
+
+def _fragment_partials(spec: ScanAggSpec, meta: dict, mask, gid, arrays,
+                       data_axis):
+    """Shared SPMD core: evaluate every aggregate expression once, stack
+    the sum-like columns in ``partial_layout`` order into ONE segment_sum
+    + ONE psum (paper Fig. 2 per-chunk work, MAL-fused), and merge each
+    min/max via its own segment+collective.  Returns (seg, extras) —
+    mergeable raw partials, not yet finalized."""
+    layout = partial_layout(spec)
+    sum_cols = [mask.astype(jnp.float64)]            # cnt_star
+    evals = {}
+    for i, a in enumerate(spec.aggs):
+        if a.expr is None:
+            continue
+        r = _eval_jnp(a.expr, arrays, meta)
+        ok = mask if r.null is None else (mask & ~r.null)
+        f = r.as_float(jnp)
+        evals[i] = (ok, f)
+        sum_cols.append(ok.astype(jnp.float64))      # per-agg count
+        if a.fn in ("sum", "avg"):
+            sum_cols.append(jnp.where(ok, f, 0.0))
+    stacked = jnp.stack(sum_cols, axis=1)            # (rows, n_sum)
+    seg = jax.ops.segment_sum(stacked, gid, num_segments=spec.n_groups)
+    seg = jax.lax.psum(seg, data_axis)               # one collective
+    big = jnp.float64(np.inf)
+    extras = {}
+    for i, fn, _cnt, out_col in layout.minmax:
+        ok, f = evals[i]
+        if fn == "min":
+            v = jnp.where(ok, f, big)
+            s = jax.lax.pmin(jax.ops.segment_min(
+                v, gid, num_segments=spec.n_groups), data_axis)
+        else:
+            v = jnp.where(ok, f, -big)
+            s = jax.lax.pmax(jax.ops.segment_max(
+                v, gid, num_segments=spec.n_groups), data_axis)
+        extras[out_col] = s
+    return seg, extras
+
+
 def make_fragment(spec: ScanAggSpec, meta: dict, data_axis: str = "data"):
     """Build the per-shard SPMD function (traced under shard_map).
 
     arrays: {col: (rows_local,)} storage-repr jnp arrays; ``valid``:
     (rows_local,) bool marking real (non-padding) rows.  Returns
-    (n_groups, n_out) float32 merged partials: per agg, sum & count & min &
-    max slots as needed.
+    (n_groups, n_aggs+1) merged + finalized results: per agg, the ratio /
+    NULL masking already applied (single-shot whole-input execution).
     """
-    aggs = spec.aggs
-    n_groups = spec.n_groups
+    layout = partial_layout(spec)
 
     def fragment(valid, **arrays):
-        mask = valid
-        for conj in spec.conjuncts:
-            r = _eval_jnp(conj, arrays, meta)
-            m = r.values != 0
-            if r.null is not None:
-                m = m & ~r.null
-            mask = mask & m
-        # dense gid (mixed radix over key domains)
-        if spec.group_keys:
-            gid = jnp.zeros(valid.shape, dtype=jnp.int32)
-            for k, (off, card) in zip(spec.group_keys, spec.key_domains):
-                t, heap, scale = meta[k]
-                kv = arrays[k]
-                code = (kv.astype(jnp.float64) - off).astype(jnp.int32) \
-                    if t not in (DBType.VARCHAR,) else kv.astype(jnp.int32)
-                code = jnp.clip(code, 0, card - 1)
-                gid = gid * card + code
-        else:
-            gid = jnp.zeros(valid.shape, dtype=jnp.int32)
-        # One fused pass (paper Fig. 2 per-chunk work, MAL-fused): every
-        # sum-like aggregate stacks into a single (rows, k) segment_sum and
-        # ONE psum, instead of 2 segment_sums + 2 psums per aggregate
-        # (EXPERIMENTS.md §Perf, engine cell).
-        sum_cols = [mask.astype(jnp.float64)]            # cnt_star
-        plans = []                                       # per-agg decode plan
-        minmax = []
-        evals = {}
-        for i, a in enumerate(aggs):
-            if a.expr is None:
-                plans.append((i, "count_star", 0, 0))
-                continue
-            r = _eval_jnp(a.expr, arrays, meta)
-            ok = mask if r.null is None else (mask & ~r.null)
-            f = r.as_float(jnp)
-            evals[i] = (ok, f)
-            sum_cols.append(ok.astype(jnp.float64))      # per-agg count
-            cnt_idx = len(sum_cols) - 1
-            if a.fn in ("sum", "avg"):
-                sum_cols.append(jnp.where(ok, f, 0.0))
-                plans.append((i, a.fn, cnt_idx, len(sum_cols) - 1))
-            elif a.fn == "count":
-                plans.append((i, "count", cnt_idx, 0))
-            else:
-                minmax.append((i, a.fn, cnt_idx))
-        stacked = jnp.stack(sum_cols, axis=1)            # (rows, k)
-        seg = jax.ops.segment_sum(stacked, gid, num_segments=n_groups)
-        seg = jax.lax.psum(seg, data_axis)               # one collective
+        mask, gid = _fragment_mask_gid(spec, meta, valid, arrays)
+        seg, extras = _fragment_partials(spec, meta, mask, gid, arrays,
+                                         data_axis)
         cnt_star = seg[:, 0]
         outs = {}
-        for i, kind, cnt_idx, val_idx in plans:
+        for i, kind, cnt_idx, val_idx in layout.plans:
             if kind == "count_star":
                 outs[i] = cnt_star
             elif kind == "count":
@@ -201,19 +240,10 @@ def make_fragment(spec: ScanAggSpec, meta: dict, data_axis: str = "data"):
                     cnt > 0,
                     v if kind == "sum" else v / jnp.maximum(cnt, 1.0),
                     jnp.nan)
-        big = jnp.float64(np.inf)
-        for i, fn, cnt_idx in minmax:
-            ok, f = evals[i]
-            if fn == "min":
-                v = jnp.where(ok, f, big)
-                s = jax.lax.pmin(jax.ops.segment_min(
-                    v, gid, num_segments=n_groups), data_axis)
-            else:
-                v = jnp.where(ok, f, -big)
-                s = jax.lax.pmax(jax.ops.segment_max(
-                    v, gid, num_segments=n_groups), data_axis)
-            outs[i] = jnp.where(seg[:, cnt_idx] > 0, s, jnp.nan)
-        cols = [outs[i] for i in range(len(aggs))] + [cnt_star]
+        for i, _fn, cnt_idx, out_col in layout.minmax:
+            outs[i] = jnp.where(seg[:, cnt_idx] > 0, extras[out_col],
+                                jnp.nan)
+        cols = [outs[i] for i in range(len(spec.aggs))] + [cnt_star]
         return jnp.stack(cols, axis=1)          # (n_groups, n_aggs+1)
 
     return fragment
@@ -257,17 +287,380 @@ def build_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
 _STEP_CACHE: dict = {}
 
 
+def _meta_key(spec: ScanAggSpec, meta: dict) -> tuple:
+    """The trace-relevant identity of each referenced column: dtype, scale
+    and — for VARCHAR — the heap content fingerprint.  String literal
+    codes and heap bounds are baked into jitted traces at Python time
+    (expression.py), and an append that introduces a novel string
+    re-sorts/renumbers the whole heap, so a step compiled against the old
+    heap must not be reused."""
+    out = []
+    for c in spec.columns:
+        t, heap, scale = meta[c]
+        out.append((c, t, scale,
+                    heap.fingerprint() if heap is not None else None))
+    return tuple(out)
+
+
 def _cached_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh, pad: int):
     """Compiled-fragment cache: repeated queries (the hot-run benchmark
     protocol, dashboards) reuse the jitted shard_map step instead of
     re-tracing per call."""
     key = (spec.table, repr(spec.conjuncts), tuple(spec.group_keys),
+           tuple(spec.key_domains),     # baked into the trace as constants
            tuple((a.fn, repr(a.expr)) for a in spec.aggs),
-           tuple(spec.columns), spec.n_groups, pad, id(mesh.devices.flat[0]),
+           _meta_key(spec, meta), spec.n_groups, pad,
+           id(mesh.devices.flat[0]),
            tuple(mesh.shape.items()))
     if key not in _STEP_CACHE:
         _STEP_CACHE[key] = build_query_step(spec, meta, mesh)
     return _STEP_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# batched device-tier execution: raw partials + order-fixed carry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PartialLayout:
+    """Column layout of the raw-partial matrix one batch step emits.
+
+    Columns ``[0, n_sum)`` combine by addition (cnt_star, then per-agg
+    count and — for sum/avg — value-sum slots, in agg order, exactly the
+    ``sum_cols`` stacking of ``make_fragment``); the remaining columns are
+    one min- or max-combining slot per min/max aggregate.  Unlike the
+    single-shot fragment, ratios and NULL masking are *not* applied on
+    device — partials stay mergeable across batches and ``finalize_partials``
+    applies them once at the end, so the arithmetic is identical no matter
+    how many batches the input was split into."""
+    n_sum: int
+    plans: list                  # (agg_idx, kind, cnt_col, val_col)
+    minmax: list                 # (agg_idx, fn, cnt_col, out_col)
+    kinds: np.ndarray            # (K,) int8: 0 add / 1 min / 2 max
+    init: np.ndarray             # (K,) float64 combine identity per column
+
+
+def partial_layout(spec: ScanAggSpec) -> PartialLayout:
+    plans, minmax = [], []
+    n_sum = 1                                   # col 0: cnt_star
+    for i, a in enumerate(spec.aggs):
+        if a.expr is None:
+            plans.append((i, "count_star", 0, 0))
+            continue
+        cnt = n_sum
+        n_sum += 1
+        if a.fn in ("sum", "avg"):
+            plans.append((i, a.fn, cnt, n_sum))
+            n_sum += 1
+        elif a.fn == "count":
+            plans.append((i, "count", cnt, 0))
+        else:
+            minmax.append([i, a.fn, cnt, 0])
+    k = n_sum
+    for mm in minmax:
+        mm[3] = k
+        k += 1
+    kinds = np.zeros(k, dtype=np.int8)
+    init = np.zeros(k, dtype=np.float64)
+    for _, fn, _, c in minmax:
+        kinds[c] = 1 if fn == "min" else 2
+        init[c] = np.inf if fn == "min" else -np.inf
+    return PartialLayout(n_sum, plans, [tuple(m) for m in minmax],
+                         kinds, init)
+
+
+def make_partial_fragment(spec: ScanAggSpec, meta: dict,
+                          data_axis="data"):
+    """Per-shard SPMD function returning *mergeable* raw partials
+    (n_groups, K) in ``partial_layout`` order — the streaming analogue of
+    ``make_fragment``: the identical shared prologue/core, minus the
+    finalization (which ``finalize_partials`` applies once after the
+    carry has merged every batch)."""
+    layout = partial_layout(spec)
+
+    def fragment(valid, **arrays):
+        mask, gid = _fragment_mask_gid(spec, meta, valid, arrays)
+        seg, extras = _fragment_partials(spec, meta, mask, gid, arrays,
+                                         data_axis)
+        if not extras:
+            return seg
+        cols = [extras[c][:, None] for c in sorted(extras)]
+        return jnp.concatenate([seg] + cols, axis=1)
+
+    return fragment
+
+
+def finalize_partials(spec: ScanAggSpec, partial: np.ndarray) -> np.ndarray:
+    """Merged raw partials -> the (n_groups, n_aggs + 1) matrix
+    ``_assemble`` consumes (same formulas the single-shot fragment applies
+    on device: avg ratios, NULL where a group saw no valid rows)."""
+    layout = partial_layout(spec)
+    cnt_star = partial[:, 0]
+    outs = {}
+    for i, kind, cnt_col, val_col in layout.plans:
+        if kind == "count_star":
+            outs[i] = cnt_star
+        elif kind == "count":
+            outs[i] = partial[:, cnt_col]
+        else:
+            cnt = partial[:, cnt_col]
+            v = partial[:, val_col]
+            outs[i] = np.where(
+                cnt > 0,
+                v if kind == "sum" else v / np.maximum(cnt, 1.0),
+                np.nan)
+    for i, _fn, cnt_col, out_col in layout.minmax:
+        outs[i] = np.where(partial[:, cnt_col] > 0, partial[:, out_col],
+                           np.nan)
+    cols = [outs[i] for i in range(len(spec.aggs))] + [cnt_star]
+    return np.stack(cols, axis=1)
+
+
+def _mesh_axes(mesh: Mesh):
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+
+
+def build_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh):
+    """(init_fn, step_fn): ``step(carry, valid, *cols) -> carry'`` — one
+    jitted fused unit per batch: the shard_map partial fragment plus the
+    carry combine (add / min / max per column).  The carry is replicated
+    over the mesh; ``init_fn`` materializes the combine identity on device
+    (no host→device transfer beyond the compiled constant)."""
+    axes = _mesh_axes(mesh)
+    rowspec = P(axes if len(axes) > 1 else axes[0])
+    layout = partial_layout(spec)
+    frag = make_partial_fragment(spec, meta, data_axis=axes)
+    sm = _shard_map_compat(
+        lambda valid, *cols: frag(valid, **dict(zip(spec.columns, cols))),
+        mesh=mesh, in_specs=(rowspec,) * (1 + len(spec.columns)),
+        out_specs=P())
+    kinds = layout.kinds
+
+    def step(carry, valid, *cols):
+        part = sm(valid, *cols)
+        return jnp.where(kinds == 0, carry + part,
+                         jnp.where(kinds == 1, jnp.minimum(carry, part),
+                                   jnp.maximum(carry, part)))
+
+    rep_sh = NamedSharding(mesh, P())
+    g, k = spec.n_groups, len(kinds)
+    init = jax.jit(lambda: jnp.broadcast_to(
+        jnp.asarray(layout.init), (g, k)) + jnp.float64(0.0),
+        out_shardings=rep_sh)
+    return init, jax.jit(step, out_shardings=rep_sh)
+
+
+def _cached_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
+                       batch_rows: int):
+    key = ("batch", spec.table, repr(spec.conjuncts),
+           tuple(spec.group_keys),
+           tuple(spec.key_domains),     # baked into the trace as constants:
+                                        # a shifted key domain (delete/append
+                                        # moving min/max at equal cardinality)
+                                        # must not reuse the stale step
+           tuple((a.fn, repr(a.expr)) for a in spec.aggs),
+           _meta_key(spec, meta),
+           spec.n_groups, batch_rows, id(mesh.devices.flat[0]),
+           tuple(mesh.shape.items()))
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = build_batch_step(spec, meta, mesh)
+    return _STEP_CACHE[key]
+
+
+class DistributedScanAgg:
+    """Streamed device-tier execution of one Aggregate(Filter*(Scan)).
+
+    The table's rows are cut into fixed-size batches (``batch_rows``,
+    rounded up to a multiple of the shard count; NOT derived from the
+    budget — identical batching across budgets is what makes the budget
+    matrix bit-identical).  Each (column, batch) block flows through the
+    ``DeviceBufferManager``:
+
+    * resident tier: every block fits the budget at once; after the first
+      query all blocks are cache hits and no host→device bytes move;
+    * streamed tier: only batches fit; blocks of consumed batches are
+      LRU-evicted to make room, and batch N+1's transfers are issued
+      (non-blocking ``jax.device_put``) before batch N's compute so copy
+      and compute overlap — ``jax`` orders them by data dependency, and
+      the final host fetch of the carry is the ``block_until_ready``
+      fence.
+
+    The merge carry (a dirty intermediate block) may itself be evicted
+    under a tight budget: it is copied back to host and transparently
+    re-uploaded — the only writeback case, since base-column blocks are
+    clean by definition."""
+
+    def __init__(self, db, spec: ScanAggSpec, mesh: Mesh,
+                 batch_rows: Optional[int] = None):
+        self.db = db
+        self.spec = spec
+        self.mesh = mesh
+        self.devman: DeviceBufferManager = getattr(
+            db, "device_manager", None) or DeviceBufferManager(
+                stats=getattr(db, "buffer_manager", None).stats
+                if getattr(db, "buffer_manager", None) else None)
+        self.table = db.catalog.table(spec.table)
+        self.n_rows = self.table.num_rows
+        # transaction snapshots run under a unique key namespace: their
+        # tables reuse the version number the next committed write gets,
+        # so bare versions would let rolled-back rows alias committed ones
+        self.version_key = (getattr(db, "device_key_namespace", 0),
+                            self.table.version)
+        # mesh identity (device ids + axis layout) joins the shard key:
+        # blocks are sharded FOR a mesh, and serving a 4-device block to a
+        # 2-device step raises inside jit — which the executor would
+        # swallow as a host fallback, silently losing the device tier
+        self.mesh_key = (tuple(mesh.shape.items()),
+                         tuple(d.id for d in mesh.devices.flat))
+        shards = 1
+        for ax in _mesh_axes(mesh):
+            shards *= mesh.shape[ax]
+        m = int(batch_rows or DEVICE_BATCH_ROWS)
+        # round up to the shard count, but never pad past the table: a
+        # small table gets one table-sized batch instead of a full default
+        # batch of mostly padding (which would also inflate the byte
+        # estimates the tier routing runs on up to ~16x).  The clamp
+        # depends only on (n_rows, shards) — identical across budgets, so
+        # budget-matrix bit-identity is unaffected.
+        cap = -(-max(1, self.n_rows) // shards) * shards
+        self.batch_rows = min(-(-m // shards) * shards, cap)
+        self.n_batches = max(1, -(-self.n_rows // self.batch_rows))
+        self.meta = {}
+        row_bytes = 1                                   # valid mask
+        for c in spec.columns:
+            col = self.table.column(c)
+            self.meta[c] = (col.dbtype, col.heap, col.scale)
+            row_bytes += col.data.dtype.itemsize
+        layout = partial_layout(spec)
+        self.carry_nbytes = spec.n_groups * len(layout.kinds) * 8
+        self.batch_bytes = self.batch_rows * row_bytes + self.carry_nbytes
+        self.resident_bytes = (self.n_batches * self.batch_rows * row_bytes
+                               + self.carry_nbytes)
+
+    # -- placement decision ---------------------------------------------------
+    def choose_tier(self) -> str:
+        return choose_device_tier(
+            self.resident_bytes, self.batch_bytes, self.devman.budget,
+            host_budget=getattr(self.db, "memory_budget", None),
+            host_bytes=self.resident_bytes)
+
+    # -- block builders -------------------------------------------------------
+    def _builders(self, b: int):
+        """Yield (cache key, host-build thunk) for batch ``b``'s blocks:
+        the valid mask first, then every referenced column, each padded to
+        exactly ``batch_rows`` rows (one trace serves all batches).  The
+        shard component of the key is ``(mesh, batch_rows, b)``: a block
+        is only reusable by a query slicing the same geometry onto the
+        same devices — a different ``device_batch_rows`` cuts different
+        row ranges (a bare batch index would serve the wrong rows as a
+        cache hit), and a different mesh needs differently-sharded
+        placements."""
+        spec, table = self.spec, self.table
+        m = self.batch_rows
+        s = b * m
+        e = min(self.n_rows, s + m)
+        shard = (self.mesh_key, m, b)
+
+        def bvalid():
+            a = np.zeros(m, dtype=bool)
+            a[:e - s] = True
+            return a
+
+        yield DeviceBlockKeys.valid(spec.table, self.version_key,
+                                    shard), bvalid
+        for c in spec.columns:
+            col = table.column(c)
+
+            def bcol(col=col):
+                a = np.zeros(m, dtype=col.data.dtype)
+                a[:e - s] = col.data[s:e]       # memmap: pages one morsel
+                return a
+
+            yield (DeviceBlockKeys.column(spec.table, c, self.version_key,
+                                          shard),
+                   bcol)
+
+    def _issue_prefetch(self, b: int, prefetched: set, query_keys: set,
+                        sh) -> None:
+        """Start batch ``b``'s host→device copies (non-blocking) so they
+        overlap the current batch's compute.  ``put`` recycles the budget
+        by evicting *unpinned* (already-consumed) blocks, and the loop
+        stops issuing the moment room would require touching a pinned one
+        — double-buffering never breaks ``device_bytes_peak <= budget``."""
+        for key, build in self._builders(b):
+            if key in self.devman or key in prefetched:
+                continue       # cached: will be a cache hit at consumption
+            try:
+                self.devman.put(key, build(), sharding=sh, pin=True)
+            except DeviceBudgetError:
+                return
+            prefetched.add(key)
+            query_keys.add(key)
+
+    # -- execution ------------------------------------------------------------
+    def run(self, tier: Optional[str] = None) -> np.ndarray:
+        tier = tier or self.choose_tier()
+        if tier == "host":
+            raise DeviceBudgetError("input does not fit the device tier")
+        devman = self.devman
+        spec = self.spec
+        init_fn, step = _cached_batch_step(spec, self.meta, self.mesh,
+                                           self.batch_rows)
+        axes = _mesh_axes(self.mesh)
+        sh = NamedSharding(self.mesh, P(axes if len(axes) > 1 else axes[0]))
+        rep_sh = NamedSharding(self.mesh, P())
+        carry_key = DeviceBlockKeys.carry()
+        query_keys: set = {carry_key}
+        pinned: set = set()
+        prefetched: set = set()
+        try:
+            carry = devman.adopt(carry_key, init_fn(),
+                                 nbytes=self.carry_nbytes, dirty=True)
+            for b in range(self.n_batches):
+                arrs = []
+                batch_keys = []
+                for key, build in self._builders(b):
+                    if key in prefetched:
+                        prefetched.discard(key)         # pinned at issue
+                        arr = devman.peek(key)
+                        devman.stats.device_prefetch_hits += 1
+                    else:
+                        arr = devman.get(key, pin=True)
+                        if arr is None:
+                            arr = devman.put(key, build(), sharding=sh,
+                                             pin=True)
+                    pinned.add(key)
+                    query_keys.add(key)
+                    batch_keys.append(key)
+                    arrs.append(arr)
+                # the carry is unpinned between batches so a tight budget
+                # may have evicted it (writeback); re-upload before use
+                if carry_key not in devman:
+                    host = devman.take_host(carry_key)
+                    carry = devman.put(carry_key, host, sharding=rep_sh,
+                                       pin=False, dirty=True)
+                devman.pin(carry_key)
+                if b + 1 < self.n_batches:
+                    self._issue_prefetch(b + 1, prefetched, query_keys, sh)
+                carry = step(carry, *arrs)              # async dispatch
+                devman.unpin(carry_key)
+                devman.adopt(carry_key, carry, nbytes=self.carry_nbytes,
+                             dirty=True)
+                for key in batch_keys:
+                    devman.unpin(key)
+                    pinned.discard(key)
+            out = devman.take_host(carry_key)   # blocks: the final fence
+            return finalize_partials(spec, out)
+        finally:
+            for key in pinned | prefetched:
+                devman.unpin(key)
+            devman.drop(carry_key)
+            if devman.budget is None:
+                # zero-config: no silent device-memory growth across
+                # queries — cross-query caching is a budgeted feature
+                for key in query_keys:
+                    devman.drop(key)
 
 
 # ---------------------------------------------------------------------------
@@ -285,16 +678,6 @@ class ParallelExecutor(Executor):
         self.use_pallas = use_pallas
         self.distributed_hits = 0
 
-    def _fits_budget(self, plan: PlanNode, catalog) -> bool:
-        """The sharded tier is the fast path for inputs that fit in memory;
-        over-budget plans stay on the host tier, whose blocking operators
-        spill (spill.py) instead of materializing device-resident copies."""
-        budget = getattr(self.db, "memory_budget", None)
-        if budget is None:
-            return True
-        from .optimizer import estimate_bytes
-        return estimate_bytes(plan, catalog) <= budget
-
     def _default_mesh(self) -> Mesh:
         if self.mesh is not None:
             return self.mesh
@@ -306,47 +689,45 @@ class ParallelExecutor(Executor):
         if do_optimize:
             plan = optimize(plan, catalog)
         spec = match_scan_agg(plan, catalog)
-        if spec is not None and self._fits_budget(plan, catalog):
+        if spec is not None:
             table = catalog.table(spec.table)
             if table.num_rows >= MIN_ROWS_TO_SHARD:
-                try:
-                    return self._run_distributed(spec, plan)
-                except Exception:
-                    pass     # fall back to the host tier on any lowering gap
+                result = self._try_distributed(spec, plan, table)
+                if result is not None:
+                    return result
         from .executor import compile_plan
         prog = compile_plan(plan, catalog)
         return self.run_program(prog)
 
     # -- distributed scan-agg -------------------------------------------------
-    def _run_distributed(self, spec: ScanAggSpec, plan: AggregateNode):
-        mesh = self._default_mesh()
-        db = self.db
-        table = db.catalog.table(spec.table)
-        n = table.num_rows
-        shards = 1
-        for ax in ("pod", "data"):
-            if ax in mesh.shape:
-                shards *= mesh.shape[ax]
-        pad = -(-n // shards) * shards
-
-        meta = {}
-        arrays = {}
-        for c in spec.columns:
-            col = table.column(c)
-            meta[c] = (col.dbtype, col.heap, col.scale)
-            a = np.zeros(pad, dtype=col.data.dtype)
-            a[:n] = col.data
-            arrays[c] = a
-        valid = np.zeros(pad, dtype=bool)
-        valid[:n] = True
-
-        step = _cached_query_step(spec, meta, mesh, pad)
-        axes = tuple(nm for nm in mesh.axis_names if nm in ("pod", "data"))
-        sh = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
-        dev_valid = jax.device_put(valid, sh)
-        dev_cols = [jax.device_put(arrays[c], sh) for c in spec.columns]
-        out = np.asarray(step(dev_valid, *dev_cols))   # (G, n_aggs+1)
+    def _try_distributed(self, spec: ScanAggSpec, plan: AggregateNode,
+                         table):
+        """Run the scan-agg through the device tier; None means the plan
+        was routed to the host tier (doesn't fit the device budget, or a
+        lowering gap)."""
+        try:
+            agg = DistributedScanAgg(
+                self.db, spec, self._default_mesh(),
+                batch_rows=getattr(self.db, "device_batch_rows", None))
+            tier = agg.choose_tier()
+        except Exception:
+            return None
+        if tier == "host":
+            return None
+        from .executor import (DEVICE_DELTA_FIELDS, stats_apply_delta,
+                               stats_base)
+        dm = agg.devman.stats
+        base = stats_base(dm, DEVICE_DELTA_FIELDS)
+        try:
+            out = agg.run(tier)
+        except Exception:
+            return None      # fall back to the host tier on any lowering gap
         self.distributed_hits += 1
+        self.stats.device_tier = tier
+        stats_apply_delta(self.stats, dm, base, DEVICE_DELTA_FIELDS)
+        # lifetime gauge, reported only by queries that ran on the device
+        # tier (host-tier queries keep 0 alongside device_tier == "")
+        self.stats.device_bytes_peak = dm.device_bytes_peak
         return self._assemble(spec, plan, out, table)
 
     def _assemble(self, spec: ScanAggSpec, plan: AggregateNode,

@@ -16,6 +16,7 @@ multiple in-process handles per database directory.
 
 from __future__ import annotations
 
+import itertools
 import os
 import threading
 from dataclasses import dataclass, field
@@ -34,6 +35,10 @@ from .types import DBType
 
 _open_dirs: dict[str, "Database"] = {}
 _open_lock = threading.Lock()
+
+# device-cache key namespaces for transaction snapshots (0 = committed
+# catalog; see Connection.query)
+_snapshot_ns = itertools.count(1)
 
 
 class DatabaseError(RuntimeError):
@@ -59,17 +64,26 @@ class Database:
     ``memory_budget`` (bytes) bounds the tracked working state of blocking
     query operators; queries whose intermediates exceed it spill to
     partitioned run files (out-of-core execution — the standard-RDBMS
-    feature the paper contrasts against in-memory analytics tools).  The
-    default ``None`` means unlimited: zero configuration, no spilling."""
+    feature the paper contrasts against in-memory analytics tools).
+    ``device_budget`` (bytes) is the same contract one tier up: it bounds
+    device-resident (HBM) column blocks for distributed execution —
+    over-budget inputs stream morsel batches through the device cache
+    (``core.device_cache``) instead of requiring residency.  The default
+    ``None`` means unlimited: zero configuration, no spilling/eviction."""
 
     def __init__(self, path: Optional[str] = None,
                  memory_budget: Optional[int] = None,
-                 spill_codec: str = "for", spill_prefetch: bool = True):
+                 spill_codec: str = "for", spill_prefetch: bool = True,
+                 device_budget: Optional[int] = None,
+                 device_batch_rows: Optional[int] = None):
         from .buffers import BufferManager
+        from .device_cache import DeviceBufferManager
         self.path = path
         self.memory_budget = memory_budget
         self.spill_codec = spill_codec
         self.spill_prefetch = spill_prefetch
+        self.device_budget = device_budget
+        self.device_batch_rows = device_batch_rows
         self.catalog = Catalog()
         self.txn_manager = TransactionManager()
         self.index_manager = IndexManager(self)
@@ -97,6 +111,10 @@ class Database:
                 spill_dir=self.storage.spill_path()
                 if self.storage is not None else None,
                 codec=spill_codec, prefetch=spill_prefetch)
+            # HBM tier: device blocks share the host tier's stats object so
+            # one BufferStats reports both tiers (jax loads lazily on use)
+            self.device_manager = DeviceBufferManager(
+                device_budget, stats=self.buffer_manager.stats)
         except BaseException:
             # a failed open must not leave the directory locked forever
             if self.storage is not None:
@@ -120,12 +138,23 @@ class Database:
         self.index_manager.imprints.clear()
         self.index_manager.order_indexes.clear()
         self.buffer_manager.cleanup()
+        self.device_manager.cleanup()
         if self.storage is not None:
             self.storage.release_lock()
         self._shutdown = True
         if self.path is not None:
             with _open_lock:
                 _open_dirs.pop(os.path.abspath(self.path), None)
+
+    # ``with startup(path) as db:`` — shutdown (persist + lock release) is
+    # guaranteed on scope exit, including on exceptions
+    def __enter__(self) -> "Database":
+        self._check_alive()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.shutdown()
+        return False
 
     def checkpoint(self) -> None:
         """Fold the WAL into fresh column files (durability compaction)."""
@@ -150,6 +179,7 @@ class Database:
         txn = self.txn_manager.begin(self)
         txn.drop_table(name)
         txn.commit()
+        self.device_manager.invalidate_table(name)
 
     def append(self, name: str, data, types=None, scales=None) -> None:
         """Bulk append (monetdb_append): no per-row INSERT parsing."""
@@ -162,6 +192,10 @@ class Database:
         txn = self.txn_manager.begin(self)
         txn.append(name, chunk)
         txn.commit()
+        # the version bump already keeps correctness (keys carry it); the
+        # invalidation frees the dead version's device blocks so they stop
+        # occupying budget and forcing spurious evictions of live ones
+        self.device_manager.invalidate_table(name)
 
     # ---- querying -------------------------------------------------------------
     def scan(self, name: str) -> Query:
@@ -204,6 +238,7 @@ class Database:
         with self.txn_manager._lock:
             self.catalog.tables[name] = new
             self.index_manager.invalidate_table(name)
+            self.device_manager.invalidate_table(name)
         if self.storage is not None:
             self.storage.write_catalog(self.catalog.tables)
         return int(kill.sum())
@@ -253,7 +288,9 @@ class Database:
 def startup(path: Optional[str] = None,
             memory_budget: Optional[int] = None,
             spill_codec: str = "for",
-            spill_prefetch: bool = True) -> Database:
+            spill_prefetch: bool = True,
+            device_budget: Optional[int] = None,
+            device_batch_rows: Optional[int] = None) -> Database:
     """monetdb_startup: persistent when ``path`` given, else in-memory.
 
     ``memory_budget`` (bytes, default unlimited) enables out-of-core
@@ -266,6 +303,16 @@ def startup(path: Optional[str] = None,
     ``spill_prefetch`` toggles double-buffered background loading of spill
     partitions (default on); prefetched bytes stay pinned inside the
     budget.  Both are no-ops until a query actually spills.
+
+    ``device_budget`` (bytes, default unlimited) is the HBM analogue for
+    distributed execution: all device-resident column blocks live under
+    this budget in an LRU cache keyed on (table, column, version, shard).
+    Inputs that fit stay resident (repeat scans skip the host→device
+    transfer entirely); larger inputs stream morsel batches through the
+    cache with double-buffered async prefetch and partial-aggregate carry
+    — results are bit-identical across budgets.  ``device_batch_rows``
+    fixes the streaming batch size (default 65536; the batch decomposition
+    — not the budget — determines floating-point summation order).
 
     VARCHAR keys spill too, even when the join sides were dictionary-encoded
     against different heaps: small dictionaries merge into one shared heap
@@ -280,14 +327,18 @@ def startup(path: Optional[str] = None,
     if path is None:
         return Database(None, memory_budget=memory_budget,
                         spill_codec=spill_codec,
-                        spill_prefetch=spill_prefetch)
+                        spill_prefetch=spill_prefetch,
+                        device_budget=device_budget,
+                        device_batch_rows=device_batch_rows)
     ap = os.path.realpath(path)      # symlink aliases are the same database
     with _open_lock:
         if ap in _open_dirs and not _open_dirs[ap]._shutdown:
             raise DatabaseError(f"database locked: {ap}")
         db = Database(ap, memory_budget=memory_budget,
                       spill_codec=spill_codec,
-                      spill_prefetch=spill_prefetch)
+                      spill_prefetch=spill_prefetch,
+                      device_budget=device_budget,
+                      device_batch_rows=device_batch_rows)
         _open_dirs[ap] = db
     return db
 
@@ -373,11 +424,27 @@ class Connection:
             # run against the snapshot: materialize a view database
             snap_db = Database(None, memory_budget=db.memory_budget,
                                spill_codec=db.spill_codec,
-                               spill_prefetch=db.spill_prefetch)
+                               spill_prefetch=db.spill_prefetch,
+                               device_budget=db.device_budget,
+                               device_batch_rows=db.device_batch_rows)
             snap_db.catalog.tables = self._txn.tables()
             snap_db.index_manager = IndexManager(snap_db)
             snap_db.buffer_manager = db.buffer_manager   # shared accounting
-            table = snap_db.sql(sql).execute(**kw)
+            # the parent's device manager is shared too — ONE budget
+            # accounting, so physical device residency stays under
+            # device_budget even while a snapshot query runs — but under a
+            # unique key namespace: a snapshot table reuses the version
+            # number the next committed write will get, and namespaced
+            # keys keep rolled-back rows from ever being served to later
+            # queries as cache hits.  The namespace is invalidated when
+            # the query ends (its blocks are uncommitted by definition).
+            snap_db.device_manager = db.device_manager
+            ns = next(_snapshot_ns)
+            snap_db.device_key_namespace = ns
+            try:
+                table = snap_db.sql(sql).execute(**kw)
+            finally:
+                db.device_manager.invalidate_namespace(ns)
             # thread per-query stats (spilled_ops, varchar_spills, spill
             # byte deltas) to the parent database: the snapshot view is
             # discarded, but db.last_stats must reflect the last query run

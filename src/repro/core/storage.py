@@ -53,14 +53,37 @@ def iter_morsels(arr, morsel_rows: int = MORSEL_ROWS):
         yield arr[s:e]
 
 
+def _fsync_dir(path: str) -> None:
+    """Flush a directory entry (the rename itself) to stable storage;
+    best-effort on filesystems that refuse O_RDONLY dir fsync."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def _atomic_write(path: str, write_fn) -> None:
+    """Write-new + fsync + rename + dir-fsync: after this returns, a crash
+    at any point leaves either the old file or the complete new one — the
+    temp file's *contents* are durable before the rename makes them
+    visible, and the rename is durable before callers (e.g. the catalog
+    pointing at fresh column files) build on it."""
     d = os.path.dirname(path)
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d)
     try:
         with os.fdopen(fd, "wb") as f:
             write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(d)
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
@@ -198,6 +221,29 @@ class Storage:
         _atomic_write(os.path.join(self.root, CATALOG),
                       lambda f: f.write(json.dumps(cat, indent=1).encode()))
         self._truncate_wal()
+        self._sweep_stale_versions(cat)
+
+    def _sweep_stale_versions(self, cat: dict) -> None:
+        """Garbage-collect superseded column versions: after a successful
+        catalog write, delete every ``data/`` file the new catalog no
+        longer references (old ``*.v<N>.bin``/``*.heap.json`` versions) —
+        otherwise the directory grows without bound across checkpoints.
+        Safe while old versions are still memory-mapped in this process:
+        POSIX keeps the unlinked inode alive until the maps go away."""
+        keep = set()
+        for meta in cat["tables"].values():
+            for cm in meta["columns"]:
+                keep.add(cm["file"])
+                if "heap" in cm:
+                    keep.add(cm["heap"])
+        d = os.path.join(self.root, DATA_DIR)
+        for name in os.listdir(d):
+            if f"{DATA_DIR}/{name}" in keep:
+                continue
+            try:
+                os.unlink(os.path.join(d, name))
+            except OSError:
+                pass
 
     def has_catalog(self) -> bool:
         return os.path.exists(os.path.join(self.root, CATALOG))
@@ -246,22 +292,62 @@ class Storage:
             os.fsync(f.fileno())
 
     def _read_wal(self):
+        """Replayable WAL records, torn tails repaired.
+
+        A crash can leave (a) a partial trailing manifest line — the append
+        of the line itself was torn — or (b) a manifest entry whose npz
+        never became durable (pre-fsync databases).  Both truncate replay
+        to the longest consistent *prefix*: replaying past a hole would
+        reorder appends relative to commit order.  When a tear was found
+        the manifest is rewritten (atomically) to that prefix, so appends
+        accepted after recovery stay reachable on the next replay instead
+        of hiding behind a broken line."""
         manifest = os.path.join(self.root, WAL_DIR, "wal.jsonl")
         if not os.path.exists(manifest):
             return
+        # cheap scan first: manifest lines + npz presence, no array loads —
+        # replay memory stays one append's payload, as before
+        entries = []                    # (line text, rec)
+        torn = False
         with open(manifest) as f:
             for line in f:
-                line = line.strip()
-                if not line:
+                stripped = line.strip()
+                if not stripped:
                     continue
-                rec = json.loads(line)
-                npz_path = os.path.join(self.root, rec["file"])
+                try:
+                    rec = json.loads(stripped)
+                    npz_path = os.path.join(self.root, rec["file"])
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    torn = True         # partial trailing line
+                    break
                 if not os.path.exists(npz_path):
-                    continue    # torn append: data file missing -> skip
-                with np.load(npz_path, allow_pickle=False) as z:
+                    torn = True         # entry without its data: stop here
+                    break
+                entries.append((stripped, rec))
+        # stream the payloads one append at a time; a truncated/zero-byte/
+        # corrupt npz (np.load raises EOFError, BadZipFile or ValueError
+        # depending on how much survived) is the same durability hole as a
+        # missing one — everything already yielded is the consistent
+        # prefix.  ONLY those corruption errors trigger the destructive
+        # manifest repair: a transient I/O failure (OSError — fd limits,
+        # network filesystems) propagates and fails the open instead of
+        # permanently discarding durable appends.
+        import zipfile
+        good = 0
+        for stripped, rec in entries:
+            try:
+                with np.load(os.path.join(self.root, rec["file"]),
+                             allow_pickle=False) as z:
                     arrays = {k: z[k] for k in z.files}
-                self._wal_seq = max(self._wal_seq, rec["seq"])
-                yield rec, arrays
+            except (EOFError, ValueError, zipfile.BadZipFile):
+                torn = True
+                break
+            good += 1
+            self._wal_seq = max(self._wal_seq, rec["seq"])
+            yield rec, arrays
+        if torn:
+            _atomic_write(manifest, lambda f: f.write(
+                ("".join(ln + "\n" for ln, _ in entries[:good])).encode()))
 
     def _truncate_wal(self) -> None:
         wal = os.path.join(self.root, WAL_DIR)

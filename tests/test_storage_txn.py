@@ -186,3 +186,134 @@ def test_delete_visible_only_after_snapshot(db):
     con.rollback()
     assert db.connect().query(
         "SELECT count(*) n FROM t").to_pydict()["n"][0] == 5
+
+
+# ---------------------------------------------------------------------------
+# durability satellites: torn-WAL recovery, version GC, context manager
+# ---------------------------------------------------------------------------
+
+
+def _crash(db):
+    """Simulate a process crash: drop the in-process registry entry and the
+    flock (which a real crash releases with its fds) without shutdown."""
+    with __import__("repro.core.session", fromlist=["_open_lock"])._open_lock:
+        from repro.core.session import _open_dirs
+        _open_dirs.clear()
+    db.storage.release_lock()
+
+
+def _append_one(db, a, s, d):
+    db.append("t", {"a": np.array([a], dtype=np.int64),
+                    "s": np.asarray([s], dtype=object),
+                    "d": np.array([d])})
+
+
+def test_wal_torn_trailing_line_recovers(tmp_path):
+    """A partial trailing wal.jsonl line (torn append) replays the good
+    prefix, repairs the manifest, and keeps later appends reachable."""
+    db = _mkdb(tmp_path / "db5")
+    db.checkpoint()
+    _append_one(db, 101, "p", 1.0)
+    _append_one(db, 102, "q", 2.0)
+    _crash(db)
+    wal = tmp_path / "db5" / "wal" / "wal.jsonl"
+    good = wal.read_bytes()
+    wal.write_bytes(good + b'{"seq": 3, "table": "t", "fi')   # torn tail
+    db2 = startup(str(tmp_path / "db5"))
+    t = db2.table("t")
+    assert t.num_rows == 102
+    assert list(t.columns["a"].to_numpy()[-2:]) == [101, 102]
+    # manifest was repaired: an append accepted now must survive the next
+    # replay instead of hiding behind the torn line
+    _append_one(db2, 103, "r", 3.0)
+    _crash(db2)
+    db3 = startup(str(tmp_path / "db5"))
+    assert db3.table("t").num_rows == 103
+    assert db3.table("t").columns["a"].to_numpy()[-1] == 103
+    db3.shutdown()
+
+
+def test_wal_missing_npz_recovers_to_prefix(tmp_path):
+    """A manifest entry whose npz is gone stops replay at the last
+    consistent state (the prefix) instead of reordering appends."""
+    db = _mkdb(tmp_path / "db6")
+    db.checkpoint()
+    _append_one(db, 101, "p", 1.0)
+    _append_one(db, 102, "q", 2.0)
+    _crash(db)
+    # the second append's data file vanishes (pre-fsync-era hole)
+    import glob
+    npzs = sorted(glob.glob(str(tmp_path / "db6" / "wal" / "*.npz")))
+    os.unlink(npzs[-1])
+    db2 = startup(str(tmp_path / "db6"))
+    t = db2.table("t")
+    assert t.num_rows == 101
+    assert t.columns["a"].to_numpy()[-1] == 101
+    db2.shutdown()
+
+
+def test_wal_truncated_npz_recovers_to_prefix(tmp_path):
+    """A *truncated* (zero-byte) npz — the pre-fsync durability hole —
+    recovers like a missing one instead of failing the open."""
+    db = _mkdb(tmp_path / "db6b")
+    db.checkpoint()
+    _append_one(db, 101, "p", 1.0)
+    _append_one(db, 102, "q", 2.0)
+    _crash(db)
+    import glob
+    npzs = sorted(glob.glob(str(tmp_path / "db6b" / "wal" / "*.npz")))
+    with open(npzs[-1], "wb"):
+        pass                                 # crash left zero bytes durable
+    db2 = startup(str(tmp_path / "db6b"))
+    t = db2.table("t")
+    assert t.num_rows == 101
+    assert t.columns["a"].to_numpy()[-1] == 101
+    db2.shutdown()
+
+
+def test_checkpoint_sweeps_stale_versions(tmp_path):
+    """Superseded *.v<N>.bin / *.heap.json files are garbage-collected
+    after a successful catalog write — data/ must not grow unboundedly."""
+    db = _mkdb(tmp_path / "db7")
+    data_dir = tmp_path / "db7" / "data"
+    assert any(".v0." in f.name for f in data_dir.iterdir())
+    for i in range(3):
+        _append_one(db, 200 + i, "z", 0.5)
+        db.checkpoint()                      # each bumps the table version
+    names = [f.name for f in data_dir.iterdir()]
+    assert not any(".v0." in n for n in names), names
+    versions = {n.split(".v")[1].split(".")[0] for n in names if ".v" in n}
+    assert len(versions) == 1                # only the live version remains
+    db.shutdown()
+    db2 = startup(str(tmp_path / "db7"))     # sweep never broke the catalog
+    assert db2.table("t").num_rows == 103
+    assert db2.table("t").columns["s"].to_numpy()[-1] == "z"
+    db2.shutdown()
+
+
+def test_atomic_write_leaves_no_temp_files(tmp_path):
+    from repro.core.storage import _atomic_write
+    target = tmp_path / "d" / "f.bin"
+    _atomic_write(str(target), lambda f: f.write(b"payload"))
+    assert target.read_bytes() == b"payload"
+    _atomic_write(str(target), lambda f: f.write(b"v2"))
+    assert target.read_bytes() == b"v2"
+    assert [p.name for p in (tmp_path / "d").iterdir()] == ["f.bin"]
+
+
+def test_database_context_manager(tmp_path):
+    with startup(str(tmp_path / "db8")) as db:
+        db.create_table("t", {"v": np.arange(4, dtype=np.int64)})
+    with pytest.raises(DatabaseError):
+        db.scan("t")                          # shutdown ran on exit
+    with startup(str(tmp_path / "db8")) as db2:   # lock was released
+        assert db2.table("t").num_rows == 4
+
+
+def test_context_manager_releases_lock_on_error(tmp_path):
+    with pytest.raises(RuntimeError, match="boom"):
+        with startup(str(tmp_path / "db9")) as db:
+            db.create_table("t", {"v": np.arange(2, dtype=np.int64)})
+            raise RuntimeError("boom")
+    with startup(str(tmp_path / "db9")) as db2:
+        assert db2.table("t").num_rows == 2
