@@ -184,4 +184,40 @@ print("device hot: cache hits:", hbm.last_stats.device_cache_hits,
       "| new h2d bytes:", hbm.last_stats.device_bytes_h2d,
       "| peak device bytes:", dstats.device_bytes_peak,
       "| evictions:", dstats.device_evictions)
+
+# --- EXPLAIN of physical plans ----------------------------------------------
+# Every query — SQL or builder — is lowered through ONE physical planner
+# (core/physplan.py) before execution.  explain(physical=True) shows the
+# normalized plan with per-operator tier decisions and budget reservations:
+#
+#   * device-resident  — scan-agg core fully cached in device memory
+#   * device-streamed  — core streams morsel batches through the HBM cache
+#   * parallel-host    — core matched the device pattern but stays on host
+#   * spill            — blocking op expected to exceed memory_budget
+#   * in-memory        — fits; runs in RAM
+#
+# Tier decisions are made from data statistics, not the entry point: SQL
+# and builder plans normalize to the same shape (the SQL front-end's
+# rename projection folds into the aggregate), so both lower identically
+# — one planner, many frontends.  Annotations marked (runtime-refined)
+# are plan-time predictions; blocking instructions re-check with actual
+# cardinalities through the same policy at runtime.  Device admission is
+# biased by the cache's hit history: a table that fits the device budget
+# but would occupy more than half of it streams on first touch and flips
+# to resident once repeat queries produce cache hits.
+print(dq.explain(physical=True, distributed=True))
+# The same text is recorded per query on ExecStats:
+print("last plan was:\n", hbm.last_stats.plan_repr)
+
+# --- budgeted result materialization ----------------------------------------
+# Final tables whose columns would exceed memory_budget stream to
+# memmapped columns instead of a second RAM materialization (string heaps
+# stay shared in RAM); the backing files are unlinked immediately, so
+# nothing leaks.  ExecStats/BufferStats count them as result_spills.
+big = (small.scan("trips")
+       .project(city=Col("city"), paid=Col("fare") * 1.1)
+       .execute())
+print("result_spills:", small.last_stats.result_spills,
+      "| columns memmapped:", isinstance(big.columns["paid"].data,
+                                         np.memmap))
 print("OK")

@@ -244,6 +244,7 @@ class BufferStats:
     bytes_spilled_raw: int = 0   # pre-codec (logical) spilled bytes
     spilled_ops: int = 0         # blocking operators that took the spill path
     varchar_spills: int = 0      # spilled ops whose keys include VARCHAR
+    result_spills: int = 0       # final tables streamed to memmapped columns
     prefetch_hits: int = 0       # partitions served by the async prefetcher
     repartitions: int = 0        # oversized partitions split recursively
     # device tier (device_cache.py): HBM-budgeted block cache counters

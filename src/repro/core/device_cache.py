@@ -95,6 +95,13 @@ class DeviceBufferManager:
         self._host: dict[tuple, np.ndarray] = {}   # written-back dirty blocks
         self._resident = 0
         self._lock = threading.RLock()
+        # per-table cumulative cache hits: the runtime statistic the
+        # physical planner's admission policy biases residency with
+        # (physplan.choose_device_tier hit_history).  Survives version
+        # bumps — repeat-access evidence is about the workload, not one
+        # table version — and resets on DROP TABLE
+        # (invalidate_table(drop_history=True)) and cleanup().
+        self._table_hits: dict[str, int] = {}
 
     # ---- introspection -----------------------------------------------------
     @property
@@ -207,6 +214,9 @@ class DeviceBufferManager:
                 if pin:
                     blk.pins += 1
                 self.stats.device_cache_hits += 1
+                if not key[0].startswith("#"):     # real tables only
+                    self._table_hits[key[0]] = \
+                        self._table_hits.get(key[0], 0) + 1
                 return blk.array
             entry = self._host.get(key)
         if entry is None:
@@ -214,6 +224,12 @@ class DeviceBufferManager:
         host, sharding = entry
         return self.put(key, host, sharding=sharding, pin=pin,
                         dirty=True)                       # re-upload
+
+    def hit_history(self, table: str) -> int:
+        """Cumulative cache hits on one table's blocks — the repeat-access
+        evidence ``physplan.choose_device_tier`` biases admission with."""
+        with self._lock:
+            return self._table_hits.get(table, 0)
 
     def peek(self, key: tuple):
         """Lookup without recency bump or hit accounting (the prefetch
@@ -256,14 +272,23 @@ class DeviceBufferManager:
             entry = self._host.pop(key, None)
             return None if entry is None else entry[0]
 
-    def invalidate_table(self, table: str) -> None:
+    def invalidate_table(self, table: str,
+                         drop_history: bool = False) -> None:
         """Drop every block of one table (all columns, versions, shards) —
-        called when a table is dropped or rewritten in place."""
+        called when a table is dropped or rewritten in place.
+
+        ``drop_history=True`` (DROP TABLE) also forgets the table's
+        admission hit history: a future table reusing the name is a
+        different table and must earn residency from scratch.  Appends and
+        in-place rewrites keep the history — repeat-access evidence is
+        about the workload, not one table version."""
         with self._lock:
             for key in [k for k in self._blocks if k[0] == table]:
                 self.drop(key)
             for key in [k for k in self._host if k[0] == table]:
                 self._host.pop(key, None)
+            if drop_history:
+                self._table_hits.pop(table, None)
 
     def invalidate_namespace(self, ns) -> None:
         """Drop every block whose version component carries key namespace
@@ -282,6 +307,7 @@ class DeviceBufferManager:
         with self._lock:
             self._blocks.clear()
             self._host.clear()
+            self._table_hits.clear()
             self._resident = 0
 
 

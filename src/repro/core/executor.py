@@ -19,7 +19,8 @@ from .column import Column, StringHeap
 from .expression import (BinOp, Col, DateLit, EvalContext, Expr, ExprResult,
                          Lit)
 from .mal import Instr, MALProgram
-from .optimizer import optimize, split_conjuncts
+from .optimizer import split_conjuncts
+from .physplan import TierPolicy
 from .relalg import (AggregateNode, AggSpec, FilterNode, JoinNode, LimitNode,
                      OrderByNode, PlanNode, ProjectNode, ScanNode)
 from .types import DBType, NULL_SENTINEL, STORAGE_DTYPE, is_float
@@ -439,6 +440,30 @@ def _probe_group_state(keys: list[ExprResult], idx: np.ndarray,
     return 2 * d
 
 
+def _result_chunk(r: ExprResult, sl: slice) -> np.ndarray:
+    """Storage-dtype conversion + NULL filling for one slice of a result
+    column — shared by the in-RAM materializer (one full-range slice) and
+    the budgeted memmap streamer (morsel slices)."""
+    v = np.asarray(r.values)[sl]
+    t = r.dbtype
+    want = STORAGE_DTYPE[t]
+    if v.dtype != want:
+        if is_float(t):
+            v = v.astype(want)
+        else:
+            vv = v.astype(np.float64) if v.dtype.kind == "f" else v
+            v = np.where(np.isnan(vv), NULL_SENTINEL[t], vv).astype(want) \
+                if v.dtype.kind == "f" else v.astype(want)
+    if r.null is not None:
+        nl = np.asarray(r.null)[sl]
+        if nl.any():
+            if is_float(t):
+                v = np.where(nl, np.nan, v)
+            else:
+                v = np.where(nl, NULL_SENTINEL[t], v).astype(want)
+    return v.astype(want, copy=False)
+
+
 # ---------------------------------------------------------------------------
 # program interpreter
 # ---------------------------------------------------------------------------
@@ -452,6 +477,8 @@ class ExecStats:
     rows_scanned: int = 0
     spilled_ops: int = 0          # blocking ops routed to the spill tier
     varchar_spills: int = 0       # spilled ops whose keys include VARCHAR
+    result_spills: int = 0        # final tables streamed to memmapped cols
+    plan_repr: str = ""           # physical-plan EXPLAIN text of this query
     # per-query spill-pipeline deltas (the BufferManager's counters are
     # database-lifetime cumulative; these isolate this executor's programs).
     # Best-effort under concurrency: the counters are shared per database,
@@ -475,7 +502,7 @@ class ExecStats:
 # names are shared between BufferStats and ExecStats, so threading is one
 # list instead of hand-maintained positional tuples at every call site.
 SPILL_DELTA_FIELDS = ("bytes_spilled_raw", "bytes_spilled_compressed",
-                      "prefetch_hits", "repartitions")
+                      "prefetch_hits", "repartitions", "result_spills")
 DEVICE_DELTA_FIELDS = ("device_cache_hits", "device_prefetch_hits",
                        "device_evictions", "device_bytes_h2d",
                        "device_writebacks")
@@ -495,23 +522,21 @@ class Executor:
     """Sequential host-tier interpreter.  parallel.py subclasses the
     dispatch to run parallelizable spans under shard_map.
 
-    Blocking operators (join / group / sort) consult the database's buffer
-    manager: when the estimated operator state exceeds the configured
-    ``memory_budget`` they route to the partitioned external operators in
-    spill.py, which return bit-identical results while keeping tracked
-    working memory under the budget."""
+    Tier routing is NOT decided here: every plan is lowered through
+    ``physplan.plan_physical`` first, and blocking operators (join / group
+    / sort / result) consult the physical plan's ``TierPolicy`` with their
+    actual runtime cardinalities (paper optimization level 3: the
+    plan-time annotation predicted from statistics, the instruction
+    refines with real sizes — same policy, one definition of every
+    threshold).  Over-budget state routes to the partitioned external
+    operators in spill.py, which return bit-identical results while
+    keeping tracked working memory under the budget."""
 
     def __init__(self, database):
         self.db = database
         self.stats = ExecStats()
         self.bufman = getattr(database, "buffer_manager", None)
-
-    def _over_budget(self, est_bytes: int) -> bool:
-        """Tactical spill decision (paper optimization level 3, extended):
-        made per-instruction from actual runtime cardinalities."""
-        bm = self.bufman
-        return (bm is not None and bm.budget is not None
-                and est_bytes > bm.budget)
+        self.policy = TierPolicy.for_db(database)
 
     def _note_spill(self, varchar: bool) -> None:
         """Count one blocking op routed to the spill tier (per-query and
@@ -525,10 +550,11 @@ class Executor:
 
     # -- entry points -------------------------------------------------------
     def execute(self, plan: PlanNode, do_optimize: bool = True):
-        catalog = self.db.catalog
-        if do_optimize:
-            plan = optimize(plan, catalog)
-        prog = compile_plan(plan, catalog)
+        from .physplan import plan_physical
+        phys = plan_physical(plan, self.db, do_optimize=do_optimize)
+        self.policy = phys.policy
+        self.stats.plan_repr = phys.render()
+        prog = compile_plan(phys.plan, self.db.catalog)
         return self.run_program(prog)
 
     def run_program(self, prog: MALProgram):
@@ -647,7 +673,8 @@ class Executor:
         nl = len(np.asarray(lres[0].values))
         nr = len(np.asarray(rres[0].values))
         key_bytes = sum(np.asarray(r.values).dtype.itemsize for r in lres)
-        if self._over_budget((nl + nr) * (key_bytes + 16)):
+        if self.policy.spills(self.policy.join_state_bytes(nl, nr,
+                                                           key_bytes)):
             from . import spill
             vplan = spill.plan_varchar_join(lres, rres, self.bufman)
             if vplan is not None:
@@ -704,16 +731,13 @@ class Executor:
             gid = np.zeros(len(idx), dtype=np.int64)
             return gid, 1, idx
         key_bytes = sum(np.asarray(k.values).dtype.itemsize for k in keys)
-        if self._over_budget(len(idx) * (key_bytes + 16)) \
-                and self._over_budget(
-                    _probe_group_state(keys, idx) * (key_bytes + 16)):
-            # big input AND big grouping state: grace-hash partition.  A
-            # low-cardinality grouping (few distinct keys) stays in memory —
-            # its blocking state is tiny no matter how large the input, and
-            # partitioning by key could never split the dominant groups.
-            # VARCHAR keys partition on their int32 dictionary codes: a
-            # group-by key has exactly one heap, and the order-preserving
-            # code assignment makes code ranges string ranges.
+        if self.policy.group_spills(len(idx), key_bytes,
+                                    lambda: _probe_group_state(keys, idx)):
+            # grace-hash partition (policy: big input AND big probed
+            # grouping state).  VARCHAR keys partition on their int32
+            # dictionary codes: a group-by key has exactly one heap, and
+            # the order-preserving code assignment makes code ranges
+            # string ranges.
             from . import spill
             self._note_spill(any(k.dbtype == DBType.VARCHAR for k in keys))
             return spill.grace_hash_groupby(keys, idx, self.bufman)
@@ -749,7 +773,7 @@ class Executor:
         keys = [regs[a] for a in ins.args]
         descs = p["descs"]
         n = len(np.asarray(keys[0].values))
-        if self._over_budget(n * 8 * (len(keys) + 1)):
+        if self.policy.spills(self.policy.sort_state_bytes(n, len(keys))):
             from . import spill
             self._note_spill(any(k.dbtype == DBType.VARCHAR for k in keys))
             return spill.external_merge_sort(keys, descs, p["limit"],
@@ -765,31 +789,48 @@ class Executor:
     def _op_result(self, ins, regs):
         from .types import ColumnSchema, TableSchema
         names = ins.payload
+        results = [regs[reg] for reg in ins.args]
+        n_rows = len(np.asarray(results[0].values)) if results else 0
+        total = sum(n_rows * STORAGE_DTYPE[r.dbtype].itemsize
+                    for r in results)
+        # budgeted result materialization: an over-budget final table
+        # streams to memmapped columns instead of a second RAM copy (the
+        # policy decision; string heaps stay shared in RAM — only the
+        # fixed-width code/value arrays go to disk)
+        spill = n_rows > 0 and self.bufman is not None \
+            and self.policy.result_spills(total)
         cols = {}
         schemas = []
-        for name, reg in zip(names, ins.args):
-            r: ExprResult = regs[reg]
-            v = np.asarray(r.values)
-            t = r.dbtype
-            want = STORAGE_DTYPE[t]
-            if v.dtype != want:
-                if is_float(t):
-                    v = v.astype(want)
-                else:
-                    vv = v.astype(np.float64) if v.dtype.kind == "f" else v
-                    v = np.where(np.isnan(vv), NULL_SENTINEL[t], vv).astype(want) \
-                        if v.dtype.kind == "f" else v.astype(want)
-            if r.null is not None:
-                nl = np.asarray(r.null)
-                if nl.any():
-                    if is_float(t):
-                        v = np.where(nl, np.nan, v)
-                    else:
-                        v = np.where(nl, NULL_SENTINEL[t], v).astype(want)
-            cols[name] = Column(t, v, heap=r.heap, scale=r.scale)
-            schemas.append(ColumnSchema(name, t, scale=r.scale))
+        for name, r in zip(names, results):
+            v = self._stream_result_column(r, n_rows) if spill \
+                else _result_chunk(r, slice(None))
+            cols[name] = Column(r.dbtype, v, heap=r.heap, scale=r.scale)
+            schemas.append(ColumnSchema(name, r.dbtype, scale=r.scale))
+        if spill:
+            self.bufman.stats.result_spills += 1
         from .table import Table
         return Table(TableSchema("result", tuple(schemas)), cols)
+
+    def _stream_result_column(self, r: ExprResult, n_rows: int) -> np.ndarray:
+        """Write one result column to a spill file morsel-by-morsel (the
+        storage-dtype conversion runs per morsel, so no second full-size
+        RAM array exists) and map it back with ``np.memmap``.  The file is
+        unlinked immediately after mapping — POSIX keeps the pages
+        reachable until the mapping is dropped — so no spill file outlives
+        the result table and ``active_files`` returns to zero."""
+        from .buffers import choose_morsel_rows
+        from .storage import morsel_ranges
+        want = STORAGE_DTYPE[r.dbtype]
+        morsel = choose_morsel_rows(want.itemsize, self.bufman.budget)
+        path = self.bufman.new_spill_file("result")
+        try:
+            with open(path, "wb") as f:
+                for s, e in morsel_ranges(n_rows, morsel):
+                    f.write(np.ascontiguousarray(
+                        _result_chunk(r, slice(s, e))).tobytes())
+            return np.memmap(path, dtype=want, mode="r")
+        finally:
+            self.bufman.release_file(path)
 
 
 def _simple_range(expr: Expr):

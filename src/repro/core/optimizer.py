@@ -243,33 +243,10 @@ def estimate_bytes(node: PlanNode, catalog) -> float:
     return max([own] + [estimate_bytes(c, catalog) for c in node.children])
 
 
-def choose_device_tier(resident_bytes: float, batch_bytes: float,
-                       device_budget: Optional[int],
-                       host_budget: Optional[int] = None,
-                       host_bytes: Optional[float] = None) -> str:
-    """Device-tier placement decision (paper optimization level 3, one tier
-    up): ``"resident"`` when every block of the input fits the device
-    budget at once, ``"streamed"`` when only morsel batches do (double-
-    buffered: two batch working sets in flight), ``"host"`` when not even
-    one batch fits — the plan stays on the host tier, whose blocking
-    operators spill.
-
-    ``host_budget``/``host_bytes`` fold in the *host* memory budget: the
-    resident path keeps full device-resident copies (host RAM on CPU
-    backends), so an input over the host budget is demoted to streaming —
-    but only under a real device budget, because streaming bounds
-    residency through *eviction*: with ``device_budget=None`` nothing ever
-    evicts, so the demotion would silently retain the whole table and the
-    plan goes to the bounded host spill tier instead (the pre-device-tier
-    behaviour)."""
-    streamable = device_budget is not None \
-        and 2 * batch_bytes <= device_budget
-    if device_budget is not None and resident_bytes > device_budget:
-        return "streamed" if streamable else "host"
-    if host_budget is not None and host_bytes is not None \
-            and host_bytes > host_budget:
-        return "streamed" if streamable else "host"
-    return "resident"
+# Device-tier placement (choose_device_tier) moved to physplan.py: tier
+# routing is the unified physical planner's job; this module keeps the
+# level-1 statistics (estimate_rows / estimate_bytes) the planner costs
+# plans with.
 
 
 def _reorder_joins(node: PlanNode, catalog) -> PlanNode:

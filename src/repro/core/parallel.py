@@ -22,11 +22,14 @@ Two execution tiers:
   (resident: blocks stay cached across queries; streamed: LRU eviction
   recycles them, double-buffered prefetch overlaps the next batch's
   host→device copy with the current batch's compute).
-* ``ParallelExecutor`` — Executor subclass that routes qualifying plans to
-  the distributed tier and everything else to the (host) sequential tier,
-  optionally with host-level chunking to exercise merge semantics.
-  ``optimizer.choose_device_tier`` decides streamed-device vs
-  resident-device vs host-spill from the byte estimates.
+* ``ParallelExecutor`` — Executor subclass that consumes the unified
+  physical plan (``physplan.plan_physical``): a scan-agg core annotated
+  device-resident/device-streamed runs through ``DistributedScanAgg``, a
+  host-side suffix (ORDER BY / LIMIT / projection / HAVING) executes over
+  the assembled aggregate, and everything else goes to the (host)
+  sequential program.  ``physplan.choose_device_tier`` decides
+  streamed-device vs resident-device vs host-spill from the byte
+  estimates, biased by the device cache's hit history.
 
 ``build_query_step``/``make_fragment`` (the single-shot whole-table
 fragment) remain for the multi-pod dry-run, which lowers the engine on the
@@ -38,8 +41,6 @@ Chunking heuristics follow the paper: the shard count comes from the mesh
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -56,85 +57,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
 from .device_cache import (DeviceBlockKeys, DeviceBudgetError,
                            DeviceBufferManager)
-from .executor import Executor, _res_nulls
+from .executor import Executor, _res_nulls, compile_plan
 from .expression import EvalContext, Expr, ExprResult
-from .optimizer import choose_device_tier, optimize, split_conjuncts
-from .relalg import (AggregateNode, AggSpec, FilterNode, PlanNode,
-                     ProjectNode, ScanNode)
+from .physplan import (AGG_RESULT_NAME, DEVICE_BATCH_ROWS, MAX_DENSE_GROUPS,
+                       MIN_ROWS_TO_SHARD, PartialLayout, PhysicalPlan,
+                       ScanAggSpec, TIER_DEVICE_RESIDENT,
+                       TIER_DEVICE_STREAMED, choose_device_tier,
+                       match_scan_agg, mesh_shards, partial_layout,
+                       plan_physical, scan_agg_geometry)
+from .relalg import PlanNode
 from .types import DBType, NULL_SENTINEL, is_float
 
-MAX_DENSE_GROUPS = 4096
-MIN_ROWS_TO_SHARD = 4096      # paper: don't split small columns
-DEVICE_BATCH_ROWS = 1 << 16   # morsel batch streamed through the device
-                              # cache; fixed per database (not per budget)
-                              # so results are budget-invariant
-_SUPPORTED_AGGS = {"count", "sum", "avg", "min", "max"}
-
-
-# ---------------------------------------------------------------------------
-# pattern extraction
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class ScanAggSpec:
-    table: str
-    conjuncts: list[Expr]
-    group_keys: list[str]
-    key_domains: list[tuple[float, int]]     # (offset, cardinality) per key
-    aggs: list[AggSpec]
-    n_groups: int
-    columns: list[str]                       # all referenced base columns
-
-
-def match_scan_agg(plan: PlanNode, catalog) -> Optional[ScanAggSpec]:
-    """Aggregate( Filter* ( Scan ) ) with dense-domain group keys."""
-    if not isinstance(plan, AggregateNode):
-        return None
-    if any(a.fn not in _SUPPORTED_AGGS for a in plan.aggs):
-        return None
-    node = plan.child
-    conjuncts: list[Expr] = []
-    while isinstance(node, FilterNode):
-        conjuncts = split_conjuncts(node.predicate) + conjuncts
-        node = node.child
-    if not isinstance(node, ScanNode):
-        return None
-    table = catalog.table(node.table)
-    # dense domains for the keys
-    domains = []
-    n_groups = 1
-    for k in plan.group_by:
-        col = table.column(k)
-        if col.dbtype == DBType.VARCHAR:
-            offset, card = 0.0, len(col.heap)
-        elif col.dbtype == DBType.BOOL:
-            offset, card = 0.0, 2
-        elif col.dbtype in (DBType.INT32, DBType.INT64, DBType.DATE):
-            v = np.asarray(col.data)
-            nn = v[v != NULL_SENTINEL[col.dbtype]]
-            if nn.size == 0:
-                return None
-            mn, mx = int(nn.min()), int(nn.max())
-            offset, card = float(mn), mx - mn + 1
-        else:
-            return None
-        if card > MAX_DENSE_GROUPS:
-            return None
-        domains.append((offset, card))
-        n_groups *= card
-    if n_groups > MAX_DENSE_GROUPS:
-        return None
-    cols: set[str] = set(plan.group_by)
-    for c in conjuncts:
-        cols |= c.columns()
-    for a in plan.aggs:
-        if a.expr is not None:
-            cols |= a.expr.columns()
-    if not cols:
-        cols = {table.schema.names[0]}
-    return ScanAggSpec(node.table, conjuncts, list(plan.group_by),
-                       domains, list(plan.aggs), n_groups, sorted(cols))
+# The scan-agg pattern matcher, the partial-matrix layout, the batch
+# geometry and the tier-placement policy all live in physplan.py (the
+# unified physical planner); this module executes what the planner
+# decided.  ``match_scan_agg`` / ``ScanAggSpec`` / ``partial_layout`` are
+# re-exported above for existing importers.
 
 
 # ---------------------------------------------------------------------------
@@ -319,55 +257,9 @@ def _cached_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh, pad: int):
 
 # ---------------------------------------------------------------------------
 # batched device-tier execution: raw partials + order-fixed carry
+# (PartialLayout / partial_layout live in physplan.py — the layout of the
+# partial matrix is physical-plan metadata the geometry estimates need)
 # ---------------------------------------------------------------------------
-
-
-@dataclass
-class PartialLayout:
-    """Column layout of the raw-partial matrix one batch step emits.
-
-    Columns ``[0, n_sum)`` combine by addition (cnt_star, then per-agg
-    count and — for sum/avg — value-sum slots, in agg order, exactly the
-    ``sum_cols`` stacking of ``make_fragment``); the remaining columns are
-    one min- or max-combining slot per min/max aggregate.  Unlike the
-    single-shot fragment, ratios and NULL masking are *not* applied on
-    device — partials stay mergeable across batches and ``finalize_partials``
-    applies them once at the end, so the arithmetic is identical no matter
-    how many batches the input was split into."""
-    n_sum: int
-    plans: list                  # (agg_idx, kind, cnt_col, val_col)
-    minmax: list                 # (agg_idx, fn, cnt_col, out_col)
-    kinds: np.ndarray            # (K,) int8: 0 add / 1 min / 2 max
-    init: np.ndarray             # (K,) float64 combine identity per column
-
-
-def partial_layout(spec: ScanAggSpec) -> PartialLayout:
-    plans, minmax = [], []
-    n_sum = 1                                   # col 0: cnt_star
-    for i, a in enumerate(spec.aggs):
-        if a.expr is None:
-            plans.append((i, "count_star", 0, 0))
-            continue
-        cnt = n_sum
-        n_sum += 1
-        if a.fn in ("sum", "avg"):
-            plans.append((i, a.fn, cnt, n_sum))
-            n_sum += 1
-        elif a.fn == "count":
-            plans.append((i, "count", cnt, 0))
-        else:
-            minmax.append([i, a.fn, cnt, 0])
-    k = n_sum
-    for mm in minmax:
-        mm[3] = k
-        k += 1
-    kinds = np.zeros(k, dtype=np.int8)
-    init = np.zeros(k, dtype=np.float64)
-    for _, fn, _, c in minmax:
-        kinds[c] = 1 if fn == "min" else 2
-        init[c] = np.inf if fn == "min" else -np.inf
-    return PartialLayout(n_sum, plans, [tuple(m) for m in minmax],
-                         kinds, init)
 
 
 def make_partial_fragment(spec: ScanAggSpec, meta: dict,
@@ -513,37 +405,28 @@ class DistributedScanAgg:
         # swallow as a host fallback, silently losing the device tier
         self.mesh_key = (tuple(mesh.shape.items()),
                          tuple(d.id for d in mesh.devices.flat))
-        shards = 1
-        for ax in _mesh_axes(mesh):
-            shards *= mesh.shape[ax]
-        m = int(batch_rows or DEVICE_BATCH_ROWS)
-        # round up to the shard count, but never pad past the table: a
-        # small table gets one table-sized batch instead of a full default
-        # batch of mostly padding (which would also inflate the byte
-        # estimates the tier routing runs on up to ~16x).  The clamp
-        # depends only on (n_rows, shards) — identical across budgets, so
-        # budget-matrix bit-identity is unaffected.
-        cap = -(-max(1, self.n_rows) // shards) * shards
-        self.batch_rows = min(-(-m // shards) * shards, cap)
-        self.n_batches = max(1, -(-self.n_rows // self.batch_rows))
+        # batch decomposition + byte footprint come from the physical
+        # planner's shared geometry model — identical numbers whether the
+        # tier was chosen through plan_physical or a direct construction
+        geom = scan_agg_geometry(spec, self.table, mesh_shards(mesh),
+                                 batch_rows)
+        self.batch_rows = geom.batch_rows
+        self.n_batches = geom.n_batches
+        self.carry_nbytes = geom.carry_nbytes
+        self.batch_bytes = geom.batch_bytes
+        self.resident_bytes = geom.resident_bytes
         self.meta = {}
-        row_bytes = 1                                   # valid mask
         for c in spec.columns:
             col = self.table.column(c)
             self.meta[c] = (col.dbtype, col.heap, col.scale)
-            row_bytes += col.data.dtype.itemsize
-        layout = partial_layout(spec)
-        self.carry_nbytes = spec.n_groups * len(layout.kinds) * 8
-        self.batch_bytes = self.batch_rows * row_bytes + self.carry_nbytes
-        self.resident_bytes = (self.n_batches * self.batch_rows * row_bytes
-                               + self.carry_nbytes)
 
     # -- placement decision ---------------------------------------------------
     def choose_tier(self) -> str:
         return choose_device_tier(
             self.resident_bytes, self.batch_bytes, self.devman.budget,
             host_budget=getattr(self.db, "memory_budget", None),
-            host_bytes=self.resident_bytes)
+            host_bytes=self.resident_bytes,
+            hit_history=self.devman.hit_history(self.spec.table))
 
     # -- block builders -------------------------------------------------------
     def _builders(self, b: int):
@@ -668,6 +551,26 @@ class DistributedScanAgg:
 # ---------------------------------------------------------------------------
 
 
+class _SuffixDatabase:
+    """Minimal database view for suffix execution: one catalog entry — the
+    assembled scan-agg core under ``AGG_RESULT_NAME`` — sharing the parent
+    database's buffer manager (one budget accounting)."""
+
+    class _Catalog:
+        def __init__(self, table):
+            self._table = table
+
+        def table(self, name):
+            if name != AGG_RESULT_NAME:
+                raise KeyError(name)
+            return self._table
+
+    def __init__(self, table, buffer_manager):
+        self.catalog = self._Catalog(table)
+        self.buffer_manager = buffer_manager
+        self.index_manager = None
+
+
 class ParallelExecutor(Executor):
     """Routes qualifying plans to the shard_map tier (paper Fig. 2)."""
 
@@ -685,53 +588,80 @@ class ParallelExecutor(Executor):
         return Mesh(dev.reshape(-1), ("data",))
 
     def execute(self, plan: PlanNode, do_optimize: bool = True):
-        catalog = self.db.catalog
-        if do_optimize:
-            plan = optimize(plan, catalog)
-        spec = match_scan_agg(plan, catalog)
-        if spec is not None:
-            table = catalog.table(spec.table)
-            if table.num_rows >= MIN_ROWS_TO_SHARD:
-                result = self._try_distributed(spec, plan, table)
-                if result is not None:
-                    return result
-        from .executor import compile_plan
-        prog = compile_plan(plan, catalog)
+        phys = plan_physical(plan, self.db, do_optimize=do_optimize,
+                             distributed=True, mesh=self._default_mesh())
+        self.policy = phys.policy
+        self.stats.plan_repr = phys.render()
+        if phys.device_tier():
+            result = self._try_distributed(phys)
+            if result is not None:
+                return result
+            # the planner chose the device tier but runtime lowering
+            # failed; the host program is the fallback — re-render so
+            # EXPLAIN/stats reflect what actually ran
+            phys.demote_device()
+            self.stats.plan_repr = phys.render()
+        prog = compile_plan(phys.plan, self.db.catalog)
         return self.run_program(prog)
 
     # -- distributed scan-agg -------------------------------------------------
-    def _try_distributed(self, spec: ScanAggSpec, plan: AggregateNode,
-                         table):
-        """Run the scan-agg through the device tier; None means the plan
-        was routed to the host tier (doesn't fit the device budget, or a
-        lowering gap)."""
+    def _try_distributed(self, phys: PhysicalPlan):
+        """Run the physical plan's scan-agg core through the device tier
+        (the tier the planner annotated), then the host-side suffix
+        (ORDER BY / LIMIT / projection / HAVING) over the assembled
+        aggregate; None means a runtime lowering gap — the caller falls
+        back to the host program."""
+        spec = phys.scan_agg
+        table = self.db.catalog.table(spec.table)
         try:
             agg = DistributedScanAgg(
                 self.db, spec, self._default_mesh(),
                 batch_rows=getattr(self.db, "device_batch_rows", None))
-            tier = agg.choose_tier()
         except Exception:
             return None
-        if tier == "host":
-            return None
-        from .executor import (DEVICE_DELTA_FIELDS, stats_apply_delta,
-                               stats_base)
+        tier = "resident" if phys.agg_tier == TIER_DEVICE_RESIDENT \
+            else "streamed"
+        from .executor import DEVICE_DELTA_FIELDS, stats_base
         dm = agg.devman.stats
         base = stats_base(dm, DEVICE_DELTA_FIELDS)
         try:
             out = agg.run(tier)
         except Exception:
             return None      # fall back to the host tier on any lowering gap
+        result = self._assemble(spec, out, table)
+        # close the device-counter window BEFORE the suffix runs (its host
+        # program threads the same delta fields through run_program)...
+        end = stats_base(dm, DEVICE_DELTA_FIELDS)
+        if phys.suffix_plan is not None:
+            try:
+                result = self._run_suffix(phys.suffix_plan, result)
+            except Exception:
+                return None  # suffix gap: host program recomputes everything
+        # ...but claim the device tier only once the WHOLE query succeeded:
+        # a suffix failure falls back to a full host recompute, and
+        # device_tier / distributed_hits must describe the result returned
         self.distributed_hits += 1
         self.stats.device_tier = tier
-        stats_apply_delta(self.stats, dm, base, DEVICE_DELTA_FIELDS)
+        for f, b, e in zip(DEVICE_DELTA_FIELDS, base, end):
+            setattr(self.stats, f, getattr(self.stats, f) + e - b)
         # lifetime gauge, reported only by queries that ran on the device
         # tier (host-tier queries keep 0 alongside device_tier == "")
         self.stats.device_bytes_peak = dm.device_bytes_peak
-        return self._assemble(spec, plan, out, table)
+        return result
 
-    def _assemble(self, spec: ScanAggSpec, plan: AggregateNode,
-                  out: np.ndarray, table):
+    def _run_suffix(self, suffix_plan: PlanNode, table):
+        """Execute the suffix operators over the assembled aggregate: a
+        host program against a one-table catalog holding the (tiny) core
+        result.  Stats and policy are shared, so suffix sorts/limits that
+        spill are counted against this query."""
+        sdb = _SuffixDatabase(table, self.bufman)
+        sub = Executor(sdb)
+        sub.stats = self.stats
+        sub.policy = self.policy
+        prog = compile_plan(suffix_plan, sdb.catalog)
+        return sub.run_program(prog)
+
+    def _assemble(self, spec: ScanAggSpec, out: np.ndarray, table):
         from .column import Column
         from .table import Table
         from .types import ColumnSchema, TableSchema

@@ -1,0 +1,713 @@
+"""Unified physical planner: one logical→physical lowering pass.
+
+Every query — builder API, SQL, transaction-scoped — flows through
+``plan_physical`` before execution.  The pass has three jobs, matching the
+paper's one-planner-many-frontends architecture (§3: the same optimizer and
+execution machinery serve every entry point, choosing strategies from data
+statistics rather than per-API code paths):
+
+1. **Normalization** — SQL and builder plans converge to identical shapes:
+   trivial (identity) projections are elided, pure-rename projections over
+   an aggregate are pushed into the aggregate's output names, and filter
+   conjuncts are merged + canonically ordered.  This is what fixes "SQL
+   plans never match the device tier": ``parse_sql`` wraps aggregates in a
+   rename ProjectNode that used to hide the Aggregate(Filter*(Scan)) shape
+   from ``match_scan_agg``.
+
+2. **Tier annotation** — each operator gets a tier decision
+   (``device-resident`` / ``device-streamed`` / ``parallel-host`` /
+   ``spill`` / ``in-memory``) and a budget reservation.  The byte models
+   and routing thresholds that used to be smeared across ``executor.py``,
+   ``parallel.py``, ``volcano.py`` and ``optimizer.py`` live here, in ONE
+   costed policy (``TierPolicy``).  Plan-time annotations are predictions
+   from level-1 statistics (``optimizer.estimate_rows``); at runtime the
+   executors refine the blocking-operator decisions with actual
+   cardinalities — through the *same* policy object, so there is exactly
+   one definition of every threshold.  Device admission is biased by the
+   ``DeviceBufferManager``'s cache-hit history: repeated queries on a
+   borderline table flip from streamed to resident.
+
+3. **Observability** — ``PhysicalPlan.render()`` is the EXPLAIN text
+   surfaced through ``Query.explain(physical=True)`` and
+   ``ExecStats.plan_repr``, so tier choices are golden-testable.
+
+The executors are *consumers* of this plan: ``executor.py`` asks the policy
+per blocking instruction, ``parallel.py`` reads the scan-agg core + device
+tier + suffix, ``volcano.py`` asks for its row-spool estimate.  Adding the
+next tier (device joins/sorts) means a new annotation here — not a fifth
+ad-hoc routing fork.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from .expression import Col, Expr
+from .optimizer import estimate_bytes, estimate_rows, optimize, \
+    split_conjuncts
+from .relalg import (AggregateNode, AggSpec, FilterNode, JoinNode, LimitNode,
+                     OrderByNode, PlanNode, ProjectNode, ScanNode, node_line)
+from .types import DBType, NULL_SENTINEL
+
+# ---------------------------------------------------------------------------
+# tier names (the vocabulary of the physical plan)
+# ---------------------------------------------------------------------------
+
+TIER_DEVICE_RESIDENT = "device-resident"
+TIER_DEVICE_STREAMED = "device-streamed"
+TIER_PARALLEL_HOST = "parallel-host"
+TIER_SPILL = "spill"
+TIER_IN_MEMORY = "in-memory"
+
+# pattern limits for the device scan-agg tier (previously in parallel.py)
+MAX_DENSE_GROUPS = 4096
+MIN_ROWS_TO_SHARD = 4096      # paper: don't split small columns
+DEVICE_BATCH_ROWS = 1 << 16   # morsel batch streamed through the device
+                              # cache; fixed per database (not per budget)
+                              # so results are budget-invariant
+SUPPORTED_DEVICE_AGGS = {"count", "sum", "avg", "min", "max"}
+
+# smarter admission (ROADMAP): a table that fits the device budget but
+# would monopolize more than this fraction of the cache is only admitted
+# *resident* once its cache-hit history proves repeat access; until then it
+# streams (whose blocks still populate the cache, accruing that history).
+DEVICE_BORDERLINE_FRACTION = 0.5
+DEVICE_PROMOTE_HITS = 1
+
+# table name of the materialized scan-agg core inside a suffix plan ("#"
+# prefix: never collides with SQL identifiers, same convention as the
+# device cache's pseudo-columns)
+AGG_RESULT_NAME = "#agg"
+
+
+# ---------------------------------------------------------------------------
+# scan-agg pattern (THE device-tier shape) — single definition
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ScanAggSpec:
+    table: str
+    conjuncts: list[Expr]
+    group_keys: list[str]
+    key_domains: list[tuple[float, int]]     # (offset, cardinality) per key
+    aggs: list[AggSpec]
+    n_groups: int
+    columns: list[str]                       # all referenced base columns
+
+
+def match_scan_agg(plan: PlanNode, catalog) -> Optional[ScanAggSpec]:
+    """Aggregate( Filter* ( Scan ) ) with dense-domain group keys."""
+    if not isinstance(plan, AggregateNode):
+        return None
+    if any(a.fn not in SUPPORTED_DEVICE_AGGS for a in plan.aggs):
+        return None
+    node = plan.child
+    conjuncts: list[Expr] = []
+    while isinstance(node, FilterNode):
+        conjuncts = split_conjuncts(node.predicate) + conjuncts
+        node = node.child
+    if not isinstance(node, ScanNode):
+        return None
+    table = catalog.table(node.table)
+    # dense domains for the keys
+    domains = []
+    n_groups = 1
+    for k in plan.group_by:
+        col = table.column(k)
+        if col.dbtype == DBType.VARCHAR:
+            offset, card = 0.0, len(col.heap)
+        elif col.dbtype == DBType.BOOL:
+            offset, card = 0.0, 2
+        elif col.dbtype in (DBType.INT32, DBType.INT64, DBType.DATE):
+            v = np.asarray(col.data)
+            nn = v[v != NULL_SENTINEL[col.dbtype]]
+            if nn.size == 0:
+                return None
+            mn, mx = int(nn.min()), int(nn.max())
+            offset, card = float(mn), mx - mn + 1
+        else:
+            return None
+        if card > MAX_DENSE_GROUPS:
+            return None
+        domains.append((offset, card))
+        n_groups *= card
+    if n_groups > MAX_DENSE_GROUPS:
+        return None
+    cols: set[str] = set(plan.group_by)
+    for c in conjuncts:
+        cols |= c.columns()
+    for a in plan.aggs:
+        if a.expr is not None:
+            cols |= a.expr.columns()
+    if not cols:
+        cols = {table.schema.names[0]}
+    return ScanAggSpec(node.table, conjuncts, list(plan.group_by),
+                       domains, list(plan.aggs), n_groups, sorted(cols))
+
+
+SUFFIX_NODES = (OrderByNode, LimitNode, ProjectNode, FilterNode)
+
+
+def find_scan_agg_core(plan: PlanNode, catalog
+                       ) -> tuple[Optional[AggregateNode],
+                                  Optional[PlanNode]]:
+    """Locate the scan-agg core under a chain of order/limit/project/filter
+    suffix operators.  Returns ``(core, suffix)`` where ``core`` is the
+    topmost AggregateNode reachable from the root through suffix nodes (or
+    None), and ``suffix`` re-applies those nodes over a scan of the core's
+    materialized result (``AGG_RESULT_NAME``), or None when the core IS the
+    root.  The suffix runs on the host over the (tiny) assembled aggregate,
+    which is what lets ORDER BY / LIMIT / HAVING queries keep their
+    scan-agg core on the device tier."""
+    path = []
+    node = plan
+    while isinstance(node, SUFFIX_NODES):
+        path.append(node)
+        node = node.children[0]
+    if not isinstance(node, AggregateNode):
+        return None, None
+    if not path:
+        return node, None
+    suffix: PlanNode = ScanNode(AGG_RESULT_NAME,
+                                tuple(node.output_columns(catalog)))
+    for n in reversed(path):
+        suffix = n.with_children((suffix,))
+    return node, suffix
+
+
+# ---------------------------------------------------------------------------
+# physical layout of the device partial-aggregate matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PartialLayout:
+    """Column layout of the raw-partial matrix one device batch step emits.
+
+    Columns ``[0, n_sum)`` combine by addition (cnt_star, then per-agg
+    count and — for sum/avg — value-sum slots, in agg order); the remaining
+    columns are one min- or max-combining slot per min/max aggregate.
+    Ratios and NULL masking are *not* applied on device — partials stay
+    mergeable across batches and ``parallel.finalize_partials`` applies
+    them once at the end, so the arithmetic is identical no matter how many
+    batches the input was split into."""
+    n_sum: int
+    plans: list                  # (agg_idx, kind, cnt_col, val_col)
+    minmax: list                 # (agg_idx, fn, cnt_col, out_col)
+    kinds: np.ndarray            # (K,) int8: 0 add / 1 min / 2 max
+    init: np.ndarray             # (K,) float64 combine identity per column
+
+
+def partial_layout(spec: ScanAggSpec) -> PartialLayout:
+    plans, minmax = [], []
+    n_sum = 1                                   # col 0: cnt_star
+    for i, a in enumerate(spec.aggs):
+        if a.expr is None:
+            plans.append((i, "count_star", 0, 0))
+            continue
+        cnt = n_sum
+        n_sum += 1
+        if a.fn in ("sum", "avg"):
+            plans.append((i, a.fn, cnt, n_sum))
+            n_sum += 1
+        elif a.fn == "count":
+            plans.append((i, "count", cnt, 0))
+        else:
+            minmax.append([i, a.fn, cnt, 0])
+    k = n_sum
+    for mm in minmax:
+        mm[3] = k
+        k += 1
+    kinds = np.zeros(k, dtype=np.int8)
+    init = np.zeros(k, dtype=np.float64)
+    for _, fn, _, c in minmax:
+        kinds[c] = 1 if fn == "min" else 2
+        init[c] = np.inf if fn == "min" else -np.inf
+    return PartialLayout(n_sum, plans, [tuple(m) for m in minmax],
+                         kinds, init)
+
+
+@dataclass
+class ScanAggGeometry:
+    """Batch decomposition + byte footprint of one device scan-agg.  The
+    geometry depends only on (table, shard count, batch_rows config) —
+    never on the budget — which is what keeps the budget matrix
+    bit-identical."""
+    batch_rows: int
+    n_batches: int
+    row_bytes: int
+    carry_nbytes: int
+    batch_bytes: int
+    resident_bytes: int
+
+
+def scan_agg_geometry(spec: ScanAggSpec, table, shards: int,
+                      batch_rows: Optional[int] = None) -> ScanAggGeometry:
+    n_rows = table.num_rows
+    m = int(batch_rows or DEVICE_BATCH_ROWS)
+    # round up to the shard count, but never pad past the table: a small
+    # table gets one table-sized batch instead of a full default batch of
+    # mostly padding (which would inflate the byte estimates the tier
+    # routing runs on up to ~16x)
+    cap = -(-max(1, n_rows) // shards) * shards
+    rows = min(-(-m // shards) * shards, cap)
+    n_batches = max(1, -(-n_rows // rows))
+    row_bytes = 1                                   # valid mask
+    for c in spec.columns:
+        row_bytes += table.column(c).data.dtype.itemsize
+    carry = spec.n_groups * len(partial_layout(spec).kinds) * 8
+    return ScanAggGeometry(
+        batch_rows=rows, n_batches=n_batches, row_bytes=row_bytes,
+        carry_nbytes=carry,
+        batch_bytes=rows * row_bytes + carry,
+        resident_bytes=n_batches * rows * row_bytes + carry)
+
+
+def mesh_shards(mesh) -> int:
+    shards = 1
+    for ax in mesh.axis_names:
+        if ax in ("pod", "data"):
+            shards *= mesh.shape[ax]
+    return shards
+
+
+# ---------------------------------------------------------------------------
+# device placement (previously optimizer.choose_device_tier)
+# ---------------------------------------------------------------------------
+
+
+def choose_device_tier(resident_bytes: float, batch_bytes: float,
+                       device_budget: Optional[int],
+                       host_budget: Optional[int] = None,
+                       host_bytes: Optional[float] = None,
+                       hit_history: int = 0) -> str:
+    """Device-tier placement decision (paper optimization level 3, one tier
+    up): ``"resident"`` when every block of the input fits the device
+    budget at once, ``"streamed"`` when only morsel batches do (double-
+    buffered: two batch working sets in flight), ``"host"`` when not even
+    one batch fits — the plan stays on the host tier, whose blocking
+    operators spill.
+
+    ``host_budget``/``host_bytes`` fold in the *host* memory budget: the
+    resident path keeps full device-resident copies (host RAM on CPU
+    backends), so an input over the host budget is demoted to streaming —
+    but only under a real device budget, because streaming bounds
+    residency through *eviction*: with ``device_budget=None`` nothing ever
+    evicts, so the demotion would silently retain the whole table and the
+    plan goes to the bounded host spill tier instead.
+
+    ``hit_history`` biases admission the way the paper's optimizer uses
+    runtime statistics: a *borderline* table — one that fits the budget but
+    would occupy more than ``DEVICE_BORDERLINE_FRACTION`` of it, crowding
+    out every other table's blocks — is admitted resident only once its
+    cumulative device-cache hits (``DeviceBufferManager.hit_history``)
+    reach ``DEVICE_PROMOTE_HITS``.  A first query on such a table streams;
+    its blocks still land in the cache, so a repeat query observes hits and
+    flips to resident."""
+    streamable = device_budget is not None \
+        and 2 * batch_bytes <= device_budget
+    if device_budget is not None and resident_bytes > device_budget:
+        return "streamed" if streamable else "host"
+    if host_budget is not None and host_bytes is not None \
+            and host_bytes > host_budget:
+        return "streamed" if streamable else "host"
+    if device_budget is not None and streamable \
+            and resident_bytes > DEVICE_BORDERLINE_FRACTION * device_budget \
+            and hit_history < DEVICE_PROMOTE_HITS:
+        return "streamed"
+    return "resident"
+
+
+# ---------------------------------------------------------------------------
+# normalization: SQL and builder plans converge to identical shapes
+# ---------------------------------------------------------------------------
+
+
+def _conjoin(preds: list[Expr]) -> Expr:
+    from .expression import BinOp
+    out = preds[0]
+    for p in preds[1:]:
+        out = BinOp("and", out, p)
+    return out
+
+
+def _push_renames_into_agg(proj: ProjectNode, agg: AggregateNode,
+                           catalog) -> Optional[AggregateNode]:
+    """Project(Aggregate) that only renames — group keys identity-mapped in
+    key order, then every aggregate output referenced exactly once, in agg
+    order — folds into the aggregate's own output names.  This is the SQL
+    front-end's ``__aggN`` rename projection; eliding it is what lets the
+    device-tier matcher see SQL aggregates."""
+    keys = list(agg.group_by)
+    exprs = list(proj.exprs)
+    if len(exprs) != len(keys) + len(agg.aggs):
+        return None
+    if any(not isinstance(e, Col) for e, _ in exprs):
+        return None
+    for (e, n), k in zip(exprs[:len(keys)], keys):
+        if e.name != k or n != k:
+            return None
+    new_aggs = []
+    for (e, n), a in zip(exprs[len(keys):], agg.aggs):
+        if e.name != a.name:
+            return None
+        new_aggs.append(AggSpec(a.fn, a.expr, n))
+    names = keys + [a.name for a in new_aggs]
+    if len(set(names)) != len(names):
+        return None
+    return AggregateNode(agg.child, agg.group_by, tuple(new_aggs))
+
+
+def normalize(plan: PlanNode, catalog) -> PlanNode:
+    """Semantics-preserving canonicalization applied after optimization:
+
+    * adjacent FilterNodes merge into one whose conjuncts are sorted by
+      their (deterministic, value-based) repr — entry points that emitted
+      the same predicates in different order converge, and the compiled
+      step caches key on one canonical conjunct sequence;
+    * identity projections (bare-Col, same names, same order as the child's
+      output) are elided;
+    * pure-rename projections over an aggregate fold into the aggregate's
+      output names (only when the output column order is preserved — a
+      reordering projection stays, since result column order is
+      observable through the embedding API)."""
+    node = plan.with_children(
+        tuple(normalize(c, catalog) for c in plan.children))
+    if isinstance(node, FilterNode):
+        conjs: list[Expr] = []
+        inner: PlanNode = node
+        while isinstance(inner, FilterNode):
+            conjs.extend(split_conjuncts(inner.predicate))
+            inner = inner.child
+        conjs.sort(key=repr)
+        return FilterNode(inner, _conjoin(conjs))
+    if isinstance(node, ProjectNode):
+        child = node.child
+        if all(isinstance(e, Col) and e.name == n for e, n in node.exprs):
+            try:
+                if [n for _, n in node.exprs] == \
+                        list(child.output_columns(catalog)):
+                    return child
+            except Exception:
+                pass
+        if isinstance(child, AggregateNode):
+            pushed = _push_renames_into_agg(node, child, catalog)
+            if pushed is not None:
+                return pushed
+    return node
+
+
+# ---------------------------------------------------------------------------
+# the costed tier policy — the ONE home of routing thresholds
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TierPolicy:
+    """Every tier-routing threshold in the engine, as one object.
+
+    Plan-time annotation and runtime refinement both go through these
+    methods; the executors hold a policy but contain no routing logic of
+    their own.  The byte models mirror what the operators actually pin:
+    blocking state per row is the key bytes plus ~16 bytes of
+    index/gid/bookkeeping overhead."""
+
+    bufman: object = None                 # host BufferManager (or None)
+    devman: object = None                 # DeviceBufferManager (or None)
+
+    @classmethod
+    def for_db(cls, db) -> "TierPolicy":
+        return cls(bufman=getattr(db, "buffer_manager", None),
+                   devman=getattr(db, "device_manager", None))
+
+    # -- budgets --------------------------------------------------------------
+    @property
+    def host_budget(self) -> Optional[int]:
+        return None if self.bufman is None else self.bufman.budget
+
+    @property
+    def device_budget(self) -> Optional[int]:
+        return None if self.devman is None else self.devman.budget
+
+    def over_budget(self, est_bytes: float) -> bool:
+        b = self.host_budget
+        return b is not None and est_bytes > b
+
+    # -- blocking-operator state models (bytes the op would pin) --------------
+    @staticmethod
+    def join_state_bytes(n_left: int, n_right: int, key_bytes: int) -> int:
+        return (n_left + n_right) * (key_bytes + 16)
+
+    @staticmethod
+    def group_state_bytes(n_rows: int, key_bytes: int) -> int:
+        return n_rows * (key_bytes + 16)
+
+    @staticmethod
+    def sort_state_bytes(n_rows: int, n_keys: int) -> int:
+        return n_rows * 8 * (n_keys + 1)
+
+    # -- runtime tier decisions (actual cardinalities) ------------------------
+    def blocking_tier(self, est_bytes: float) -> str:
+        return TIER_SPILL if self.over_budget(est_bytes) else TIER_IN_MEMORY
+
+    def spills(self, est_bytes: float) -> bool:
+        return self.blocking_tier(est_bytes) == TIER_SPILL
+
+    def group_spills(self, n_rows: int, key_bytes: int,
+                     probe_groups: Callable[[], int]) -> bool:
+        """Grace-hash only when the input AND the probed grouping state are
+        both over budget: a low-cardinality grouping (few distinct keys)
+        stays in memory — its blocking state is tiny no matter how large
+        the input, and partitioning by key could never split the dominant
+        groups.  ``probe_groups`` samples actual rows (level-3 runtime
+        statistics) and is only paid when the cheap input test trips."""
+        if not self.over_budget(self.group_state_bytes(n_rows, key_bytes)):
+            return False
+        return self.over_budget(
+            self.group_state_bytes(probe_groups(), key_bytes))
+
+    def result_spills(self, total_bytes: int) -> bool:
+        """Budgeted result materialization: over-budget final tables stream
+        to memmapped columns instead of a second RAM materialization."""
+        return self.bufman is not None and self.over_budget(total_bytes)
+
+    # -- volcano row-spool estimate (was volcano._spool_estimate) -------------
+    def row_spool_estimate(self, node: AggregateNode,
+                           catalog) -> Optional[int]:
+        """Input-size estimate when a volcano aggregate should spool, else
+        None (one plan walk decides *and* sizes the partition fan-out).
+        Volcano rows hold *decoded* values: a VARCHAR cell is the full
+        string, not an 8-byte code, so string columns carry their average
+        decoded heap width on top of ``estimate_bytes``' flat rate."""
+        if self.host_budget is None or not node.group_by:
+            return None
+        est = estimate_bytes(node.child, catalog) \
+            + _varchar_row_surcharge(node.child, catalog)
+        return int(est) if est > self.host_budget else None
+
+    # -- device placement -----------------------------------------------------
+    def device_tier(self, geom: ScanAggGeometry, table: str) -> str:
+        hits = 0 if self.devman is None else self.devman.hit_history(table)
+        return choose_device_tier(
+            geom.resident_bytes, geom.batch_bytes, self.device_budget,
+            host_budget=self.host_budget, host_bytes=geom.resident_bytes,
+            hit_history=hits)
+
+
+def _varchar_row_surcharge(node: PlanNode, catalog) -> float:
+    if isinstance(node, ScanNode):
+        extra = 0.0
+        t = catalog.table(node.table)
+        for name in (node.columns or t.schema.names):
+            col = t.columns[name]
+            if col.dbtype == DBType.VARCHAR and len(col.heap):
+                extra += len(col) * (col.heap.nbytes() / len(col.heap))
+        return extra
+    extra = sum(_varchar_row_surcharge(c, catalog) for c in node.children)
+    if isinstance(node, FilterNode) and extra:
+        # scale by the filter's estimated selectivity, mirroring how
+        # estimate_bytes scales its flat per-column rate by estimate_rows
+        rows_in = estimate_rows(node.child, catalog)
+        rows_out = estimate_rows(node, catalog)
+        extra *= rows_out / max(1.0, rows_in)
+    return extra
+
+
+# ---------------------------------------------------------------------------
+# the physical plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PhysicalOp:
+    """One operator's tier annotation: the decision, the byte estimate it
+    was made from, and the budget reservation the tier implies (what the
+    operator expects to pin — the whole state in memory, at most the
+    budget when spilling, the double-buffered batch working set when
+    streaming devices)."""
+    node: PlanNode
+    tier: str
+    est_bytes: int = 0
+    reservation: int = 0
+    detail: str = ""
+    children: tuple = ()
+
+    def lines(self, indent: int = 0) -> list[str]:
+        pad = "  " * indent
+        extra = f" {self.detail}" if self.detail else ""
+        out = [f"{pad}{node_line(self.node)}"
+               f" :: {self.tier}"
+               f" [est={self.est_bytes}B reserve={self.reservation}B]"
+               f"{extra}"]
+        for c in self.children:
+            out.extend(c.lines(indent + 1))
+        return out
+
+
+@dataclass
+class PhysicalPlan:
+    """The lowering result every executor consumes."""
+    plan: PlanNode                        # normalized logical plan
+    policy: TierPolicy
+    catalog: object
+    scan_agg: Optional[ScanAggSpec] = None
+    agg_core: Optional[AggregateNode] = None
+    agg_tier: Optional[str] = None        # device-*/parallel-host when set
+    suffix_plan: Optional[PlanNode] = None
+    geometry: Optional[ScanAggGeometry] = None
+    distributed: bool = False
+
+    # -- queries --------------------------------------------------------------
+    def device_tier(self) -> bool:
+        return self.agg_tier in (TIER_DEVICE_RESIDENT, TIER_DEVICE_STREAMED)
+
+    def demote_device(self, reason: str = "runtime fallback") -> None:
+        """A device attempt failed at runtime (lowering gap, placement
+        race): the core re-routes to the host program.  The annotation is
+        updated so EXPLAIN output reflects what actually ran."""
+        self.agg_tier = TIER_PARALLEL_HOST
+        self._demote_reason = reason
+
+    # -- annotation -----------------------------------------------------------
+    def annotate(self) -> PhysicalOp:
+        return self._annotate(self.plan)
+
+    def _annotate(self, node: PlanNode) -> PhysicalOp:
+        if node is self.agg_core and self.agg_tier in (
+                TIER_DEVICE_RESIDENT, TIER_DEVICE_STREAMED):
+            return self._annotate_core(node)
+        children = tuple(self._annotate(c) for c in node.children)
+        policy = self.policy
+        budget = policy.host_budget
+        if isinstance(node, JoinNode):
+            est = int(policy.join_state_bytes(
+                estimate_rows(node.left, self.catalog),
+                estimate_rows(node.right, self.catalog),
+                8 * len(node.left_keys)))
+            tier = policy.blocking_tier(est)
+        elif isinstance(node, AggregateNode):
+            est = int(policy.group_state_bytes(
+                estimate_rows(node.child, self.catalog),
+                8 * max(1, len(node.group_by))))
+            tier = policy.blocking_tier(est)
+        elif isinstance(node, OrderByNode):
+            est = int(policy.sort_state_bytes(
+                estimate_rows(node.child, self.catalog), len(node.keys)))
+            tier = policy.blocking_tier(est)
+        else:
+            est = int(estimate_rows(node, self.catalog) * 8)
+            tier = TIER_IN_MEMORY
+        reserve = est if tier == TIER_IN_MEMORY \
+            else min(est, budget if budget is not None else est)
+        detail = "(runtime-refined)" if tier == TIER_SPILL or (
+            isinstance(node, (JoinNode, AggregateNode, OrderByNode))
+            and budget is not None) else ""
+        if node is self.agg_core and self.agg_tier == TIER_PARALLEL_HOST:
+            # the core matched the scan-agg pattern but runs as an
+            # ordinary host program (device declined, or a runtime
+            # fallback) — annotate with the HOST byte model like any other
+            # aggregate, and record why the device tier was not used
+            extra = "scan-agg core kept on host"
+            if getattr(self, "_demote_reason", None):
+                extra += f" ({self._demote_reason})"
+            detail = f"{detail} {extra}".strip()
+        return PhysicalOp(node, tier, est, reserve, detail, children)
+
+    def _annotate_core(self, node: PlanNode) -> PhysicalOp:
+        """A device-routed scan-agg core: one tier decision covers the
+        whole fused subtree (filters and scan execute inside the jitted
+        fragment)."""
+        g = self.geometry
+        if self.agg_tier == TIER_DEVICE_RESIDENT:
+            est, reserve = g.resident_bytes, g.resident_bytes
+        else:
+            est, reserve = g.resident_bytes, 2 * g.batch_bytes
+        detail = f"groups={self.scan_agg.n_groups}"
+        detail += f" batches={g.n_batches}x{g.batch_rows}rows"
+
+        def fused(n: PlanNode) -> PhysicalOp:
+            return PhysicalOp(
+                n, self.agg_tier, 0, 0, "(fused)",
+                tuple(fused(c) for c in n.children))
+
+        return PhysicalOp(node, self.agg_tier, int(est), int(reserve),
+                          detail, tuple(fused(c) for c in node.children))
+
+    # -- rendering ------------------------------------------------------------
+    def render(self) -> str:
+        head = "physical plan"
+        if self.distributed:
+            head += " [distributed]"
+        b = self.policy.host_budget
+        d = self.policy.device_budget
+        head += f" memory_budget={b if b is not None else 'unlimited'}"
+        head += f" device_budget={d if d is not None else 'unlimited'}"
+        return "\n".join([head] + self.annotate().lines())
+
+    def tier_summary(self) -> list[tuple[str, str]]:
+        """(operator kind, tier) pairs in pre-order, skipping projections —
+        the shape two entry points must agree on even when one carries a
+        residual (trivial, reordering) projection the other lacks."""
+        out: list[tuple[str, str]] = []
+
+        def walk(op: PhysicalOp):
+            if not isinstance(op.node, ProjectNode):
+                out.append((type(op.node).__name__, op.tier))
+            for c in op.children:
+                walk(c)
+
+        walk(self.annotate())
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the lowering pass
+# ---------------------------------------------------------------------------
+
+
+def plan_physical(plan: PlanNode, db, *, do_optimize: bool = True,
+                  distributed: bool = False, mesh=None) -> PhysicalPlan:
+    """Lower one logical plan to its physical plan: optimize (level 1),
+    normalize (entry-point convergence), find the scan-agg core + suffix,
+    and annotate tiers.  ``distributed`` enables the device tiers and — if
+    no ``mesh`` is given — derives the default mesh from ``jax.devices()``
+    (the only path that touches the accelerator runtime; plain host
+    planning never imports jax)."""
+    catalog = db.catalog
+    if do_optimize:
+        plan = optimize(plan, catalog)
+    plan = normalize(plan, catalog)
+    policy = TierPolicy.for_db(db)
+    phys = PhysicalPlan(plan, policy, catalog, distributed=distributed)
+    if not distributed:
+        # the sequential host path never consumes the scan-agg spec, and
+        # matching is not free (dense-domain detection scans each group
+        # key's min/max) — only the distributed lowering pays for it
+        return phys
+
+    core, suffix = find_scan_agg_core(plan, catalog)
+    spec = match_scan_agg(core, catalog) if core is not None else None
+    if spec is None:
+        return phys
+    phys.scan_agg = spec
+    phys.agg_core = core
+    phys.suffix_plan = suffix
+    table = catalog.table(spec.table)
+    if table.num_rows < MIN_ROWS_TO_SHARD:
+        return phys
+    if mesh is None:
+        import jax
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+    geom = scan_agg_geometry(spec, table, mesh_shards(mesh),
+                             getattr(db, "device_batch_rows", None))
+    phys.geometry = geom
+    tier = policy.device_tier(geom, spec.table)
+    phys.agg_tier = {"resident": TIER_DEVICE_RESIDENT,
+                     "streamed": TIER_DEVICE_STREAMED,
+                     "host": TIER_PARALLEL_HOST}[tier]
+    return phys

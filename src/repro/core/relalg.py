@@ -174,24 +174,28 @@ def walk(node: PlanNode):
         yield from walk(c)
 
 
-def plan_repr(node: PlanNode, indent: int = 0) -> str:
-    pad = "  " * indent
+def node_line(node: PlanNode) -> str:
+    """One operator's display line (shared by the logical ``plan_repr`` and
+    the physical planner's EXPLAIN output)."""
     if isinstance(node, ScanNode):
-        line = f"{pad}Scan({node.table}, cols={list(node.columns) if node.columns else '*'})"
-    elif isinstance(node, FilterNode):
-        line = f"{pad}Filter({node.predicate!r})"
-    elif isinstance(node, ProjectNode):
-        line = f"{pad}Project({[n for _, n in node.exprs]})"
-    elif isinstance(node, AggregateNode):
-        line = f"{pad}Aggregate(by={list(node.group_by)}, aggs={[a.fn + ':' + a.name for a in node.aggs]})"
-    elif isinstance(node, JoinNode):
-        line = f"{pad}Join({node.how}, {list(node.left_keys)}={list(node.right_keys)})"
-    elif isinstance(node, OrderByNode):
-        line = f"{pad}OrderBy({list(node.keys)}, limit={node.limit})"
-    elif isinstance(node, LimitNode):
-        line = f"{pad}Limit({node.n})"
-    else:
-        line = f"{pad}{node!r}"
+        return f"Scan({node.table}, cols={list(node.columns) if node.columns else '*'})"
+    if isinstance(node, FilterNode):
+        return f"Filter({node.predicate!r})"
+    if isinstance(node, ProjectNode):
+        return f"Project({[n for _, n in node.exprs]})"
+    if isinstance(node, AggregateNode):
+        return f"Aggregate(by={list(node.group_by)}, aggs={[a.fn + ':' + a.name for a in node.aggs]})"
+    if isinstance(node, JoinNode):
+        return f"Join({node.how}, {list(node.left_keys)}={list(node.right_keys)})"
+    if isinstance(node, OrderByNode):
+        return f"OrderBy({list(node.keys)}, limit={node.limit})"
+    if isinstance(node, LimitNode):
+        return f"Limit({node.n})"
+    return repr(node)
+
+
+def plan_repr(node: PlanNode, indent: int = 0) -> str:
+    line = "  " * indent + node_line(node)
     return "\n".join([line] + [plan_repr(c, indent + 1) for c in node.children])
 
 
@@ -253,7 +257,20 @@ class Query:
     def having(self, predicate: Expr) -> "Query":
         return self._wrap(FilterNode(self.plan, predicate))
 
-    def explain(self, optimized: bool = True) -> str:
+    def explain(self, optimized: bool = True, physical: bool = False,
+                distributed: bool = False, mesh=None) -> str:
+        """Logical plan text, or — with ``physical=True`` — the unified
+        physical planner's lowering: the normalized plan with per-operator
+        tier decisions (device-resident / device-streamed / parallel-host /
+        spill / in-memory) and budget reservations.  ``distributed=True``
+        mirrors ``execute(distributed=True)`` and enables the device-tier
+        annotations (deriving the default mesh from the local devices)."""
+        if physical:
+            from .physplan import plan_physical
+            phys = plan_physical(self.plan, self.database,
+                                 do_optimize=optimized,
+                                 distributed=distributed, mesh=mesh)
+            return phys.render()
         plan = self.plan
         if optimized:
             from .optimizer import optimize

@@ -179,7 +179,9 @@ class Database:
         txn = self.txn_manager.begin(self)
         txn.drop_table(name)
         txn.commit()
-        self.device_manager.invalidate_table(name)
+        # a future table reusing this name is a different table: forget
+        # the admission hit history along with the blocks
+        self.device_manager.invalidate_table(name, drop_history=True)
 
     def append(self, name: str, data, types=None, scales=None) -> None:
         """Bulk append (monetdb_append): no per-row INSERT parsing."""
@@ -295,7 +297,12 @@ def startup(path: Optional[str] = None,
 
     ``memory_budget`` (bytes, default unlimited) enables out-of-core
     execution: blocking operators spill partitioned run files to disk when
-    their working state would exceed the budget.
+    their working state would exceed the budget, and over-budget final
+    result tables stream to memmapped columns instead of a second RAM
+    materialization (``result_spills`` in ``BufferStats``/``ExecStats``).
+    Tier routing — spill vs in-memory vs the device tiers — is decided by
+    the unified physical planner (``core.physplan``); inspect it with
+    ``Query.explain(physical=True)`` or ``db.last_stats.plan_repr``.
 
     ``spill_codec`` selects the run-file encoding: ``"for"`` (default,
     frame-of-reference + byte-shuffle on integer streams — several-fold

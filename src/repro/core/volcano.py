@@ -102,6 +102,8 @@ class VolcanoExecutor:
 
     def __init__(self, database):
         self.db = database
+        from .physplan import TierPolicy
+        self.policy = TierPolicy.for_db(database)
 
     def execute(self, plan: PlanNode) -> list[Row]:
         return list(self._iter(plan))
@@ -197,40 +199,11 @@ class VolcanoExecutor:
 
     def _spool_estimate(self, node: AggregateNode) -> Optional[int]:
         """Input-size estimate when the aggregate should spool, else None
-        (one plan walk decides *and* sizes the partition fan-out)."""
-        bm = getattr(self.db, "buffer_manager", None)
-        if bm is None or bm.budget is None or not node.group_by:
-            return None
-        from .optimizer import estimate_bytes
-        est = estimate_bytes(node.child, self.db.catalog)
-        # volcano rows hold *decoded* values: a VARCHAR cell is the full
-        # string, not an 8-byte code, so string columns carry their average
-        # decoded heap width on top of estimate_bytes' per-column flat rate
-        # — without this, string-heavy inputs under-estimate and grouping
-        # state silently outgrows the budget fully resident.
-        est += self._varchar_surcharge(node.child)
-        return est if est > bm.budget else None
-
-    def _varchar_surcharge(self, node: PlanNode) -> float:
-        if isinstance(node, ScanNode):
-            extra = 0.0
-            t = self.db.catalog.table(node.table)
-            for name in (node.columns or t.schema.names):
-                col = t.columns[name]
-                if col.dbtype == DBType.VARCHAR and len(col.heap):
-                    extra += len(col) * (col.heap.nbytes() / len(col.heap))
-            return extra
-        extra = sum(self._varchar_surcharge(c) for c in node.children)
-        if isinstance(node, FilterNode) and extra:
-            # scale by the filter's estimated selectivity, mirroring how
-            # estimate_bytes scales its flat per-column rate by
-            # estimate_rows — otherwise a selective filter over a
-            # string-heavy table is charged the whole table's strings
-            from .optimizer import estimate_rows
-            rows_in = estimate_rows(node.child, self.db.catalog)
-            rows_out = estimate_rows(node, self.db.catalog)
-            extra *= rows_out / max(1.0, rows_in)
-        return extra
+        (one plan walk decides *and* sizes the partition fan-out).  The
+        estimate — including the decoded-VARCHAR surcharge volcano rows
+        incur — lives in the unified tier policy (physplan.TierPolicy);
+        this interpreter just consumes the decision."""
+        return self.policy.row_spool_estimate(node, self.db.catalog)
 
 
 def _agg_group(node: AggregateNode, k: tuple, rows: list[Row]) -> Row:

@@ -258,6 +258,19 @@ def q10(db) -> Query:
             .order_by(("revenue", True), limit=20))
 
 
+Q10_SQL = """
+SELECT c_custkey, c_name,
+       sum(l_extendedprice * (1 - l_discount)) AS revenue,
+       c_acctbal, n_name, c_address, c_phone, c_comment
+FROM customer, orders, lineitem, nation
+WHERE c_custkey = o_custkey AND l_orderkey = o_orderkey
+  AND o_orderdate >= DATE '1993-10-01' AND o_orderdate < DATE '1994-01-01'
+  AND l_returnflag = 'R' AND c_nationkey = n_nationkey
+GROUP BY c_custkey, c_name, c_acctbal, c_phone, n_name, c_address, c_comment
+ORDER BY revenue DESC LIMIT 20
+"""
+
+
 ALL_QUERIES = {f"q{i}": fn for i, fn in enumerate(
     [q1, q2, q3, q4, q5, q6, q7, q8, q9, q10], start=1)}
-SQL_QUERIES = {"q1": Q1_SQL, "q3": Q3_SQL, "q6": Q6_SQL}
+SQL_QUERIES = {"q1": Q1_SQL, "q3": Q3_SQL, "q6": Q6_SQL, "q10": Q10_SQL}
