@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_kernels — §3 hot-spot kernels
   bench_spill   — out-of-core tier: spill codec ratio + prefetch overlap
   bench_device  — device tier: resident cache vs streamed vs host fallback
+  bench_concurrent — serving layer: throughput/P99 vs client threads
 """
 
 from __future__ import annotations
@@ -20,12 +21,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: "
-                         "ingest,export,tpch,acs,kernels,spill,device")
+                         "ingest,export,tpch,acs,kernels,spill,device,"
+                         "concurrent")
     ap.add_argument("--sf", type=float, default=0.01)
     ap.add_argument("--no-volcano", action="store_true")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
-        "ingest", "export", "tpch", "acs", "kernels", "spill", "device"}
+        "ingest", "export", "tpch", "acs", "kernels", "spill", "device",
+        "concurrent"}
 
     print("name,us_per_call,derived")
     rows: list[str] = []
@@ -56,6 +59,10 @@ def main() -> None:
     if "device" in which:
         from .bench_device import run as r
         rows += r(args.sf)
+        _flush(rows)
+    if "concurrent" in which:
+        from .bench_concurrent import run as r
+        rows += r()
         _flush(rows)
 
 

@@ -220,4 +220,50 @@ big = (small.scan("trips")
 print("result_spills:", small.last_stats.result_spills,
       "| columns memmapped:", isinstance(big.columns["paid"].data,
                                          np.memmap))
+
+# --- concurrent use ----------------------------------------------------------
+# The database is an embedded engine inside YOUR process, and your process
+# is probably multi-threaded.  One Database is safe to share across
+# threads; the serving layer keeps concurrent queries honest:
+#
+#   * admission gate — each query's summed per-operator budget
+#     reservations (from the physical plan) are reserved atomically
+#     against memory_budget/device_budget BEFORE execution; queries that
+#     don't fit queue with a bounded wait (AdmissionTimeout after
+#     ~30 s) instead of discovering pressure mid-flight.
+#   * atomic pins — BufferManager.try_pin reserves-or-fails under the
+#     lock, so N threads can never jointly exceed the budget
+#     (`peak <= budget` holds for the whole run, not per query).
+#   * plan cache — repeated queries skip the optimize→normalize→annotate
+#     lowering pass entirely; entries are invalidated by append / DROP /
+#     DELETE, and table versions inside the cache key make stale hits
+#     impossible either way.  Observed group cardinalities feed back
+#     into the next lowering's tier estimates.
+#   * shared scans — concurrent cold queries over the same table attach
+#     to ONE in-flight host→device upload per block (single-flight), so
+#     a repeat-heavy mix does one upload, not one per client.
+#
+# Per-query stats under concurrency: db.last_stats is a THREAD-LOCAL
+# view — each thread sees the stats of the last query it ran, never a
+# neighbour's.  Connection.query returns them on the result itself
+# (Result.stats), which is the concurrency-proof API.
+import threading
+
+def worker(out, slot):
+    r = (db.scan("trips").filter(Col("distance_km") > 5 + slot)
+         .group_by("city").agg(rev=("sum", "fare")).execute())
+    out[slot] = (r.to_pydict(), db.last_stats)
+
+outs = [None, None]
+ts = [threading.Thread(target=worker, args=(outs, s)) for s in (0, 1)]
+for t in ts:
+    t.start()
+for t in ts:
+    t.join()
+print("concurrent stats are per-thread:", outs[0][1] is not outs[1][1])
+# a repeated query skips lowering entirely — ExecStats says so per query:
+(db.scan("trips").filter(Col("distance_km") > 5)
+ .group_by("city").agg(rev=("sum", "fare")).execute())
+print("repeat was a plan-cache hit:", db.last_stats.plan_cache_hit,
+      "| cache hits so far:", db.buffer_manager.stats.plan_cache_hits)
 print("OK")

@@ -45,6 +45,7 @@ import shutil
 import tempfile
 import threading
 from dataclasses import dataclass, field
+from time import monotonic as _monotonic
 from typing import Iterator, Optional
 
 import numpy as np
@@ -254,6 +255,12 @@ class BufferStats:
     device_prefetch_hits: int = 0  # batches whose transfer was issued ahead
     device_evictions: int = 0    # blocks evicted under budget pressure
     device_writebacks: int = 0   # dirty (intermediate) blocks copied to host
+    # serving layer (serving.py): concurrent-query counters
+    plan_cache_hits: int = 0     # queries that skipped lowering entirely
+    plan_cache_misses: int = 0   # queries that paid a full lowering pass
+    admission_waits: int = 0     # admissions that queued for budget room
+    shared_scan_attaches: int = 0  # block requests served by another
+                                   # query's in-flight build/upload
 
     @property
     def bytes_spilled_compressed(self) -> int:
@@ -281,14 +288,40 @@ class BufferManager:
         self._seq = 0
         self._files: set[str] = set()
         self._lock = threading.Lock()
+        # query-scope tracking: cleanup() must not unlink spill files
+        # registered to a query still running on another thread, so queries
+        # announce themselves (query_scope) and cleanup defers until the
+        # last one drains
+        self._query_cond = threading.Condition()
+        self._active_queries = 0
+        self._cleanup_deferred = False
         self.stats = BufferStats()
 
     # ---- budget accounting -------------------------------------------------
     def would_exceed(self, nbytes: int) -> bool:
-        """True when pinning ``nbytes`` more would overflow the budget."""
+        """True when pinning ``nbytes`` more would overflow the budget.
+
+        Check-only: a concurrent pin can land between this test and a
+        subsequent ``pin``, jointly overshooting the budget.  Use
+        ``try_pin`` for the atomic reserve-or-fail form; this predicate
+        remains for single-threaded size probes."""
         if self.budget is None:
             return False
         return self.stats.pinned + int(nbytes) > self.budget
+
+    def try_pin(self, nbytes: int) -> bool:
+        """Atomic reserve-or-fail: pin ``nbytes`` iff it fits the budget
+        *under the lock* — the thread-safe replacement for the
+        ``would_exceed()`` + ``pin()`` check-then-act pair, which two
+        threads could both pass and jointly exceed the budget."""
+        nbytes = int(nbytes)
+        with self._lock:
+            if self.budget is not None \
+                    and self.stats.pinned + nbytes > self.budget:
+                return False
+            self.stats.pinned += nbytes
+            self.stats.peak = max(self.stats.peak, self.stats.pinned)
+            return True
 
     def pin(self, nbytes: int) -> int:
         nbytes = int(nbytes)
@@ -362,17 +395,73 @@ class BufferManager:
 
     @property
     def active_files(self) -> int:
-        return len(self._files)
+        with self._lock:
+            return len(self._files)
+
+    # ---- query scope -------------------------------------------------------
+    @property
+    def active_queries(self) -> int:
+        with self._query_cond:
+            return self._active_queries
+
+    def begin_query(self) -> None:
+        with self._query_cond:
+            self._active_queries += 1
+
+    def end_query(self) -> None:
+        run_deferred = False
+        with self._query_cond:
+            self._active_queries = max(0, self._active_queries - 1)
+            if self._active_queries == 0:
+                self._query_cond.notify_all()
+                run_deferred = self._cleanup_deferred
+        if run_deferred:
+            # a cleanup() arrived while we were running and deferred
+            # instead of unlinking our files out from under us — honour it
+            # now that the last query has drained
+            self.cleanup()
+
+    class _QueryScope:
+        def __init__(self, mgr: "BufferManager"):
+            self._mgr = mgr
+
+        def __enter__(self):
+            self._mgr.begin_query()
+            return self
+
+        def __exit__(self, *exc):
+            self._mgr.end_query()
+            return False
+
+    def query_scope(self) -> "_QueryScope":
+        """Context manager marking one query in flight on this manager —
+        cleanup() defers file deletion while any scope is open."""
+        return self._QueryScope(self)
 
     # ---- lifecycle ---------------------------------------------------------
-    def cleanup(self) -> None:
+    def cleanup(self, wait: float = 2.0) -> None:
         """Delete every *registered* spill file (and the temp dir if owned).
 
         A db-owned spill directory is shared by every connection of this
         database: only files this manager registered are removed, never the
         whole directory listing (a concurrent query's run files survive).
         Stale files from a crashed process are reclaimed at startup instead
-        (``Storage.reclaim_spill``)."""
+        (``Storage.reclaim_spill``).
+
+        While queries are in flight (``query_scope``) the registered files
+        may belong to them — unlinking would yank run files out from under
+        another thread mid-join.  Cleanup waits up to ``wait`` seconds for
+        the queries to drain; if they don't, it *defers*: nothing is
+        deleted now, and the last ``end_query`` performs the cleanup."""
+        with self._query_cond:
+            deadline = _monotonic() + wait
+            while self._active_queries > 0:
+                remaining = deadline - _monotonic()
+                if remaining <= 0:
+                    self._cleanup_deferred = True
+                    return
+                self._query_cond.wait(remaining)
+            self._cleanup_deferred = False
         with self._lock:
             files = list(self._files)
             self._files.clear()

@@ -95,6 +95,13 @@ class DeviceBufferManager:
         self._host: dict[tuple, np.ndarray] = {}   # written-back dirty blocks
         self._resident = 0
         self._lock = threading.RLock()
+        # shared scans: one in-flight build/upload per key — concurrent
+        # queries over the same (table, column, version, shard) attach to
+        # the first query's transfer instead of each re-reading and
+        # re-uploading the block (serving.SingleFlight; lazy import keeps
+        # module load order flexible)
+        from .serving import SingleFlight
+        self._flight = SingleFlight()
         # per-table cumulative cache hits: the runtime statistic the
         # physical planner's admission policy biases residency with
         # (physplan.choose_device_tier hit_history).  Survives version
@@ -224,6 +231,35 @@ class DeviceBufferManager:
         host, sharding = entry
         return self.put(key, host, sharding=sharding, pin=pin,
                         dirty=True)                       # re-upload
+
+    def get_or_put(self, key: tuple, build, sharding=None,
+                   pin: bool = False):
+        """Shared-scan lookup: cache hit, else single-flight build+upload.
+
+        ``build`` produces the host block (a file read / memmap page-in);
+        the first caller of a key runs it and uploads, every concurrent
+        caller of the same key *attaches* — it blocks on the in-flight
+        transfer and then takes its own pin from the cache, so a
+        repeat-heavy concurrent mix does ONE read and ONE host→device copy
+        per block instead of N (``shared_scan_attaches`` counts the saved
+        ones).  An attacher that finds the block already evicted (tight
+        budget) or the build failed loops and becomes the builder itself —
+        one query's error never poisons another's.  The build/upload runs
+        outside the manager lock."""
+        attached = False
+        while True:
+            arr = self.get(key, pin=pin)
+            if arr is not None:
+                if attached:
+                    with self._lock:
+                        self.stats.shared_scan_attaches += 1
+                return arr
+            arr, waited = self._flight.do(
+                key, lambda: self.put(key, build(), sharding=sharding,
+                                      pin=pin))
+            if not waited:
+                return arr         # we built: put() already took our pin
+            attached = True        # loop: take our own pin via get()
 
     def hit_history(self, table: str) -> int:
         """Cumulative cache hits on one table's blocks — the repeat-access

@@ -496,6 +496,15 @@ class ExecStats:
     device_bytes_h2d: int = 0           # host→device bytes this query moved
     device_writebacks: int = 0          # dirty blocks copied back to host
     device_bytes_peak: int = 0          # manager high-water mark (lifetime)
+    # serving layer (serving.py): per-query view of the concurrent path
+    plan_cache_hit: bool = False        # lowering skipped via the plan cache
+    admission_wait_ms: float = 0.0      # time queued at the admission gate
+    reserved_bytes: int = 0             # host reservation the gate granted
+    reserved_device_bytes: int = 0      # device reservation granted
+    shared_scan_attaches: int = 0       # blocks served by another query's
+                                        # in-flight build/upload
+    observed_group_card: Optional[int] = None  # dense group count this
+                                        # query's aggregate actually saw
 
 
 # Per-query deltas of the database-lifetime BufferStats counters: the field
@@ -505,7 +514,7 @@ SPILL_DELTA_FIELDS = ("bytes_spilled_raw", "bytes_spilled_compressed",
                       "prefetch_hits", "repartitions", "result_spills")
 DEVICE_DELTA_FIELDS = ("device_cache_hits", "device_prefetch_hits",
                        "device_evictions", "device_bytes_h2d",
-                       "device_writebacks")
+                       "device_writebacks", "shared_scan_attaches")
 
 
 def stats_base(buffer_stats, fields) -> tuple:
@@ -549,13 +558,46 @@ class Executor:
             self.bufman.stats.varchar_spills += 1
 
     # -- entry points -------------------------------------------------------
+    def _admitted(self, phys):
+        """Reserve the plan's summed per-operator budget estimates at the
+        database's admission gate before running (serving.AdmissionGate);
+        returns a released-on-exit ticket, or a no-op one when the
+        database has no gate (suffix views, bare test harnesses)."""
+        gate = getattr(self.db, "admission_gate", None)
+        if gate is None:
+            import contextlib
+            return contextlib.nullcontext()
+        host, device = phys.total_reservations()
+        ticket = gate.admit(host, device)
+        self.stats.admission_wait_ms = ticket.waited * 1000.0
+        self.stats.reserved_bytes = ticket.host_bytes
+        self.stats.reserved_device_bytes = ticket.device_bytes
+        if ticket.waited and self.bufman is not None:
+            self.bufman.stats.admission_waits += 1
+        return ticket
+
+    def _plan_feedback(self, plan: PlanNode, distributed: bool) -> None:
+        """Report the observed group cardinality back to the plan cache so
+        the next lowering of this plan shape annotates its aggregate from
+        what actually happened, not the level-1 row estimate."""
+        cache = getattr(self.db, "plan_cache", None)
+        n = self.stats.observed_group_card
+        if cache is not None and n is not None:
+            from .serving import PlanCache
+            cache.note_group_card(PlanCache.shape_key(plan, distributed), n)
+
     def execute(self, plan: PlanNode, do_optimize: bool = True):
-        from .physplan import plan_physical
-        phys = plan_physical(plan, self.db, do_optimize=do_optimize)
+        from .serving import lower_cached
+        phys, rendered, hit = lower_cached(self.db, plan,
+                                           do_optimize=do_optimize)
         self.policy = phys.policy
-        self.stats.plan_repr = phys.render()
+        self.stats.plan_repr = rendered
+        self.stats.plan_cache_hit = hit
         prog = compile_plan(phys.plan, self.db.catalog)
-        return self.run_program(prog)
+        with self._admitted(phys):
+            result = self.run_program(prog)
+        self._plan_feedback(plan, False)
+        return result
 
     def run_program(self, prog: MALProgram):
         regs: dict[str, Any] = {}
@@ -743,6 +785,10 @@ class Executor:
             return spill.grace_hash_groupby(keys, idx, self.bufman)
         codes, _ = _factorize(keys, idx)
         gid, n, rep = _dense_gid(codes)
+        # runtime statistic for the plan cache's cardinality feedback: the
+        # group count this aggregate actually produced
+        prev = self.stats.observed_group_card
+        self.stats.observed_group_card = n if prev is None else max(prev, n)
         return gid, n, idx
 
     def _op_gkey(self, ins, regs):

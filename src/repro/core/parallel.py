@@ -41,6 +41,7 @@ Chunking heuristics follow the paper: the shard count comes from the mesh
 
 from __future__ import annotations
 
+import threading
 from typing import Optional
 
 import numpy as np
@@ -223,6 +224,19 @@ def build_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
 
 
 _STEP_CACHE: dict = {}
+# concurrent queries may race to build the same jitted step; the lock makes
+# the check-then-build atomic so one trace is built and shared (tracing the
+# same fragment twice is wasted work, and a dict insert during another
+# thread's insert is not guaranteed safe across interpreters)
+_STEP_CACHE_LOCK = threading.Lock()
+
+# XLA's cross-device collectives rendezvous by (run_id, device set): two
+# threads dispatching collective programs at once interleave their
+# participants into each other's rendezvous and deadlock (observed on the
+# forced-multi-device CPU backend; real accelerators serialize launches on
+# a stream anyway).  ONE in-process device dispatch at a time — host-tier
+# queries are unaffected and still run concurrently.
+_DEVICE_DISPATCH_LOCK = threading.Lock()
 
 
 def _meta_key(spec: ScanAggSpec, meta: dict) -> tuple:
@@ -250,9 +264,10 @@ def _cached_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh, pad: int):
            _meta_key(spec, meta), spec.n_groups, pad,
            id(mesh.devices.flat[0]),
            tuple(mesh.shape.items()))
-    if key not in _STEP_CACHE:
-        _STEP_CACHE[key] = build_query_step(spec, meta, mesh)
-    return _STEP_CACHE[key]
+    with _STEP_CACHE_LOCK:
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = build_query_step(spec, meta, mesh)
+        return _STEP_CACHE[key]
 
 
 # ---------------------------------------------------------------------------
@@ -355,9 +370,10 @@ def _cached_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
            _meta_key(spec, meta),
            spec.n_groups, batch_rows, id(mesh.devices.flat[0]),
            tuple(mesh.shape.items()))
-    if key not in _STEP_CACHE:
-        _STEP_CACHE[key] = build_batch_step(spec, meta, mesh)
-    return _STEP_CACHE[key]
+    with _STEP_CACHE_LOCK:
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = build_batch_step(spec, meta, mesh)
+        return _STEP_CACHE[key]
 
 
 class DistributedScanAgg:
@@ -475,7 +491,10 @@ class DistributedScanAgg:
             if key in self.devman or key in prefetched:
                 continue       # cached: will be a cache hit at consumption
             try:
-                self.devman.put(key, build(), sharding=sh, pin=True)
+                # single-flight even here: two streamed queries walking the
+                # same table prefetch the same next batch — one upload,
+                # the other attaches (and still takes its own pin)
+                self.devman.get_or_put(key, build, sharding=sh, pin=True)
             except DeviceBudgetError:
                 return
             prefetched.add(key)
@@ -486,6 +505,14 @@ class DistributedScanAgg:
         tier = tier or self.choose_tier()
         if tier == "host":
             raise DeviceBudgetError("input does not fit the device tier")
+        # serialize the whole batch loop: every step() carries a psum, and
+        # concurrent collective dispatch deadlocks the XLA rendezvous (see
+        # _DEVICE_DISPATCH_LOCK).  Cross-query sharing still happens — a
+        # later query attaches to this one's cached blocks via get_or_put
+        with _DEVICE_DISPATCH_LOCK:
+            return self._run_locked(tier)
+
+    def _run_locked(self, tier: str) -> np.ndarray:
         devman = self.devman
         spec = self.spec
         init_fn, step = _cached_batch_step(spec, self.meta, self.mesh,
@@ -509,10 +536,11 @@ class DistributedScanAgg:
                         arr = devman.peek(key)
                         devman.stats.device_prefetch_hits += 1
                     else:
-                        arr = devman.get(key, pin=True)
-                        if arr is None:
-                            arr = devman.put(key, build(), sharding=sh,
-                                             pin=True)
+                        # single-flight: a concurrent query needing the
+                        # same block attaches to one in-flight upload
+                        # instead of issuing its own (shared morsel scans)
+                        arr = devman.get_or_put(key, build, sharding=sh,
+                                                pin=True)
                     pinned.add(key)
                     query_keys.add(key)
                     batch_keys.append(key)
@@ -582,27 +610,34 @@ class ParallelExecutor(Executor):
         self.distributed_hits = 0
 
     def _default_mesh(self) -> Mesh:
-        if self.mesh is not None:
-            return self.mesh
-        dev = np.array(jax.devices())
-        return Mesh(dev.reshape(-1), ("data",))
+        if self.mesh is None:
+            dev = np.array(jax.devices())
+            self.mesh = Mesh(dev.reshape(-1), ("data",))
+        return self.mesh
 
     def execute(self, plan: PlanNode, do_optimize: bool = True):
-        phys = plan_physical(plan, self.db, do_optimize=do_optimize,
-                             distributed=True, mesh=self._default_mesh())
+        from .serving import lower_cached
+        mesh = self._default_mesh()
+        phys, rendered, hit = lower_cached(self.db, plan,
+                                           do_optimize=do_optimize,
+                                           distributed=True, mesh=mesh)
         self.policy = phys.policy
-        self.stats.plan_repr = phys.render()
-        if phys.device_tier():
-            result = self._try_distributed(phys)
-            if result is not None:
-                return result
-            # the planner chose the device tier but runtime lowering
-            # failed; the host program is the fallback — re-render so
-            # EXPLAIN/stats reflect what actually ran
-            phys.demote_device()
-            self.stats.plan_repr = phys.render()
-        prog = compile_plan(phys.plan, self.db.catalog)
-        return self.run_program(prog)
+        self.stats.plan_repr = rendered
+        self.stats.plan_cache_hit = hit
+        with self._admitted(phys):
+            if phys.device_tier():
+                result = self._try_distributed(phys)
+                if result is not None:
+                    return result
+                # the planner chose the device tier but runtime lowering
+                # failed; the host program is the fallback — re-render so
+                # EXPLAIN/stats reflect what actually ran
+                phys.demote_device()
+                self.stats.plan_repr = phys.render()
+            prog = compile_plan(phys.plan, self.db.catalog)
+            result = self.run_program(prog)
+        self._plan_feedback(plan, True)
+        return result
 
     # -- distributed scan-agg -------------------------------------------------
     def _try_distributed(self, phys: PhysicalPlan):

@@ -560,6 +560,13 @@ class PhysicalPlan:
     suffix_plan: Optional[PlanNode] = None
     geometry: Optional[ScanAggGeometry] = None
     distributed: bool = False
+    # observed group cardinality from a previous execution of this plan
+    # shape (serving.PlanCache feedback) — refines the aggregate's
+    # annotation with what the runtime actually saw instead of the
+    # level-1 row estimate.  Only set when the plan has exactly one
+    # aggregate (otherwise the observation is ambiguous).
+    group_card_hint: Optional[int] = None
+    _reservations: Optional[tuple] = None   # cached total_reservations()
 
     # -- queries --------------------------------------------------------------
     def device_tier(self) -> bool:
@@ -571,6 +578,35 @@ class PhysicalPlan:
         updated so EXPLAIN output reflects what actually ran."""
         self.agg_tier = TIER_PARALLEL_HOST
         self._demote_reason = reason
+
+    def total_reservations(self) -> tuple[int, int]:
+        """Summed per-operator budget reservations as ``(host_bytes,
+        device_bytes)`` — what the admission gate reserves before this plan
+        executes.  Each side is capped at its budget: a plan whose
+        reservations sum past the budget is exactly what the spill/stream
+        tiers bound at runtime, and it must be admissible when alone.
+        Computed once and cached (shallow plan-cache copies share it)."""
+        if self._reservations is None:
+            host = device = 0
+
+            def visit(op: PhysicalOp):
+                nonlocal host, device
+                if op.tier in (TIER_DEVICE_RESIDENT, TIER_DEVICE_STREAMED):
+                    device += op.reservation
+                else:
+                    host += op.reservation
+                for c in op.children:
+                    visit(c)
+
+            visit(self.annotate())
+            hb = self.policy.host_budget
+            db = self.policy.device_budget
+            if hb is not None:
+                host = min(host, hb)
+            if db is not None:
+                device = min(device, db)
+            self._reservations = (int(host), int(device))
+        return self._reservations
 
     # -- annotation -----------------------------------------------------------
     def annotate(self) -> PhysicalOp:
@@ -590,10 +626,23 @@ class PhysicalPlan:
                 8 * len(node.left_keys)))
             tier = policy.blocking_tier(est)
         elif isinstance(node, AggregateNode):
+            kb = 8 * max(1, len(node.group_by))
             est = int(policy.group_state_bytes(
-                estimate_rows(node.child, self.catalog),
-                8 * max(1, len(node.group_by))))
+                estimate_rows(node.child, self.catalog), kb))
             tier = policy.blocking_tier(est)
+            if self.group_card_hint is not None and node.group_by:
+                # cardinality feedback (serving.PlanCache): a previous run
+                # observed the actual group count, so mirror the runtime
+                # rule — spill only when the input state AND the observed
+                # grouping state are both over budget.  A low-cardinality
+                # grouping annotates in-memory no matter how large the
+                # input, exactly as it will execute.
+                observed = int(policy.group_state_bytes(
+                    self.group_card_hint, kb))
+                tier = TIER_SPILL if (policy.over_budget(est)
+                                      and policy.over_budget(observed)) \
+                    else TIER_IN_MEMORY
+                est = observed if tier == TIER_IN_MEMORY else est
         elif isinstance(node, OrderByNode):
             est = int(policy.sort_state_bytes(
                 estimate_rows(node.child, self.catalog), len(node.keys)))
@@ -606,6 +655,10 @@ class PhysicalPlan:
         detail = "(runtime-refined)" if tier == TIER_SPILL or (
             isinstance(node, (JoinNode, AggregateNode, OrderByNode))
             and budget is not None) else ""
+        if isinstance(node, AggregateNode) and node.group_by \
+                and self.group_card_hint is not None:
+            detail = f"{detail} (observed groups=" \
+                     f"{self.group_card_hint})".strip()
         if node is self.agg_core and self.agg_tier == TIER_PARALLEL_HOST:
             # the core matched the scan-agg pattern but runs as an
             # ordinary host program (device declined, or a runtime
@@ -669,20 +722,35 @@ class PhysicalPlan:
 # ---------------------------------------------------------------------------
 
 
+def _walk_nodes(node: PlanNode):
+    yield node
+    for c in node.children:
+        yield from _walk_nodes(c)
+
+
 def plan_physical(plan: PlanNode, db, *, do_optimize: bool = True,
-                  distributed: bool = False, mesh=None) -> PhysicalPlan:
+                  distributed: bool = False, mesh=None,
+                  group_card_hint: Optional[int] = None) -> PhysicalPlan:
     """Lower one logical plan to its physical plan: optimize (level 1),
     normalize (entry-point convergence), find the scan-agg core + suffix,
     and annotate tiers.  ``distributed`` enables the device tiers and — if
     no ``mesh`` is given — derives the default mesh from ``jax.devices()``
     (the only path that touches the accelerator runtime; plain host
-    planning never imports jax)."""
+    planning never imports jax).  ``group_card_hint`` is an observed group
+    cardinality from a previous run of the same plan shape
+    (``serving.PlanCache`` feedback); it refines the aggregate annotation
+    and only applies when the plan has exactly one aggregate."""
     catalog = db.catalog
     if do_optimize:
         plan = optimize(plan, catalog)
     plan = normalize(plan, catalog)
     policy = TierPolicy.for_db(db)
     phys = PhysicalPlan(plan, policy, catalog, distributed=distributed)
+    if group_card_hint is not None:
+        n_aggs = sum(isinstance(n, AggregateNode)
+                     for n in _walk_nodes(plan))
+        if n_aggs == 1:
+            phys.group_card_hint = int(group_card_hint)
     if not distributed:
         # the sequential host path never consumes the scan-agg spec, and
         # matching is not free (dense-domain detection scans each group

@@ -89,6 +89,9 @@ class Database:
         self.index_manager = IndexManager(self)
         self.storage: Optional[Storage] = None
         self._shutdown = False
+        # per-thread last_stats view: one mutable attribute would be
+        # clobbered by concurrent queries (thread A reads thread B's stats)
+        self._stats_local = threading.local()
         if path is not None:
             self.storage = Storage(path)
             try:
@@ -115,6 +118,14 @@ class Database:
             # one BufferStats reports both tiers (jax loads lazily on use)
             self.device_manager = DeviceBufferManager(
                 device_budget, stats=self.buffer_manager.stats)
+            # serving layer: plan cache + admission gate (core.serving).
+            # The gate reserves each plan's summed per-operator budget
+            # estimates before execution; the cache skips lowering on hot
+            # repeated queries and is invalidated by append/DROP/DELETE.
+            from .serving import AdmissionGate, PlanCache
+            self.plan_cache = PlanCache()
+            self.admission_gate = AdmissionGate(memory_budget,
+                                                device_budget)
         except BaseException:
             # a failed open must not leave the directory locked forever
             if self.storage is not None:
@@ -139,6 +150,7 @@ class Database:
         self.index_manager.order_indexes.clear()
         self.buffer_manager.cleanup()
         self.device_manager.cleanup()
+        self.plan_cache.clear()
         if self.storage is not None:
             self.storage.release_lock()
         self._shutdown = True
@@ -182,6 +194,7 @@ class Database:
         # a future table reusing this name is a different table: forget
         # the admission hit history along with the blocks
         self.device_manager.invalidate_table(name, drop_history=True)
+        self.plan_cache.invalidate_table(name)
 
     def append(self, name: str, data, types=None, scales=None) -> None:
         """Bulk append (monetdb_append): no per-row INSERT parsing."""
@@ -196,8 +209,10 @@ class Database:
         txn.commit()
         # the version bump already keeps correctness (keys carry it); the
         # invalidation frees the dead version's device blocks so they stop
-        # occupying budget and forcing spurious evictions of live ones
+        # occupying budget and forcing spurious evictions of live ones —
+        # same for the plan cache (its keys carry versions too)
         self.device_manager.invalidate_table(name)
+        self.plan_cache.invalidate_table(name)
 
     # ---- querying -------------------------------------------------------------
     def scan(self, name: str) -> Query:
@@ -241,6 +256,7 @@ class Database:
             self.catalog.tables[name] = new
             self.index_manager.invalidate_table(name)
             self.device_manager.invalidate_table(name)
+            self.plan_cache.invalidate_table(name)
         if self.storage is not None:
             self.storage.write_catalog(self.catalog.tables)
         return int(kill.sum())
@@ -252,6 +268,19 @@ class Database:
         self.catalog.table(table)
         return self.index_manager.create_order_index(table, column)
 
+    # ``last_stats`` is a thread-local view: each thread sees the stats of
+    # the last query IT ran — one shared mutable attribute would be
+    # clobbered under concurrency (thread A reading thread B's spill
+    # counts).  Per-result stats travel on ``Result.stats`` as well, which
+    # is the concurrency-proof API.
+    @property
+    def last_stats(self):
+        return getattr(self._stats_local, "stats", None)
+
+    @last_stats.setter
+    def last_stats(self, value) -> None:
+        self._stats_local.stats = value
+
     def execute_plan(self, plan: PlanNode, do_optimize: bool = True,
                      distributed: bool = False, mesh=None) -> Table:
         self._check_alive()
@@ -261,7 +290,9 @@ class Database:
         else:
             ex = Executor(self)
         self.last_stats = ex.stats
-        return ex.execute(plan, do_optimize=do_optimize)
+        # query scope: cleanup() defers spill-file deletion while we run
+        with self.buffer_manager.query_scope():
+            return ex.execute(plan, do_optimize=do_optimize)
 
     # ---- hooks (storage + indexes) -------------------------------------------
     def _commit(self, txn: Transaction) -> None:
@@ -361,13 +392,19 @@ class ResultColumnMeta:
 
 
 class Result:
-    """monetdb_result: semi-opaque header + per-column fetch."""
+    """monetdb_result: semi-opaque header + per-column fetch.
 
-    def __init__(self, table: Table):
+    ``stats`` carries the query's own ``ExecStats`` — under concurrency
+    this is THE reliable way to read per-query counters (``db.last_stats``
+    is a per-thread convenience view and sees only the calling thread's
+    last query)."""
+
+    def __init__(self, table: Table, stats=None):
         self._table = table
         self.nrows = table.num_rows
         self.ncols = table.num_cols
         self.names = list(table.schema.names)
+        self.stats = stats
 
     def fetch_raw(self, i: int) -> np.ndarray:
         """Low-level fetch: the engine's own packed array, zero-copy
@@ -437,6 +474,13 @@ class Connection:
             snap_db.catalog.tables = self._txn.tables()
             snap_db.index_manager = IndexManager(snap_db)
             snap_db.buffer_manager = db.buffer_manager   # shared accounting
+            # ONE admission accounting too: snapshot queries reserve
+            # against the same gate as committed-catalog queries (the
+            # budgets are shared, so the reservations must be).  The plan
+            # cache stays the snapshot's own throwaway instance — snapshot
+            # tables reuse the version number the next committed write
+            # gets, so parent-cache entries could alias them
+            snap_db.admission_gate = db.admission_gate
             # the parent's device manager is shared too — ONE budget
             # accounting, so physical device residency stays under
             # device_budget even while a snapshot query runs — but under a
@@ -455,11 +499,14 @@ class Connection:
             # thread per-query stats (spilled_ops, varchar_spills, spill
             # byte deltas) to the parent database: the snapshot view is
             # discarded, but db.last_stats must reflect the last query run
-            # through this connection regardless of transaction scope
-            db.last_stats = getattr(snap_db, "last_stats", None)
+            # through this connection regardless of transaction scope.
+            # Both sides are thread-local properties now, so the copy-back
+            # moves this thread's snapshot stats into this thread's parent
+            # view — concurrent queries on other threads are untouched
+            db.last_stats = snap_db.last_stats
         else:
             table = db.sql(sql).execute(**kw)
-        return Result(table)
+        return Result(table, stats=db.last_stats)
 
     def append(self, name: str, data, **kw) -> None:
         if self._txn is not None:

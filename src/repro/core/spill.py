@@ -203,8 +203,11 @@ class PartitionPrefetcher:
                 if bm.prefetch and arrs is not None \
                         and i + 1 < len(self.groups):
                     nnb = sum(p.nbytes for p in self.groups[i + 1])
-                    if not self._oversized(nnb) and not bm.would_exceed(nnb):
-                        bm.pin(nnb)
+                    # try_pin is the atomic reserve-or-fail: the old
+                    # would_exceed()+pin() pair was check-then-act — two
+                    # concurrent queries could both pass the check and
+                    # jointly blow the budget
+                    if not self._oversized(nnb) and bm.try_pin(nnb):
                         box, done = self._submit(self.groups[i + 1])
                         pend = (nnb, box, done)
                 try:
