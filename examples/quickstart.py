@@ -243,6 +243,34 @@ print("result_spills:", small.last_stats.result_spills,
 #     to ONE in-flight host→device upload per block (single-flight), so
 #     a repeat-heavy mix does one upload, not one per client.
 #
+# Concurrency guarantees an embedder can rely on — these are not just
+# conventions: each one is encoded as a checked rule in
+# src/repro/analysis/ (`python -m repro.analysis.lint src/` in CI) and
+# the lock ORDER between managers is verified at runtime by the
+# lock-order witness (REPRO_WITNESS=1 turns it on under pytest):
+#
+#   1. budget accounting is atomic — every read-modify-write of host or
+#      device budget state happens under its manager's lock; admission
+#      (gate) and reservation (try_pin / put) are single lock-held
+#      decisions, never check-then-act races.
+#   2. acquisitions pair with releases on ALL paths — pinned bytes,
+#      spill files, admission tickets and the storage directory flock
+#      are released on exceptions too (finally/except or context
+#      manager), so a failing query leaks nothing: a crashed startup()
+#      leaves the directory lockable, a builder that raises mid-upload
+#      leaves no pinned device block behind.
+#   3. device dispatch is serialized — jitted collective steps are
+#      built and launched only under the module dispatch lock, so
+#      concurrent queries cannot interleave multi-device collectives
+#      (the classic SPMD deadlock).
+#   4. stats are safe to read while queries run — shared counters
+#      mutate only via locked helpers (BufferManager.bump /
+#      DeviceBufferManager.bump); db.last_stats is thread-local.
+#   5. lock acquisition order is acyclic — the witness records the
+#      cross-thread acquisition graph over the concurrent suite and
+#      fails CI on any ordering cycle or on a Condition.wait entered
+#      while another engine lock is held.
+#
 # Per-query stats under concurrency: db.last_stats is a THREAD-LOCAL
 # view — each thread sees the stats of the last query it ran, never a
 # neighbour's.  Connection.query returns them on the result itself

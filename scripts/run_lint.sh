@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Invariant lint (see src/repro/analysis/README.md): the project-specific
+# concurrency/resource checkers, plus the ruff real-bug baseline when
+# ruff is on PATH (CI installs it; the dev container may not have it).
+# Extra paths pass through, e.g.:
+#   scripts/run_lint.sh src/repro/core      # lint one subtree
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m repro.analysis.lint "${@:-src/}"
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src/
+else
+    echo "run_lint.sh: ruff not installed; skipped ruff baseline" >&2
+fi

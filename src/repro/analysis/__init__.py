@@ -1,0 +1,24 @@
+"""Invariant lint + lock-order witness for the embedded engine.
+
+MonetDBLite's pitch is an embedded engine that is safe to link into a
+multi-threaded host process with zero administration — which makes the
+concurrency and resource contracts of the core (budget accounting,
+spill-file lifecycle, serialized device dispatch) API guarantees, not
+implementation details.  PRs 2-6 found a ``would_exceed``+``pin`` TOCTOU,
+spill-file leaks on exception paths and an XLA collective rendezvous
+deadlock entirely by hand; this package encodes those hand-won invariants
+as checked rules so the next regression is caught by CI:
+
+* ``repro.analysis.lint`` — an AST-walking static pass with five
+  project-specific checkers (``python -m repro.analysis.lint src/``):
+  guarded-by, check-then-act, acquire-release pairing, device-dispatch
+  and stats-discipline.  See ``checkers.py`` for the rules and
+  ``README.md`` for how to annotate code.
+* ``repro.analysis.witness`` — an opt-in runtime shim that wraps the
+  engine's named locks, records the acquisition-order graph while the
+  concurrent test suite runs, and fails on cycles or on blocking
+  condition waits taken while other locks are held — the dynamic
+  deadlock shapes the static pass cannot see.
+"""
+
+from .core import Finding, SourceFile, run_lint  # noqa: F401

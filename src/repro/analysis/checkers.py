@@ -1,0 +1,436 @@
+"""The five invariant checkers.
+
+Each checker is a pure function ``SourceFile -> list[Finding]``; the rule
+configuration (guarded-attribute registry, acquire/release pairs, dispatch
+producers, stats aliases) lives in ``registry.py``.  Checkers are lexical
+and deliberately conservative: they encode the specific bug classes PRs
+2-6 fixed by hand, not a general alias analysis — see README.md for the
+exact contracts and their escape hatches.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+from .core import Finding, SourceFile, expr_repr, in_core
+from .registry import (ACQUIRE_PAIRS, DISPATCH_LOCK, DISPATCH_PRODUCERS,
+                       GUARDED_REGISTRY, MUTATING_METHODS,
+                       STATS_MANAGER_ALIASES, STATS_OWNER_CLASSES,
+                       TOCTOU_MUTATORS, TOCTOU_PREDICATES)
+
+
+@dataclass(frozen=True)
+class Checker:
+    rule: str
+    doc: str
+    fn: Callable[[SourceFile], list]
+
+    def check(self, src: SourceFile) -> list:
+        return self.fn(src)
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+def _stmt_bodies(fn: ast.AST) -> Iterable[list]:
+    """Every statement list in a function (bodies, orelse, handlers,
+    finally) — the granularity at which guard-clause flow is visible."""
+    for node in ast.walk(fn):
+        for attr in ("body", "orelse", "finalbody"):
+            block = getattr(node, attr, None)
+            if isinstance(block, list) and block \
+                    and isinstance(block[0], ast.stmt):
+                yield block
+
+
+# ---------------------------------------------------------------------------
+# 1. guarded-by
+# ---------------------------------------------------------------------------
+
+
+def check_guarded_by(src: SourceFile) -> list:
+    defined = {n.name for n in ast.walk(src.tree)
+               if isinstance(n, ast.ClassDef)}
+    guards: dict[str, tuple] = {}
+    for cls, attrs in GUARDED_REGISTRY.items():
+        if cls in defined:
+            for attr, lock in attrs.items():
+                guards[attr] = (cls, lock)
+    guards.update(src.comment_guards)
+    if not guards:
+        return []
+    findings = []
+    for fu in src.functions:
+        for node in ast.walk(fu.node):
+            if not isinstance(node, ast.Attribute):
+                continue
+            hit = guards.get(node.attr)
+            if hit is None:
+                continue
+            owner, lock = hit
+            recv = expr_repr(node.value)
+            if recv in ("self", "cls"):
+                # only the owning class's own methods; construction in
+                # __init__ happens before the object is shared
+                if fu.cls != owner or fu.name == "__init__":
+                    continue
+            if (recv, lock) in fu.held_at(node):
+                continue
+            findings.append(Finding(
+                "guarded-by", src.path, node.lineno,
+                f"{recv}.{node.attr} is declared guarded by {lock} "
+                f"(on {owner}) but is accessed without holding "
+                f"{recv or 'module'}.{lock}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# 2. check-then-act
+# ---------------------------------------------------------------------------
+
+
+def _predicate_receivers(test: ast.AST) -> set:
+    """Receivers whose state the if-condition samples: ``bm`` for
+    ``bm.would_exceed(n)``, ``devman`` for ``key in devman``."""
+    out = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in TOCTOU_PREDICATES:
+            out.add(expr_repr(node.func.value))
+        elif isinstance(node, ast.Compare) \
+                and any(isinstance(op, (ast.In, ast.NotIn))
+                        for op in node.ops):
+            for comp in node.comparators:
+                if isinstance(comp, (ast.Name, ast.Attribute)):
+                    out.add(expr_repr(comp))
+    return out
+
+
+def _ends_flow(stmts: list) -> bool:
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+_FRESH_CTORS = {"dict", "list", "set", "OrderedDict", "defaultdict", "deque"}
+
+
+def _local_fresh_names(fn: ast.AST) -> set:
+    """Local names bound to a freshly constructed container inside this
+    function — predicates on those are not shared state (the dedup-list
+    idiom), so check-then-act does not apply to them."""
+    fresh: set = set()
+    for node in ast.walk(fn):
+        value, targets = None, []
+        if isinstance(node, ast.Assign):
+            value, targets = node.value, node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            value, targets = node.value, [node.target]
+        if value is None:
+            continue
+        if isinstance(value, (ast.Dict, ast.List, ast.Set, ast.ListComp,
+                              ast.SetComp, ast.DictComp)) \
+                or (isinstance(value, ast.Call)
+                    and _call_name(value) in _FRESH_CTORS):
+            fresh.update(t.id for t in targets if isinstance(t, ast.Name))
+    return fresh
+
+
+def check_toctou(src: SourceFile) -> list:
+    findings = []
+    for fu in src.functions:
+        fresh = _local_fresh_names(fu.node)
+        for body in _stmt_bodies(fu.node):
+            for i, stmt in enumerate(body):
+                if not isinstance(stmt, ast.If):
+                    continue
+                if fu.held_at(stmt):
+                    continue       # predicate sampled under a lock
+                preds = _predicate_receivers(stmt.test) - fresh
+                if not preds:
+                    continue
+                # the gated region: both branches, plus — when the taken
+                # branch is a guard clause that ends control flow — the
+                # rest of the enclosing block
+                region = list(stmt.body) + list(stmt.orelse)
+                if _ends_flow(stmt.body):
+                    region += body[i + 1:]
+                flagged = False
+                for rn in region:
+                    if flagged:
+                        break
+                    for node in ast.walk(rn):
+                        if isinstance(node, ast.Call) \
+                                and isinstance(node.func, ast.Attribute) \
+                                and node.func.attr in TOCTOU_MUTATORS \
+                                and expr_repr(node.func.value) in preds \
+                                and not fu.held_at(node):
+                            findings.append(Finding(
+                                "check-then-act", src.path, stmt.lineno,
+                                f"predicate on "
+                                f"{expr_repr(node.func.value)} gates "
+                                f"{node.func.attr}() (line {node.lineno}) "
+                                f"outside any lock — two threads can both "
+                                f"pass the check; use an atomic "
+                                f"reserve-or-fail helper (try_pin-style)"))
+                            flagged = True
+                            break
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# 3. acquire-release pairing
+# ---------------------------------------------------------------------------
+
+
+def _protected_nodes(fn: ast.AST) -> set:
+    """ids of nodes lexically inside a finally block or except handler —
+    the regions that still run when the protected body raises."""
+    out: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Try):
+            regions = list(node.finalbody)
+            for h in node.handlers:
+                regions.extend(h.body)
+            for stmt in regions:
+                out.update(id(n) for n in ast.walk(stmt))
+    return out
+
+
+def check_pairing(src: SourceFile) -> list:
+    methods: dict[str, dict] = {}
+    for fu in src.functions:
+        if fu.cls:
+            methods.setdefault(fu.cls, {})[fu.name] = fu
+    findings = []
+    for fu in src.functions:
+        if fu.transfers:
+            continue
+        with_calls = set()
+        for node in ast.walk(fu.node):
+            if isinstance(node, ast.With):
+                with_calls.update(id(item.context_expr)
+                                  for item in node.items)
+        acquires = []
+        for node in ast.walk(fu.node):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ACQUIRE_PAIRS \
+                    and id(node) not in with_calls:
+                acquires.append(node)
+        if not acquires:
+            continue
+        protected = _protected_nodes(fu.node)
+        released = {node.func.attr for node in ast.walk(fu.node)
+                    if isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and id(node) in protected}
+        for node in acquires:
+            name = node.func.attr
+            if node.lineno in src.transfer_lines:
+                continue
+            if ACQUIRE_PAIRS[name] & released:
+                continue
+            if fu.name == "__enter__" and fu.cls:
+                ex = methods.get(fu.cls, {}).get("__exit__")
+                if ex is not None and any(
+                        isinstance(n, ast.Call)
+                        and isinstance(n.func, ast.Attribute)
+                        and n.func.attr in ACQUIRE_PAIRS[name]
+                        for n in ast.walk(ex.node)):
+                    continue
+            findings.append(Finding(
+                "acquire-release", src.path, node.lineno,
+                f"{name}() is not exception-safe: no "
+                f"{'/'.join(sorted(ACQUIRE_PAIRS[name]))} in a "
+                f"finally/except of this function, not a `with` context, "
+                f"and no # transfers-ownership annotation"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# 4. device-dispatch
+# ---------------------------------------------------------------------------
+
+
+def check_dispatch(src: SourceFile) -> list:
+    findings = []
+    annotated = {fu.name for fu in src.functions
+                 if ("", DISPATCH_LOCK) in fu.requires}
+    for fu in src.functions:
+        handles: set = set()
+        for node in ast.walk(fu.node):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and _call_name(node.value) in DISPATCH_PRODUCERS:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        handles.add(t.id)
+                    elif isinstance(t, ast.Tuple):
+                        handles.update(e.id for e in t.elts
+                                       if isinstance(e, ast.Name))
+        for node in ast.walk(fu.node):
+            if not isinstance(node, ast.Call):
+                continue
+            held = ("", DISPATCH_LOCK) in fu.held_at(node)
+            if isinstance(node.func, ast.Name) and node.func.id in handles \
+                    and not held:
+                findings.append(Finding(
+                    "device-dispatch", src.path, node.lineno,
+                    f"{node.func.id}() executes a jitted collective step "
+                    f"outside {DISPATCH_LOCK} — concurrent collective "
+                    f"dispatch deadlocks the XLA rendezvous"))
+            name = _call_name(node)
+            if name in annotated and name != fu.name and not held:
+                findings.append(Finding(
+                    "device-dispatch", src.path, node.lineno,
+                    f"{name}() is annotated requires-lock: "
+                    f"{DISPATCH_LOCK} but is called here without it"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# 5. stats discipline
+# ---------------------------------------------------------------------------
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and _call_name(node) in {
+        "Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+
+
+def _is_mutable_ctor(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Dict, ast.List, ast.Set)):
+        return True
+    return isinstance(node, ast.Call) and _call_name(node) in {
+        "dict", "list", "set", "OrderedDict", "defaultdict", "deque"}
+
+
+def _module_assigns(tree: ast.Module):
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    yield t.id, node
+        elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                and isinstance(node.target, ast.Name):
+            yield node.target.id, node
+
+
+def _associated_lock(name: str, locks: set) -> Optional[str]:
+    exact = f"{name}_LOCK"
+    for lk in sorted(locks):
+        if lk.upper() == exact.upper():
+            return lk
+    tok = name.strip("_").split("_")[0].lower()
+    for lk in sorted(locks):
+        if lk.strip("_").split("_")[0].lower() == tok:
+            return lk
+    return None
+
+
+def check_stats(src: SourceFile) -> list:
+    if not in_core(src.path):
+        return []
+    findings = []
+
+    # (a) direct writes to a shared stats object
+    for fu in src.functions:
+        for node in ast.walk(fu.node):
+            if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if not isinstance(t, ast.Attribute):
+                    continue
+                base = t.value
+                owner_repr = None
+                if isinstance(base, ast.Attribute) and base.attr == "stats":
+                    rep = expr_repr(base.value)
+                    if rep == "self":
+                        if fu.cls in STATS_OWNER_CLASSES:
+                            owner_repr = "self"
+                    elif rep.split(".")[-1] in STATS_MANAGER_ALIASES:
+                        owner_repr = rep
+                elif isinstance(base, ast.Name) \
+                        and base.id in STATS_MANAGER_ALIASES:
+                    owner_repr = base.id
+                if owner_repr is None:
+                    continue
+                if any(r == owner_repr for r, _ in fu.held_at(node)):
+                    continue
+                findings.append(Finding(
+                    "stats-discipline", src.path, node.lineno,
+                    f"unlocked write to shared stats "
+                    f"({expr_repr(t)}) — an unsynchronized "
+                    f"read-modify-write loses updates; use the manager's "
+                    f"bump() helper or a stats_base/stats_apply_delta "
+                    f"window"))
+
+    # (b) module-level mutable caches need an associated module lock
+    mod_locks = {n for n, node in _module_assigns(src.tree)
+                 if _is_lock_ctor(node.value)}
+    mutables = {n: node.lineno for n, node in _module_assigns(src.tree)
+                if _is_mutable_ctor(node.value)}
+    if mutables:
+        for fu in src.functions:
+            for node in ast.walk(fu.node):
+                name = None
+                if isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+                    targets = node.targets if isinstance(
+                        node, (ast.Assign, ast.Delete)) else [node.target]
+                    for t in targets:
+                        if isinstance(t, ast.Subscript) \
+                                and isinstance(t.value, ast.Name) \
+                                and t.value.id in mutables:
+                            name = t.value.id
+                elif isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and isinstance(node.func.value, ast.Name) \
+                        and node.func.value.id in mutables \
+                        and node.func.attr in MUTATING_METHODS:
+                    name = node.func.value.id
+                if name is None:
+                    continue
+                lock = src.module_guards.get(name) \
+                    or _associated_lock(name, mod_locks)
+                if lock is None:
+                    findings.append(Finding(
+                        "stats-discipline", src.path, node.lineno,
+                        f"module-level mutable {name} (line "
+                        f"{mutables[name]}) is mutated at runtime but has "
+                        f"no associated module-level lock"))
+                elif ("", lock) not in fu.held_at(node):
+                    findings.append(Finding(
+                        "stats-discipline", src.path, node.lineno,
+                        f"mutation of module-level {name} without "
+                        f"holding {lock}"))
+    return findings
+
+
+CHECKERS = [
+    Checker("guarded-by",
+            "declared-guarded attributes are only touched under their lock",
+            check_guarded_by),
+    Checker("check-then-act",
+            "predicates must not gate mutations outside the same lock",
+            check_toctou),
+    Checker("acquire-release",
+            "resource acquires must be exception-safe",
+            check_pairing),
+    Checker("device-dispatch",
+            "jitted collective steps run only under _DEVICE_DISPATCH_LOCK",
+            check_dispatch),
+    Checker("stats-discipline",
+            "shared stats mutate through locked helpers; module caches "
+            "have locks",
+            check_stats),
+]

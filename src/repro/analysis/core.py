@@ -1,0 +1,278 @@
+"""Shared machinery for the invariant lint pass.
+
+The framework is deliberately lexical: a ``with <recv>.<lock>:`` block (or
+a ``# requires-lock:`` annotation on the enclosing function) establishes
+that ``(<recv>, <lock>)`` is held for every statement inside it, and the
+checkers in ``checkers.py`` compare the locks held at an AST node against
+what the rule demands there.  Nested ``def``/``lambda`` bodies execute
+later, outside the ``with`` — they inherit *nothing*.
+
+Annotation comments the framework understands (see ``README.md``):
+
+``# guarded-by: <lock>``
+    On an attribute assignment (``self.x = ...`` in a method, or a
+    class-body / module-level assignment): declares that every later
+    read/write of the attribute must hold ``<lock>`` on the same receiver.
+``# requires-lock: <lock>``
+    On (or directly above) a ``def``: the function is only ever called
+    with ``<lock>`` held, so its body is analyzed as if inside the
+    ``with``.  Uppercase names denote module-level locks.
+``# transfers-ownership``
+    On (or directly above) a ``def``, or on an acquire call: the acquired
+    resource is handed to the caller / another owner, which releases it —
+    exempts the function from the local acquire-release pairing rule.
+``# lint: ignore[<rule>]``
+    On a flagged line: suppress that rule there.  ``core/`` carries no
+    suppressions; fixtures and genuinely-special sites may.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z_0-9]*)")
+_REQUIRES_RE = re.compile(r"#\s*requires-lock:\s*([A-Za-z_][A-Za-z_0-9]*)")
+_TRANSFERS_RE = re.compile(r"#\s*transfers-ownership")
+_IGNORE_RE = re.compile(r"#\s*lint:\s*ignore\[([a-z\-*,\s]+)\]")
+
+# Attribute / module-global names that denote locks: _lock, _cond,
+# _query_cond, _seq_lock, _STEP_CACHE_LOCK, _DEVICE_DISPATCH_LOCK, ...
+_LOCKISH_RE = re.compile(r"(?:^|_)(?:lock|cond|mutex)s?$", re.IGNORECASE)
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def expr_repr(node: ast.AST) -> str:
+    """Dotted source text of a receiver expression (``self.bufman``)."""
+    try:
+        return ast.unparse(node)
+    except Exception:                      # pragma: no cover - malformed ast
+        return "?"
+
+
+def lock_token(node: ast.AST) -> Optional[tuple]:
+    """``(receiver, lockname)`` if ``node`` denotes a lock, else None.
+
+    ``with self._lock:`` -> ("self", "_lock"); ``with gate._cond:`` ->
+    ("gate", "_cond"); ``with _STEP_CACHE_LOCK:`` -> ("", "_STEP_CACHE_LOCK").
+    """
+    if isinstance(node, ast.Attribute) and _LOCKISH_RE.search(node.attr):
+        return (expr_repr(node.value), node.attr)
+    if isinstance(node, ast.Name) and _LOCKISH_RE.search(node.id):
+        return ("", node.id)
+    return None
+
+
+class LockScopeMap:
+    """Maps every AST node of one function body to the lexical set of
+    held ``(receiver, lockname)`` pairs.  Nested function/lambda bodies
+    reset to the empty set (they run outside the ``with``)."""
+
+    def __init__(self, func: ast.AST, base: frozenset = frozenset()):
+        self._held: dict[int, frozenset] = {}
+        self._walk_stmts(getattr(func, "body", []), base)
+
+    def at(self, node: ast.AST) -> frozenset:
+        return self._held.get(id(node), frozenset())
+
+    def _walk_stmts(self, stmts: Iterable[ast.AST], held: frozenset) -> None:
+        for s in stmts:
+            self._walk(s, held)
+
+    def _walk(self, node: ast.AST, held: frozenset) -> None:
+        self._held[id(node)] = held
+        if isinstance(node, ast.With):
+            for item in node.items:
+                self._walk(item.context_expr, held)
+                if item.optional_vars is not None:
+                    self._walk(item.optional_vars, held)
+            got = {t for item in node.items
+                   if (t := lock_token(item.context_expr)) is not None}
+            self._walk_stmts(node.body, held | frozenset(got))
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                self._walk(dec, held)
+            self._walk_stmts(node.body, frozenset())
+            return
+        if isinstance(node, ast.Lambda):
+            self._walk(node.body, frozenset())
+            return
+        for child in ast.iter_child_nodes(node):
+            self._walk(child, held)
+
+
+@dataclass
+class FuncUnit:
+    """One analysis unit: a module-level function or a (possibly nested-
+    class) method, with its lexical lock map and annotations resolved."""
+
+    node: ast.AST
+    cls: Optional[str]            # enclosing class name, if a method
+    name: str
+    requires: frozenset           # locks the caller is declared to hold
+    transfers: bool               # function-level # transfers-ownership
+    scopes: LockScopeMap = field(init=False)
+
+    def __post_init__(self):
+        self.scopes = LockScopeMap(self.node, base=self.requires)
+
+    def held_at(self, node: ast.AST) -> frozenset:
+        return self.scopes.at(node)
+
+
+class SourceFile:
+    """One parsed module: source text, AST, comment directives, guarded-
+    attribute declarations and per-function analysis units."""
+
+    def __init__(self, path: str, text: Optional[str] = None):
+        self.path = path
+        if text is None:
+            with open(path, "r", encoding="utf-8") as f:
+                text = f.read()
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+
+        # ---- comment directives, by line number ----
+        self.guard_comments: dict[int, str] = {}
+        self.require_comments: dict[int, str] = {}
+        self.transfer_lines: set[int] = set()
+        self.ignores: dict[int, set] = {}
+        for i, ln in enumerate(self.lines, start=1):
+            if (m := _GUARDED_RE.search(ln)):
+                self.guard_comments[i] = m.group(1)
+            if (m := _REQUIRES_RE.search(ln)):
+                self.require_comments[i] = m.group(1)
+            if _TRANSFERS_RE.search(ln):
+                self.transfer_lines.add(i)
+            if (m := _IGNORE_RE.search(ln)):
+                self.ignores[i] = {r.strip() for r in m.group(1).split(",")}
+
+        # ---- guarded attributes declared by comment ----
+        # {attr: (owning class or None for module level, lockname)}
+        self.comment_guards: dict[str, tuple] = {}
+        for cls in [n for n in ast.walk(self.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            for node in ast.walk(cls):
+                if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    continue
+                lock = self.guard_comments.get(node.lineno)
+                if lock is None:
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id == "self":
+                        self.comment_guards[t.attr] = (cls.name, lock)
+                    elif isinstance(t, ast.Name):   # class-body attribute
+                        self.comment_guards[t.id] = (cls.name, lock)
+
+        # ---- module-level guarded globals by comment ----
+        self.module_guards: dict[str, str] = {}
+        for node in self.tree.body:
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                lock = self.guard_comments.get(node.lineno)
+                if lock is None:
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        self.module_guards[t.id] = lock
+
+        # ---- function units (module-level defs + methods) ----
+        self.functions: list[FuncUnit] = []
+        self._collect_functions(self.tree, None)
+
+    # -- directive helpers ----------------------------------------------------
+    def _near_def(self, table: dict, lineno: int):
+        """Directive on the def line or up to two lines above it."""
+        for ln in (lineno, lineno - 1, lineno - 2):
+            if ln in table:
+                return table[ln]
+        return None
+
+    def _collect_functions(self, parent: ast.AST, cls: Optional[str]) -> None:
+        for node in ast.iter_child_nodes(parent):
+            if isinstance(node, ast.ClassDef):
+                self._collect_functions(node, node.name)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                req = self._near_def(self.require_comments, node.lineno)
+                if req is None:
+                    requires = frozenset()
+                elif req.isupper():
+                    requires = frozenset({("", req)})     # module-level lock
+                else:
+                    requires = frozenset({("self", req), ("cls", req)})
+                transfers = any(
+                    ln in self.transfer_lines
+                    for ln in (node.lineno, node.lineno - 1, node.lineno - 2))
+                self.functions.append(
+                    FuncUnit(node, cls, node.name, requires, transfers))
+                # nested defs are analyzed within the parent unit (empty
+                # held set) — do not also lift them to their own unit
+
+    def ignored(self, rule: str, line: int) -> bool:
+        rules = self.ignores.get(line)
+        return rules is not None and (rule in rules or "*" in rules)
+
+
+def in_core(path: str) -> bool:
+    """True for engine-core modules (and anything outside ``src/repro`` —
+    test fixtures exercise every rule).  Non-core subpackages (models/,
+    kernels/, launch/, ...) are exempt from the core-scoped rules."""
+    parts = os.path.normpath(path).split(os.sep)
+    if "repro" not in parts:
+        return True
+    return "core" in parts or "analysis" in parts
+
+
+def collect_files(paths: Iterable[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+    return out
+
+
+def run_lint(paths: Iterable[str], rules: Optional[Iterable[str]] = None
+             ) -> list[Finding]:
+    """Parse every ``.py`` under ``paths`` and run the registered
+    checkers; returns findings sorted by (path, line)."""
+    from .checkers import CHECKERS
+    selected = [c for c in CHECKERS
+                if rules is None or c.rule in set(rules)]
+    findings: list[Finding] = []
+    for path in collect_files(paths):
+        try:
+            src = SourceFile(path)
+        except SyntaxError as e:
+            findings.append(Finding("parse-error", path, e.lineno or 0,
+                                    f"syntax error: {e.msg}"))
+            continue
+        for checker in selected:
+            findings.extend(f for f in checker.check(src)
+                            if not src.ignored(f.rule, f.line))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

@@ -1,0 +1,46 @@
+"""CLI entry point: ``python -m repro.analysis.lint src/``.
+
+Exits 0 when no checker reports a finding, 1 otherwise.  ``--rule`` can
+be given multiple times to run a subset of checkers; ``--list`` prints
+the active rules.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .core import run_lint
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Invariant lint for the engine's concurrency and "
+                    "resource contracts.")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--rule", action="append", dest="rules",
+                        metavar="RULE",
+                        help="run only this rule (repeatable)")
+    parser.add_argument("--list", action="store_true",
+                        help="list the registered checkers and exit")
+    args = parser.parse_args(argv)
+
+    if args.list:
+        from .checkers import CHECKERS
+        for c in CHECKERS:
+            print(f"{c.rule:18s} {c.doc}")
+        return 0
+
+    findings = run_lint(args.paths or ["src"], rules=args.rules)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"\n{len(findings)} finding(s).", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

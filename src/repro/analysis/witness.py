@@ -1,0 +1,266 @@
+"""Runtime lock-order witness.
+
+Static analysis cannot see dynamic deadlock shapes — lock A taken under
+lock B on one thread and B under A on another, or a blocking
+``Condition.wait`` entered while a second lock is still held (the PR 6
+collective-dispatch deadlock was exactly the latter).  The witness wraps
+the engine's *named* locks in thin proxies that record, per thread, the
+set of witnessed locks held at every acquire.  Each acquire appends
+``held -> acquired`` edges to a global acquisition-order graph *before*
+blocking, so even a real deadlock leaves the offending edge behind.
+
+Usage (opt-in; zero overhead when not installed)::
+
+    from repro.analysis import witness
+    w = witness.LockWitness()
+    witness.install(w)            # instruments every Database built after
+    ...run the concurrent suite...
+    witness.uninstall()
+    w.assert_ok()                 # raises on cycles / held-lock waits
+
+or set ``REPRO_WITNESS=1`` and run pytest — ``tests/conftest.py``
+installs a session-scoped witness and checks it at teardown.
+
+Reentrant re-acquisition of the same named lock (RLock) is not an
+ordering edge and is skipped.  ``Condition.wait`` releases its own lock,
+so waiting while *other* witnessed locks are held is recorded as a
+violation: those locks stay held for the full wait and any thread that
+needs one of them to reach ``notify`` deadlocks.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Optional
+
+
+class LockOrderError(AssertionError):
+    """Raised by :meth:`LockWitness.assert_ok` on a violation."""
+
+
+class LockWitness:
+    """Records the lock acquisition-order graph across all threads."""
+
+    def __init__(self):
+        self._graph_lock = threading.Lock()
+        # edge (held_name, acquired_name) -> example thread name
+        self.edges: dict[tuple, str] = {}
+        # blocking waits taken while other witnessed locks were held
+        self.wait_violations: list[str] = []
+        self.acquire_count = 0
+        self._local = threading.local()
+
+    # -- per-thread held stack ------------------------------------------------
+    def _held(self) -> list:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    # -- hooks called by _WitnessedLock --------------------------------------
+    def note_acquire(self, name: str) -> None:
+        """Record edges BEFORE the underlying acquire may block."""
+        held = self._held()
+        with self._graph_lock:
+            self.acquire_count += 1
+            for h in held:
+                if h != name:                 # RLock reentrancy: no self-edge
+                    self.edges.setdefault(
+                        (h, name), threading.current_thread().name)
+
+    def note_acquired(self, name: str) -> None:
+        self._held().append(name)
+
+    def note_release(self, name: str) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == name:
+                del held[i]
+                return
+
+    def note_wait(self, name: str) -> None:
+        """``Condition.wait`` on ``name``: its own lock is released for the
+        duration, but every *other* held witnessed lock stays held."""
+        others = [h for h in self._held() if h != name]
+        if others:
+            with self._graph_lock:
+                self.wait_violations.append(
+                    f"{threading.current_thread().name}: blocking wait on "
+                    f"{name} while holding {sorted(set(others))}")
+
+    # -- analysis -------------------------------------------------------------
+    def cycles(self) -> list:
+        """All elementary cycles reachable in the recorded graph (DFS)."""
+        with self._graph_lock:
+            adj = defaultdict(set)
+            for a, b in self.edges:
+                adj[a].add(b)
+        out, state = [], {}          # state: 1=on stack, 2=done
+
+        def dfs(node, path):
+            state[node] = 1
+            path.append(node)
+            for nxt in sorted(adj[node]):
+                if state.get(nxt) == 1:
+                    out.append(path[path.index(nxt):] + [nxt])
+                elif state.get(nxt) is None:
+                    dfs(nxt, path)
+            path.pop()
+            state[node] = 2
+
+        for node in sorted(adj):
+            if state.get(node) is None:
+                dfs(node, [])
+        return out
+
+    def report(self) -> str:
+        lines = [f"witness: {self.acquire_count} acquisitions, "
+                 f"{len(self.edges)} distinct order edges"]
+        for (a, b), thr in sorted(self.edges.items()):
+            lines.append(f"  {a} -> {b}   (first seen on {thr})")
+        for c in self.cycles():
+            lines.append(f"  CYCLE: {' -> '.join(c)}")
+        for v in self.wait_violations:
+            lines.append(f"  HELD-LOCK WAIT: {v}")
+        return "\n".join(lines)
+
+    def assert_ok(self) -> None:
+        problems = []
+        for c in self.cycles():
+            problems.append(f"lock-order cycle: {' -> '.join(c)}")
+        problems.extend(f"held-lock wait: {v}" for v in self.wait_violations)
+        if problems:
+            raise LockOrderError(
+                "lock-order witness failed:\n  " + "\n  ".join(problems)
+                + "\n" + self.report())
+
+
+class _WitnessedLock:
+    """Proxy around Lock/RLock/Condition reporting to a LockWitness."""
+
+    def __init__(self, inner, name: str, witness: LockWitness):
+        self._inner = inner
+        self._name = name
+        self._witness = witness
+
+    def acquire(self, *args, **kwargs):
+        self._witness.note_acquire(self._name)
+        got = self._inner.acquire(*args, **kwargs)
+        if got:
+            self._witness.note_acquired(self._name)
+        return got
+
+    def release(self):
+        self._inner.release()
+        self._witness.note_release(self._name)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    # Condition protocol — delegated; wait() is a witness event because the
+    # calling thread blocks while every OTHER held lock stays held.
+    def wait(self, timeout: Optional[float] = None):
+        self._witness.note_wait(self._name)
+        return self._inner.wait(timeout)
+
+    def wait_for(self, predicate, timeout: Optional[float] = None):
+        self._witness.note_wait(self._name)
+        return self._inner.wait_for(predicate, timeout)
+
+    def notify(self, n: int = 1):
+        return self._inner.notify(n)
+
+    def notify_all(self):
+        return self._inner.notify_all()
+
+    def locked(self):
+        return self._inner.locked()
+
+    def __repr__(self):
+        return f"<witnessed {self._name} wrapping {self._inner!r}>"
+
+
+def _wrap(obj, attr: str, name: str, witness: LockWitness) -> None:
+    inner = getattr(obj, attr, None)
+    if inner is None or isinstance(inner, _WitnessedLock):
+        return
+    setattr(obj, attr, _WitnessedLock(inner, name, witness))
+
+
+def instrument_database(db, witness: LockWitness) -> None:
+    """Wrap the named locks of one Database's managers in place."""
+    bm = getattr(db, "buffer_manager", None)
+    if bm is not None:
+        _wrap(bm, "_lock", "BufferManager._lock", witness)
+        _wrap(bm, "_query_cond", "BufferManager._query_cond", witness)
+    dm = getattr(db, "device_manager", None)
+    if dm is not None:
+        _wrap(dm, "_lock", "DeviceBufferManager._lock", witness)
+        flight = getattr(dm, "_flight", None)
+        if flight is not None:
+            _wrap(flight, "_lock", "SingleFlight._lock", witness)
+    gate = getattr(db, "admission_gate", None)
+    if gate is not None:
+        _wrap(gate, "_cond", "AdmissionGate._cond", witness)
+    pc = getattr(db, "plan_cache", None)
+    if pc is not None:
+        _wrap(pc, "_lock", "PlanCache._lock", witness)
+
+
+def instrument_modules(witness: LockWitness) -> list:
+    """Wrap the process-wide module locks (dispatch, step cache, open-DB
+    registry, device key sequencing).  Returns ``(obj, attr, original)``
+    restore records for :func:`uninstall`."""
+    from repro.core import parallel, session
+    from repro.core.device_cache import DeviceBlockKeys
+    restores = []
+    for obj, attr, name in [
+            (parallel, "_DEVICE_DISPATCH_LOCK", "_DEVICE_DISPATCH_LOCK"),
+            (parallel, "_STEP_CACHE_LOCK", "_STEP_CACHE_LOCK"),
+            (session, "_open_lock", "session._open_lock"),
+            (DeviceBlockKeys, "_seq_lock", "DeviceBlockKeys._seq_lock")]:
+        orig = getattr(obj, attr, None)
+        if orig is not None and not isinstance(orig, _WitnessedLock):
+            restores.append((obj, attr, orig))
+            _wrap(obj, attr, name, witness)
+    return restores
+
+
+_installed: Optional[tuple] = None
+
+
+def install(witness: LockWitness) -> None:
+    """Instrument module locks now and every Database built from here on
+    (by wrapping ``Database.__init__``).  Idempotent per process; call
+    :func:`uninstall` to restore."""
+    global _installed
+    if _installed is not None:
+        return
+    from repro.core import session
+    restores = instrument_modules(witness)
+    orig_init = session.Database.__init__
+
+    def witnessed_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        instrument_database(self, witness)
+
+    session.Database.__init__ = witnessed_init
+    _installed = (orig_init, restores)
+
+
+def uninstall() -> None:
+    global _installed
+    if _installed is None:
+        return
+    from repro.core import session
+    orig_init, restores = _installed
+    session.Database.__init__ = orig_init
+    for obj, attr, orig in restores:
+        setattr(obj, attr, orig)
+    _installed = None

@@ -22,6 +22,7 @@ __all__ = [
     "AggSpec", "BinOp", "BufferManager", "Case", "Cast", "Col", "Column",
     "ColumnSchema",
     "ConflictError", "Connection", "Database", "DatabaseError", "DateLit",
+    "DeviceBufferManager",
     "DBType", "Func", "InList", "IsNull", "LazyFrame", "Like", "Lit", "Not",
     "Query", "Result", "StringHeap", "Table", "TableSchema",
     "TransactionError", "copy_for_write", "export_table", "import_arrays",

@@ -44,7 +44,7 @@ import os
 import shutil
 import tempfile
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from time import monotonic as _monotonic
 from typing import Iterator, Optional
 
@@ -334,6 +334,15 @@ class BufferManager:
         with self._lock:
             self.stats.pinned = max(0, self.stats.pinned - int(nbytes))
 
+    def bump(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to stats counters.  Operator code must
+        use this (or a ``stats_base``/``stats_apply_delta`` window) instead
+        of ``bm.stats.field += n`` — the bare form is an unlocked
+        read-modify-write that loses updates under concurrency."""
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self.stats, name, getattr(self.stats, name) + delta)
+
     class _Pin:
         def __init__(self, mgr: "BufferManager", nbytes: int):
             self._mgr, self._n = mgr, int(nbytes)
@@ -465,15 +474,21 @@ class BufferManager:
         with self._lock:
             files = list(self._files)
             self._files.clear()
+            # snapshot the owned-dir decision under the lock too: a
+            # concurrent spill_dir may be mid-creation, and reading
+            # _dir_ready/_spill_dir outside the lock races it
+            spill_dir = self._spill_dir
+            remove_dir = self._owns_dir and self._dir_ready \
+                and spill_dir is not None
+            if remove_dir:
+                self._dir_ready = False
         for p in files:
             try:
                 os.unlink(p)       # tolerate a concurrent release_file win
             except OSError:
                 pass
-        if self._owns_dir and self._dir_ready and self._spill_dir \
-                and os.path.isdir(self._spill_dir):
-            shutil.rmtree(self._spill_dir, ignore_errors=True)
-            self._dir_ready = False
+        if remove_dir and os.path.isdir(spill_dir):
+            shutil.rmtree(spill_dir, ignore_errors=True)
 
 
 class PartitionWriter:
@@ -495,6 +510,8 @@ class PartitionWriter:
 
     MAX_PARTITIONS = 64      # bounded fd usage; 64 * budget/4 input headroom
 
+    # transfers-ownership: registered paths are released by finalize()
+    # readers or abort(), never here
     def __init__(self, bufman: BufferManager, n_parts: int,
                  streams: dict[str, np.dtype], hint: str = "part",
                  codec: Optional[int] = None):

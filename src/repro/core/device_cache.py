@@ -113,23 +113,32 @@ class DeviceBufferManager:
     # ---- introspection -----------------------------------------------------
     @property
     def resident_bytes(self) -> int:
-        return self._resident
+        with self._lock:
+            return self._resident
 
     @property
     def resident_blocks(self) -> int:
-        return len(self._blocks)
+        with self._lock:
+            return len(self._blocks)
 
     def __contains__(self, key: tuple) -> bool:
         with self._lock:
             return key in self._blocks
 
+    def bump(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to stats counters — the locked
+        replacement for ``devman.stats.field += n`` in operator code."""
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self.stats, name, getattr(self.stats, name) + delta)
+
     # ---- placement ---------------------------------------------------------
-    def _account(self, nbytes: int) -> None:
+    def _account(self, nbytes: int) -> None:  # requires-lock: _lock
         self._resident += nbytes
         self.stats.device_bytes_peak = max(self.stats.device_bytes_peak,
                                            self._resident)
 
-    def _make_room(self, nbytes: int) -> None:
+    def _make_room(self, nbytes: int) -> None:  # requires-lock: _lock
         """Evict LRU unpinned blocks until ``nbytes`` fits the budget.
         Runs *before* the new block is accounted, so tracked resident bytes
         — and therefore ``device_bytes_peak`` — never exceed the budget."""
@@ -152,7 +161,7 @@ class DeviceBufferManager:
                     f"(budget {self.budget})")
             self._evict(victim)
 
-    def _evict(self, key: tuple) -> None:
+    def _evict(self, key: tuple) -> None:  # requires-lock: _lock
         blk = self._blocks.pop(key)
         if blk.dirty:
             # query-produced intermediate: host has no authoritative copy,

@@ -24,7 +24,7 @@ benchmarks/bench_export.py.
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 

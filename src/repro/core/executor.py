@@ -10,18 +10,18 @@ from cardinalities and available indexes.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import numpy as np
 
-from .column import Column, StringHeap
+from .column import Column
 from .expression import (BinOp, Col, DateLit, EvalContext, Expr, ExprResult,
                          Lit)
 from .mal import Instr, MALProgram
 from .optimizer import split_conjuncts
 from .physplan import TierPolicy
-from .relalg import (AggregateNode, AggSpec, FilterNode, JoinNode, LimitNode,
+from .relalg import (AggregateNode, FilterNode, JoinNode, LimitNode,
                      OrderByNode, PlanNode, ProjectNode, ScanNode)
 from .types import DBType, NULL_SENTINEL, STORAGE_DTYPE, is_float
 
@@ -552,12 +552,14 @@ class Executor:
         database-lifetime); ``varchar`` marks ops whose keys include
         dictionary-encoded strings."""
         self.stats.spilled_ops += 1
-        self.bufman.stats.spilled_ops += 1
+        self.bufman.bump(spilled_ops=1)
         if varchar:
             self.stats.varchar_spills += 1
-            self.bufman.stats.varchar_spills += 1
+            self.bufman.bump(varchar_spills=1)
 
     # -- entry points -------------------------------------------------------
+    # transfers-ownership: the ticket is released by the caller's
+    # `with self._admitted(phys):` exit, not here
     def _admitted(self, phys):
         """Reserve the plan's summed per-operator budget estimates at the
         database's admission gate before running (serving.AdmissionGate);
@@ -573,7 +575,7 @@ class Executor:
         self.stats.reserved_bytes = ticket.host_bytes
         self.stats.reserved_device_bytes = ticket.device_bytes
         if ticket.waited and self.bufman is not None:
-            self.bufman.stats.admission_waits += 1
+            self.bufman.bump(admission_waits=1)
         return ticket
 
     def _plan_feedback(self, plan: PlanNode, distributed: bool) -> None:
@@ -853,7 +855,7 @@ class Executor:
             cols[name] = Column(r.dbtype, v, heap=r.heap, scale=r.scale)
             schemas.append(ColumnSchema(name, r.dbtype, scale=r.scale))
         if spill:
-            self.bufman.stats.result_spills += 1
+            self.bufman.bump(result_spills=1)
         from .table import Table
         return Table(TableSchema("result", tuple(schemas)), cols)
 

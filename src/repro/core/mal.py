@@ -25,7 +25,7 @@ result names, regs                                      [blocking]
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any
 
 PARALLELIZABLE = {"load", "expr", "select", "mand", "fetch", "take"}
 BLOCKING = {"join", "group", "agg", "sort", "result"}

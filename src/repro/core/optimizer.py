@@ -15,7 +15,6 @@ from __future__ import annotations
 
 from typing import Optional
 
-import numpy as np
 
 from .expression import (BinOp, Case, Cast, Col, Expr, Func, InList, IsNull,
                          Like, Lit, Not)

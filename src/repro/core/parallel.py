@@ -60,14 +60,12 @@ from .device_cache import (DeviceBlockKeys, DeviceBudgetError,
                            DeviceBufferManager)
 from .executor import Executor, _res_nulls, compile_plan
 from .expression import EvalContext, Expr, ExprResult
-from .physplan import (AGG_RESULT_NAME, DEVICE_BATCH_ROWS, MAX_DENSE_GROUPS,
-                       MIN_ROWS_TO_SHARD, PartialLayout, PhysicalPlan,
-                       ScanAggSpec, TIER_DEVICE_RESIDENT,
-                       TIER_DEVICE_STREAMED, choose_device_tier,
-                       match_scan_agg, mesh_shards, partial_layout,
-                       plan_physical, scan_agg_geometry)
+from .physplan import (AGG_RESULT_NAME, PhysicalPlan, ScanAggSpec,
+                       TIER_DEVICE_RESIDENT, choose_device_tier,
+                       match_scan_agg,  # noqa: F401  (re-exported for tests)
+                       mesh_shards, partial_layout, scan_agg_geometry)
 from .relalg import PlanNode
-from .types import DBType, NULL_SENTINEL, is_float
+from .types import DBType
 
 # The scan-agg pattern matcher, the partial-matrix layout, the batch
 # geometry and the tier-placement policy all live in physplan.py (the
@@ -480,6 +478,7 @@ class DistributedScanAgg:
                                           shard),
                    bcol)
 
+    # requires-lock: _DEVICE_DISPATCH_LOCK
     def _issue_prefetch(self, b: int, prefetched: set, query_keys: set,
                         sh) -> None:
         """Start batch ``b``'s host→device copies (non-blocking) so they
@@ -512,7 +511,7 @@ class DistributedScanAgg:
         with _DEVICE_DISPATCH_LOCK:
             return self._run_locked(tier)
 
-    def _run_locked(self, tier: str) -> np.ndarray:
+    def _run_locked(self, tier: str) -> np.ndarray:  # requires-lock: _DEVICE_DISPATCH_LOCK
         devman = self.devman
         spec = self.spec
         init_fn, step = _cached_batch_step(spec, self.meta, self.mesh,
@@ -534,7 +533,7 @@ class DistributedScanAgg:
                     if key in prefetched:
                         prefetched.discard(key)         # pinned at issue
                         arr = devman.peek(key)
-                        devman.stats.device_prefetch_hits += 1
+                        devman.bump(device_prefetch_hits=1)
                     else:
                         # single-flight: a concurrent query needing the
                         # same block attaches to one in-flight upload

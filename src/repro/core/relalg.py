@@ -8,7 +8,7 @@ into a MAL-style column-at-a-time program (mal.py).  Matches the paper's
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from .expression import Col, Expr, Lit

@@ -42,7 +42,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from .relalg import PlanNode, ScanNode, plan_repr, walk
@@ -92,18 +92,20 @@ class AdmissionGate:
     # -- introspection -------------------------------------------------------
     @property
     def host_reserved(self) -> int:
-        return self._host_reserved
+        with self._cond:
+            return self._host_reserved
 
     @property
     def device_reserved(self) -> int:
-        return self._device_reserved
+        with self._cond:
+            return self._device_reserved
 
     def _cap(self, req: int, budget: Optional[int]) -> int:
         if budget is None:
             return 0                  # unlimited: nothing to reserve against
         return min(int(req), budget)
 
-    def _fits(self, host_req: int, device_req: int) -> bool:
+    def _fits(self, host_req: int, device_req: int) -> bool:  # requires-lock: _cond
         if self.host_budget is not None \
                 and self._host_reserved + host_req > self.host_budget:
             return False
@@ -213,7 +215,8 @@ class PlanCache:
         self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     # -- keys -----------------------------------------------------------------
     @staticmethod
@@ -368,15 +371,15 @@ def lower_cached(db, plan: PlanNode, *, do_optimize: bool = True,
         return phys, phys.render(), False
     key = PlanCache.key(db, plan, do_optimize=do_optimize,
                         distributed=distributed, mesh_key=mesh_key)
-    bstats = getattr(getattr(db, "buffer_manager", None), "stats", None)
+    bm = getattr(db, "buffer_manager", None)
     hit = cache.get(key)
     if hit is not None:
-        if bstats is not None:
-            bstats.plan_cache_hits += 1
+        if bm is not None:
+            bm.bump(plan_cache_hits=1)
         phys, rendered = hit
         return phys, rendered, True
-    if bstats is not None:
-        bstats.plan_cache_misses += 1
+    if bm is not None:
+        bm.bump(plan_cache_misses=1)
     phys = plan_physical(plan, db, do_optimize=do_optimize,
                          distributed=distributed, mesh=mesh,
                          group_card_hint=cache.group_card(

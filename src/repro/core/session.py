@@ -24,7 +24,6 @@ from typing import Optional
 
 import numpy as np
 
-from .column import Column
 from .executor import Executor
 from .indexes import IndexManager
 from .relalg import PlanNode, Query, ScanNode

@@ -186,7 +186,7 @@ class PartitionPrefetcher:
                     except BaseException:
                         bm.unpin(pnb)
                         raise
-                    bm.stats.prefetch_hits += 1
+                    bm.bump(prefetch_hits=1)
                 else:
                     nb = sum(p.nbytes for p in group)
                     if self._oversized(nb):
@@ -208,7 +208,13 @@ class PartitionPrefetcher:
                     # concurrent queries could both pass the check and
                     # jointly blow the budget
                     if not self._oversized(nnb) and bm.try_pin(nnb):
-                        box, done = self._submit(self.groups[i + 1])
+                        try:
+                            box, done = self._submit(self.groups[i + 1])
+                        except BaseException:
+                            # worker-thread start can fail: the reserve
+                            # must not outlive the submission it was for
+                            bm.unpin(nnb)
+                            raise
                         pend = (nnb, box, done)
                 try:
                     yield group, arrs
@@ -335,7 +341,7 @@ def _repartition_groupby(keys: list, partn: SpillPartition,
             return _groupby_arrays(keys, partn.load())
     splitters = _splitters_from_sample(cols, n_parts)
 
-    bufman.stats.repartitions += 1
+    bufman.bump(repartitions=1)
     writer = PartitionWriter(bufman, n_parts, dict(partn.streams),
                              hint=f"grp{depth}")
     # coalesce the parent's (possibly tiny) blocks up to one morsel before
@@ -700,7 +706,7 @@ def _repartition_join(lp: SpillPartition, rp: SpillPartition, lres: list,
     rows = lp.rows + rp.rows
     row_bytes = max(1, nbytes // max(1, rows))
     morsel = choose_morsel_rows(row_bytes, bufman.budget)
-    bufman.stats.repartitions += 1
+    bufman.bump(repartitions=1)
 
     lw = PartitionWriter(bufman, n_sub, dict(lp.streams),
                          hint=f"jl{depth}")
@@ -841,6 +847,8 @@ def _append_sort_blocks(f, bufman: BufferManager, key_cols: list,
         write_stream_block(f, idx[s:e], bufman.codec, bufman)
 
 
+# transfers-ownership: the returned run path is released by the merge
+# (external_merge_sort) once the run is consumed
 def _write_sort_run(bufman: BufferManager, key_cols: list,
                     idx: np.ndarray) -> str:
     path = bufman.new_spill_file("sortrun")
@@ -996,7 +1004,7 @@ def spooled_row_groups(rows: Iterable[dict], key_fn, bufman: BufferManager,
                 if sniffing:
                     ks = key if isinstance(key, tuple) else (key,)
                     if any(isinstance(v, str) for v in ks):
-                        bufman.stats.varchar_spills += 1
+                        bufman.bump(varchar_spills=1)
                         sniffing = False
                     elif all(v is not None for v in ks):
                         sniffing = False

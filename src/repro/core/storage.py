@@ -18,7 +18,6 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Optional
 
 import numpy as np
 
@@ -177,8 +176,14 @@ class Storage:
             os.close(fd)
             raise RuntimeError(
                 f"database locked by process {owner or '?'}: {self.root}")
-        os.ftruncate(fd, 0)
-        os.write(fd, str(os.getpid()).encode())
+        try:
+            os.ftruncate(fd, 0)
+            os.write(fd, str(os.getpid()).encode())
+        except OSError:
+            # the pid note is informational; a failure writing it must not
+            # leak the fd (closing it also drops the flock we just took)
+            os.close(fd)
+            raise
         self._lock_fd = fd
         self._locked = True
 

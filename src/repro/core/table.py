@@ -12,7 +12,7 @@ from typing import Iterable, Optional
 
 import numpy as np
 
-from .column import Column, StringHeap
+from .column import Column
 from .types import ColumnSchema, DBType, TableSchema
 
 

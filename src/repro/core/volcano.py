@@ -22,7 +22,7 @@ from .expression import (BinOp, Case, Cast, Col, DateLit, Expr, Func, InList,
                          IsNull, Like, Lit, Not)
 from .relalg import (AggregateNode, FilterNode, JoinNode, LimitNode,
                      OrderByNode, PlanNode, ProjectNode, ScanNode)
-from .types import DBType, NULL_SENTINEL, is_float
+from .types import DBType
 
 Row = dict
 
@@ -184,7 +184,7 @@ class VolcanoExecutor:
             results = [(k, _agg_group(node, k, rows)) for k, rows in
                        spooled_row_groups(self._iter(node.child), keyf, bm,
                                           est_bytes=est)]
-            bm.stats.spilled_ops += 1
+            bm.bump(spilled_ops=1)
         else:
             groups: dict[tuple, list[Row]] = {}
             for row in self._iter(node.child):

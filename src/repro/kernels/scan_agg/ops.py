@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .scan_agg import LANES, scan_agg_pallas
+from .scan_agg import scan_agg_pallas
 
 _NEG = np.float32(-3.0e38)
 _WIDE = np.float32(3.0e38)

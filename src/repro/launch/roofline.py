@@ -16,7 +16,6 @@ a standard first-order model (actual rings move (n-1)/n of it).
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import asdict, dataclass
 from typing import Optional

@@ -8,14 +8,12 @@ device arrays of identical shape/sharding).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..configs.registry import ShapeCell, get_config
+from ..configs.registry import ShapeCell
 from ..models.config import ModelConfig
 from ..models.transformer import (decode_state_spec, init_decode_state,
                                   init_model, model_spec)

@@ -15,24 +15,22 @@ Usage (quickstart numbers: ~15M-param model, a few hundred steps):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import socket
 import time
 
 import jax
-import numpy as np
 
 from ..configs.registry import get_config
 from ..core.session import startup
 from ..data.pipeline import TokenPipeline, curate, tokenize_corpus
 from ..models.config import ModelConfig
-from ..models.transformer import init_model, model_spec
+from ..models.transformer import init_model
 from ..train.checkpoint import (latest_step, restore_checkpoint,
                                 save_checkpoint)
 from ..train.fault import Heartbeat, StragglerDetector
-from ..train.optimizer import AdamWConfig, init_opt_state, opt_state_spec
+from ..train.optimizer import AdamWConfig, init_opt_state
 from ..train.train_step import make_train_step
 from .mesh import make_local_mesh
 

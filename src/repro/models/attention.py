@@ -18,7 +18,6 @@ not skipped, in the baseline; tile *skipping* is a recorded §Perf change.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

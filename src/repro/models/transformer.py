@@ -18,8 +18,6 @@ Three entry points per model: ``forward_train`` (full-sequence logits),
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ and their slots refilled by the driver in examples/serve_lm.py).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,9 +11,7 @@ their first axis over ``data`` when divisible — the classic ZeRO trick).
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,6 @@ the interleaving of collective-start/done with dot ops).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,3 +17,21 @@ def db():
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_order_witness():
+    """Opt-in lock-order witness (REPRO_WITNESS=1): instrument every
+    Database built during the session plus the module-level locks, and
+    fail the run at teardown on acquisition-order cycles or blocking
+    condition waits taken while other witnessed locks are held."""
+    if os.environ.get("REPRO_WITNESS") != "1":
+        yield
+        return
+    from repro.analysis import witness as wmod
+    w = wmod.LockWitness()
+    wmod.install(w)
+    yield
+    wmod.uninstall()
+    sys.stderr.write("\n" + w.report() + "\n")
+    w.assert_ok()

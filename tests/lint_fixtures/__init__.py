@@ -1,0 +1,3 @@
+# Known-bad snippets the golden tests feed to the invariant linter.
+# Nothing here is imported at runtime; each bad line carries a "# BAD"
+# marker the tests compare flagged line numbers against.

@@ -1,0 +1,11 @@
+"""Jitted collective steps dispatched outside _DEVICE_DISPATCH_LOCK —
+the PR 6 XLA rendezvous deadlock class.  ``step.lower(...)`` (AOT
+inspection) would be fine; direct handle calls are not."""
+
+
+def run_batches(spec, meta, mesh, batches):
+    init_fn, step = _cached_batch_step(spec, meta, mesh, 128)  # noqa: F821
+    carry = init_fn()               # BAD
+    for arrs in batches:
+        carry = step(carry, *arrs)  # BAD
+    return carry

@@ -1,0 +1,27 @@
+"""Seeded guarded-by violations: declared-guarded fields touched outside
+their lock — one declared via an inline comment, one via the per-class
+registry (PlanCache)."""
+
+import threading
+
+
+class Gate:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._reserved = 0          # guarded-by: _cond
+
+    def reserve(self, n):
+        with self._cond:
+            self._reserved += n     # fine: under the declared lock
+
+    def reserved(self):
+        return self._reserved       # BAD
+
+
+class PlanCache:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries = {}
+
+    def size(self):
+        return len(self._entries)   # BAD

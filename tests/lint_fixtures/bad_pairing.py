@@ -1,0 +1,17 @@
+"""Exception-path resource leaks: the release exists but is not reachable
+when the body raises (straight-line release, no finally/except/with)."""
+
+
+def load_group(bm, group):
+    nb = sum(p.nbytes for p in group)
+    pnb = bm.pin(nb)                # BAD
+    arrs = [p.load() for p in group]
+    bm.unpin(pnb)                   # straight-line: skipped if load raises
+    return arrs
+
+
+def open_database(storage):
+    storage.acquire_lock()          # BAD
+    catalog = storage.load_catalog()
+    storage.release_lock()          # never runs if load_catalog raises
+    return catalog

@@ -1,0 +1,13 @@
+"""Stats-discipline violations: a raw increment on a shared stats object
+(unlocked read-modify-write) and a module-level mutable cache mutated at
+runtime with no associated module lock."""
+
+_RESULT_CACHE: dict = {}
+
+
+def remember(key, value):
+    _RESULT_CACHE[key] = value       # BAD
+
+
+def count_hit(bufman):
+    bufman.stats.prefetch_hits += 1  # BAD

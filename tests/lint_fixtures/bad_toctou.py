@@ -1,0 +1,13 @@
+"""The reconstructed pre-PR-6 TOCTOU: ``would_exceed()`` gating ``pin()``
+outside any lock.  Two threads both pass the budget check, both pin, and
+jointly overshoot — the exact bug ``try_pin`` replaced."""
+
+
+# transfers-ownership: the pinned reserve travels with the returned tuple
+def prefetch_next(bm, groups, i, submit):
+    nnb = sum(p.nbytes for p in groups[i + 1])
+    if not bm.would_exceed(nnb):    # BAD
+        pnb = bm.pin(nnb)
+        box, done = submit(groups[i + 1])
+        return pnb, box, done
+    return None

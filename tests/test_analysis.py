@@ -1,0 +1,133 @@
+"""Golden tests for the invariant linter: every checker flags its seeded
+bug fixture (on exactly the ``# BAD`` lines), and the full pass runs
+clean on the real tree."""
+
+import os
+import subprocess
+import sys
+
+from repro.analysis import run_lint
+from repro.analysis.checkers import CHECKERS
+from repro.analysis.core import SourceFile, in_core
+from repro.analysis.lint import main as lint_main
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+
+# fixture -> the one rule its seeded bugs must trip
+GOLDEN = {
+    "bad_guarded.py": "guarded-by",
+    "bad_toctou.py": "check-then-act",
+    "bad_pairing.py": "acquire-release",
+    "bad_dispatch.py": "device-dispatch",
+    "bad_stats.py": "stats-discipline",
+}
+
+
+def _bad_lines(path):
+    with open(path) as f:
+        return {i for i, ln in enumerate(f, start=1) if "# BAD" in ln}
+
+
+class TestGoldenFixtures:
+    def test_every_checker_has_a_fixture(self):
+        assert sorted(GOLDEN.values()) == sorted(c.rule for c in CHECKERS)
+        assert len(CHECKERS) >= 5
+
+    def test_each_fixture_flags_its_rule_on_the_bad_lines(self):
+        for fname, rule in GOLDEN.items():
+            path = os.path.join(FIXTURES, fname)
+            findings = run_lint([path])
+            assert findings, f"{fname}: seeded bug not flagged"
+            assert {f.rule for f in findings} == {rule}, \
+                f"{fname}: {[str(f) for f in findings]}"
+            assert {f.line for f in findings} == _bad_lines(path), \
+                f"{fname}: flagged lines != # BAD lines: " \
+                f"{[str(f) for f in findings]}"
+
+    def test_pre_pr6_toctou_reconstruction(self):
+        """The reconstructed would_exceed()+pin() pair is caught and the
+        message points at the atomic replacement."""
+        findings = run_lint([os.path.join(FIXTURES, "bad_toctou.py")])
+        assert len(findings) == 1
+        assert findings[0].rule == "check-then-act"
+        assert "try_pin" in findings[0].message
+        assert "pin()" in findings[0].message
+
+    def test_rule_filter(self):
+        path = os.path.join(FIXTURES, "bad_pairing.py")
+        assert run_lint([path], rules=["guarded-by"]) == []
+        assert len(run_lint([path], rules=["acquire-release"])) == 2
+
+
+class TestCleanTree:
+    def test_core_is_clean(self):
+        findings = run_lint([os.path.join(ROOT, "src", "repro", "core")])
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+    def test_whole_src_is_clean(self):
+        findings = run_lint([os.path.join(ROOT, "src")])
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+    def test_core_carries_no_suppressions(self):
+        core = os.path.join(ROOT, "src", "repro", "core")
+        for fname in os.listdir(core):
+            if not fname.endswith(".py"):
+                continue
+            src = SourceFile(os.path.join(core, fname))
+            assert not src.ignores, \
+                f"{fname} uses lint: ignore[...] — fix the code instead"
+
+
+class TestCli:
+    def test_exit_codes(self):
+        assert lint_main([os.path.join(ROOT, "src")]) == 0
+        assert lint_main([FIXTURES]) == 1
+        assert lint_main(["--list"]) == 0
+
+    def test_module_invocation(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \
+            + env.get("PYTHONPATH", "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis.lint", "src/"],
+            cwd=ROOT, env=env, capture_output=True, text=True)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+class TestFramework:
+    def test_nested_defs_inherit_no_locks(self):
+        src = SourceFile("<mem>", text=(
+            "class C:\n"
+            "    def m(self):\n"
+            "        with self._lock:\n"
+            "            def later():\n"
+            "                return self._entries\n"
+            "            return later\n"))
+        # the nested def's body runs after the with exits
+        src.comment_guards["_entries"] = ("C", "_lock")
+        from repro.analysis.checkers import check_guarded_by
+        findings = check_guarded_by(src)
+        assert len(findings) == 1 and findings[0].line == 5
+
+    def test_requires_lock_annotation_satisfies_guard(self):
+        src = SourceFile("<mem>", text=(
+            "class C:\n"
+            "    def m(self):  # requires-lock: _lock\n"
+            "        return self._entries\n"))
+        src.comment_guards["_entries"] = ("C", "_lock")
+        from repro.analysis.checkers import check_guarded_by
+        assert check_guarded_by(src) == []
+
+    def test_ignore_directive_suppresses(self, tmp_path):
+        p = tmp_path / "mod.py"
+        p.write_text(
+            "def f(bufman):\n"
+            "    bufman.stats.hits += 1  # lint: ignore[stats-discipline]\n")
+        assert run_lint([str(p)]) == []
+
+    def test_in_core_scoping(self):
+        assert in_core("src/repro/core/spill.py")
+        assert in_core("tests/lint_fixtures/bad_stats.py")
+        assert not in_core("src/repro/models/transformer.py")

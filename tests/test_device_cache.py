@@ -437,3 +437,82 @@ def test_append_frees_dead_version_blocks(lineitem):
     db.append("lineitem", {c: np.asarray(v[:1]) for c, v in li.items()},
               types, scales)
     assert db.device_manager.resident_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# get_or_put under builder failure (multi-thread stress)
+# ---------------------------------------------------------------------------
+
+
+class TestGetOrPutBuilderFailure:
+    def test_stress_builder_raises_mid_upload(self):
+        """Hammer one key from many threads while the builder fails on a
+        schedule: failed builds must not poison attachers (they retry as
+        builders), must not leak pinned bytes, and the budget invariant
+        ``device_bytes_peak <= device_budget`` must hold throughout."""
+        import threading
+
+        block = np.ones(4096, dtype=np.float64)            # 32 KiB
+        budget = 4 * block.nbytes
+        dm = DeviceBufferManager(budget=budget)
+        key = ("#stress", "c", 0, 0)
+        counter = threading.Lock()
+        attempts = [0]
+
+        def build():
+            with counter:
+                attempts[0] += 1
+                n = attempts[0]
+            if n % 3 == 1:          # every third build dies mid-upload
+                raise RuntimeError("upload failed")
+            return block
+
+        successes, failures, errors = [], [], []
+
+        def worker():
+            try:
+                for i in range(40):
+                    try:
+                        arr = dm.get_or_put(key, build, pin=True)
+                        assert float(np.asarray(arr)[0]) == 1.0
+                        successes.append(1)
+                        assert dm.resident_bytes <= budget
+                        dm.unpin(key)
+                    except RuntimeError:
+                        failures.append(1)   # this thread was the builder
+                    if i % 10 == 9:
+                        dm.drop(key)         # force periodic rebuilds
+            except Exception as e:           # noqa: BLE001
+                errors.append(e)
+
+        ts = [threading.Thread(target=worker) for _ in range(6)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(120)
+        assert not errors, errors
+        assert successes, "no thread ever completed a get_or_put"
+        assert failures, "the failure schedule never fired"
+        assert dm.stats.device_bytes_peak <= budget
+        dm.drop(key)
+        # a failed build must leave nothing behind: no block, no pinned
+        # bytes, no residual accounting
+        assert dm.resident_bytes == 0
+        assert dm.resident_blocks == 0
+
+    def test_builder_failure_leaves_no_flight_slot(self):
+        """After a failed build the single-flight table is empty — the
+        next caller becomes a fresh builder, it does not attach to a dead
+        flight."""
+        dm = DeviceBufferManager(budget=1 << 20)
+        key = ("#once", "c", 0, 0)
+
+        def boom():
+            raise RuntimeError("no")
+
+        with pytest.raises(RuntimeError):
+            dm.get_or_put(key, boom, pin=True)
+        assert len(dm._flight._calls) == 0
+        assert dm.resident_bytes == 0
+        arr = dm.get_or_put(key, lambda: np.arange(8.0), pin=False)
+        assert np.asarray(arr).shape == (8,)

@@ -317,3 +317,51 @@ def test_context_manager_releases_lock_on_error(tmp_path):
             raise RuntimeError("boom")
     with startup(str(tmp_path / "db9")) as db2:
         assert db2.table("t").num_rows == 2
+
+
+def test_failed_startup_releases_directory_lock(tmp_path, monkeypatch):
+    """If Database.__init__ dies after acquire_lock (here: spill
+    reclamation raises), the flock must be released — otherwise the
+    directory is locked forever by a database that never existed."""
+    from repro.core.storage import Storage
+
+    path = tmp_path / "dblock"
+    _mkdb(path).shutdown()                     # create a valid directory
+
+    def boom(self):
+        raise OSError("disk error during reclaim")
+
+    monkeypatch.setattr(Storage, "reclaim_spill", boom)
+    with pytest.raises(OSError, match="disk error"):
+        startup(str(path))
+    monkeypatch.undo()
+
+    db = startup(str(path))                    # leaked flock would raise
+    assert db.table("t").num_rows == 100
+    db.shutdown()
+
+
+def test_failed_pid_note_releases_flock(tmp_path, monkeypatch):
+    """acquire_lock itself must not leak the locked fd when writing the
+    informational pid note fails."""
+    from repro.core.storage import Storage
+
+    path = tmp_path / "dbpid"
+    _mkdb(path).shutdown()
+
+    real_write = os.write
+
+    def bad_write(fd, data):
+        if data == str(os.getpid()).encode():
+            raise OSError("write failed")
+        return real_write(fd, data)
+
+    st = Storage(str(path))
+    monkeypatch.setattr(os, "write", bad_write)
+    with pytest.raises(OSError, match="write failed"):
+        st.acquire_lock()
+    monkeypatch.undo()
+    assert not st._locked
+
+    db = startup(str(path))                    # fd leak would hold the flock
+    db.shutdown()
