@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_spill   — out-of-core tier: spill codec ratio + prefetch overlap
   bench_device  — device tier: resident cache vs streamed vs host fallback
   bench_concurrent — serving layer: throughput/P99 vs client threads
+  bench_skipping — imprint data skipping: bytes moved vs selectivity
 """
 
 from __future__ import annotations
@@ -22,13 +23,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: "
                          "ingest,export,tpch,acs,kernels,spill,device,"
-                         "concurrent")
+                         "concurrent,skipping")
     ap.add_argument("--sf", type=float, default=0.01)
     ap.add_argument("--no-volcano", action="store_true")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
         "ingest", "export", "tpch", "acs", "kernels", "spill", "device",
-        "concurrent"}
+        "concurrent", "skipping"}
 
     print("name,us_per_call,derived")
     rows: list[str] = []
@@ -62,6 +63,10 @@ def main() -> None:
         _flush(rows)
     if "concurrent" in which:
         from .bench_concurrent import run as r
+        rows += r()
+        _flush(rows)
+    if "skipping" in which:
+        from .bench_skipping import run as r
         rows += r()
         _flush(rows)
 

@@ -261,6 +261,12 @@ class BufferStats:
     admission_waits: int = 0     # admissions that queued for budget room
     shared_scan_attaches: int = 0  # block requests served by another
                                    # query's in-flight build/upload
+    # imprint-driven data skipping (physplan.SkipSet): blocks the zone maps
+    # proved non-qualifying, and the bytes each tier never moved for them
+    blocks_skipped: int = 0        # imprint blocks never read/uploaded
+    bytes_skipped_h2d: int = 0     # host→device bytes skipped batches held
+    bytes_skipped_spill: int = 0   # column bytes kept out of scan→filter→
+                                   # partition streams (logical estimate)
 
     @property
     def bytes_spilled_compressed(self) -> int:

@@ -16,11 +16,10 @@ from typing import Any, Optional
 import numpy as np
 
 from .column import Column
-from .expression import (BinOp, Col, DateLit, EvalContext, Expr, ExprResult,
-                         Lit)
+from .expression import Col, EvalContext, ExprResult
 from .mal import Instr, MALProgram
 from .optimizer import split_conjuncts
-from .physplan import TierPolicy
+from .physplan import TierPolicy, _simple_range
 from .relalg import (AggregateNode, FilterNode, JoinNode, LimitNode,
                      OrderByNode, PlanNode, ProjectNode, ScanNode)
 from .types import DBType, NULL_SENTINEL, STORAGE_DTYPE, is_float
@@ -505,6 +504,12 @@ class ExecStats:
                                         # in-flight build/upload
     observed_group_card: Optional[int] = None  # dense group count this
                                         # query's aggregate actually saw
+    # imprint-driven data skipping (physplan.SkipSet): per-query deltas of
+    # the shared BufferStats counters, same best-effort caveat as above
+    blocks_skipped: int = 0             # imprint blocks never read/uploaded
+    bytes_skipped_h2d: int = 0          # host→device bytes skipping avoided
+    bytes_skipped_spill: int = 0        # column bytes kept out of the
+                                        # scan→filter→partition streams
 
 
 # Per-query deltas of the database-lifetime BufferStats counters: the field
@@ -515,6 +520,8 @@ SPILL_DELTA_FIELDS = ("bytes_spilled_raw", "bytes_spilled_compressed",
 DEVICE_DELTA_FIELDS = ("device_cache_hits", "device_prefetch_hits",
                        "device_evictions", "device_bytes_h2d",
                        "device_writebacks", "shared_scan_attaches")
+SKIP_DELTA_FIELDS = ("blocks_skipped", "bytes_skipped_h2d",
+                     "bytes_skipped_spill")
 
 
 def stats_base(buffer_stats, fields) -> tuple:
@@ -605,7 +612,7 @@ class Executor:
         regs: dict[str, Any] = {}
         result = None
         bm = self.bufman
-        fields = SPILL_DELTA_FIELDS + DEVICE_DELTA_FIELDS
+        fields = SPILL_DELTA_FIELDS + DEVICE_DELTA_FIELDS + SKIP_DELTA_FIELDS
         base = None if bm is None else stats_base(bm.stats, fields)
         for ins in prog.instrs:
             self.stats.instructions += 1
@@ -650,7 +657,8 @@ class Executor:
         p = ins.payload
         expr = p["expr"]
         # Tactical: imprint-accelerated range select on base columns.
-        if p.get("base_table") and self.db.index_manager is not None:
+        if p.get("base_table") and self.db.index_manager is not None \
+                and getattr(self.db, "data_skipping", True):
             rng = _simple_range(expr)
             if rng is not None:
                 cname, lo, hi, lo_strict, hi_strict = rng
@@ -660,6 +668,20 @@ class Executor:
                     mask, skipped = im
                     self.stats.index_hits += 1
                     self.stats.imprint_blocks_skipped += skipped
+                    if skipped and self.bufman is not None:
+                        # spill-side skipping is by construction: rows in
+                        # non-candidate blocks never get a True mask bit,
+                        # so they never reach a PartitionWriter stream.
+                        # Account the filter column's bytes in those blocks
+                        # (a logical estimate — they were never read).
+                        from .indexes import IMPRINT_BLOCK
+                        col = self.db.catalog.table(
+                            p["base_table"]).column(cname)
+                        rows = min(skipped * IMPRINT_BLOCK, len(col))
+                        self.bufman.bump(
+                            blocks_skipped=skipped,
+                            bytes_skipped_spill=rows
+                            * col.data.dtype.itemsize)
                     return mask
         r = expr.eval(self._ctx(p["binding"], regs))
         vals = np.asarray(r.values) != 0
@@ -879,38 +901,3 @@ class Executor:
             return np.memmap(path, dtype=want, mode="r")
         finally:
             self.bufman.release_file(path)
-
-
-def _simple_range(expr: Expr):
-    """Detect `col <cmp> literal` for the imprint fast path.
-
-    Returns (col, lo, hi, lo_strict, hi_strict) with +-inf open ends."""
-    if not isinstance(expr, BinOp) or expr.op not in ("<", "<=", ">", ">=", "="):
-        return None
-    l, r = expr.left, expr.right
-    op = expr.op
-    if isinstance(r, Col) and isinstance(l, (Lit, DateLit)):
-        l, r = r, l
-        op = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "=": "="}[op]
-    if not (isinstance(l, Col) and isinstance(r, (Lit, DateLit))):
-        return None
-    if isinstance(r, DateLit):
-        from .types import date_from_string
-        v = float(date_from_string(r.text))
-    else:
-        if isinstance(r.value, str) or r.value is None:
-            return None
-        v = float(r.value)
-    lo, hi = -np.inf, np.inf
-    lo_s = hi_s = False
-    if op == "=":
-        lo = hi = v
-    elif op == "<":
-        hi, hi_s = v, True
-    elif op == "<=":
-        hi = v
-    elif op == ">":
-        lo, lo_s = v, True
-    elif op == ">=":
-        lo = v
-    return l.name, lo, hi, lo_s, hi_s

@@ -144,8 +144,25 @@ class IndexManager:
             m &= (fv < hi) if hi_strict else (fv <= hi)
             if is_float(col.dbtype):
                 m &= ~np.isnan(fv)
+            else:
+                # NULL sentinel (INT64_MIN) satisfies open lower bounds like
+                # ``col < x`` (lo = -inf); SQL comparisons reject NULL.
+                from .types import NULL_SENTINEL
+                m &= v[s:e] != NULL_SENTINEL[col.dbtype]
             mask[s:e] = m
         return mask, skipped
+
+    def candidate_info(self, table: str, column: str, lo: float, hi: float,
+                       lo_strict: bool, hi_strict: bool):
+        """Planning-side zone-map probe: per-block candidate bitmap without
+        materializing a row mask.  Returns (cand, block_rows, n_rows) or
+        None when no imprint applies (small/VARCHAR/BOOL columns)."""
+        imp = self.get_imprint(table, column)
+        if imp is None:
+            return None
+        self.stats_hits += 1
+        cand = imp.candidate_blocks(lo, hi, lo_strict, hi_strict)
+        return cand, imp.block, imp.n_rows
 
     # -- order index ----------------------------------------------------------
     def create_order_index(self, table: str, column: str) -> np.ndarray:

@@ -398,7 +398,7 @@ class DistributedScanAgg:
     clean by definition."""
 
     def __init__(self, db, spec: ScanAggSpec, mesh: Mesh,
-                 batch_rows: Optional[int] = None):
+                 batch_rows: Optional[int] = None, skip_set=None):
         self.db = db
         self.spec = spec
         self.mesh = mesh
@@ -426,9 +426,23 @@ class DistributedScanAgg:
                                  batch_rows)
         self.batch_rows = geom.batch_rows
         self.n_batches = geom.n_batches
+        self.row_bytes = geom.row_bytes
         self.carry_nbytes = geom.carry_nbytes
         self.batch_bytes = geom.batch_bytes
         self.resident_bytes = geom.resident_bytes
+        # imprint-derived skip-set (physplan.SkipSet): intersected with the
+        # batch geometry so non-qualifying batches are never built, never
+        # prefetched and never device_put.  Execution-time re-validation:
+        # a skip-set derived against another table version (an append or
+        # DELETE raced the lowering) is discarded, not half-trusted.
+        if skip_set is not None and not skip_set.valid_for(self.table):
+            skip_set = None
+        self.skip_set = skip_set
+        m = self.batch_rows
+        self.live_batches = [
+            b for b in range(self.n_batches)
+            if skip_set is None or skip_set.batch_qualifies(
+                b * m, min(self.n_rows, b * m + m))]
         self.meta = {}
         for c in spec.columns:
             col = self.table.column(c)
@@ -526,7 +540,27 @@ class DistributedScanAgg:
         try:
             carry = devman.adopt(carry_key, init_fn(),
                                  nbytes=self.carry_nbytes, dirty=True)
-            for b in range(self.n_batches):
+            live = self.live_batches
+            if len(live) < self.n_batches:
+                # a skipped batch contributes exactly the carry-combine
+                # identity (+0 / +inf / -inf): not running its step leaves
+                # the carry bit-identical to running it.  Account what the
+                # zone maps saved: every block of every skipped batch would
+                # have been padded to batch_rows and uploaded.
+                blk = self.skip_set.block
+                live_set = set(live)
+                skipped_blocks = 0
+                for b in range(self.n_batches):
+                    if b in live_set:
+                        continue
+                    s = b * self.batch_rows
+                    e = min(self.n_rows, s + self.batch_rows)
+                    skipped_blocks += -(-(e - s) // blk)
+                devman.bump(
+                    blocks_skipped=skipped_blocks,
+                    bytes_skipped_h2d=(self.n_batches - len(live))
+                    * self.batch_rows * self.row_bytes)
+            for i, b in enumerate(live):
                 arrs = []
                 batch_keys = []
                 for key, build in self._builders(b):
@@ -551,8 +585,9 @@ class DistributedScanAgg:
                     carry = devman.put(carry_key, host, sharding=rep_sh,
                                        pin=False, dirty=True)
                 devman.pin(carry_key)
-                if b + 1 < self.n_batches:
-                    self._issue_prefetch(b + 1, prefetched, query_keys, sh)
+                if i + 1 < len(live):
+                    self._issue_prefetch(live[i + 1], prefetched,
+                                         query_keys, sh)
                 carry = step(carry, *arrs)              # async dispatch
                 devman.unpin(carry_key)
                 devman.adopt(carry_key, carry, nbytes=self.carry_nbytes,
@@ -650,14 +685,17 @@ class ParallelExecutor(Executor):
         try:
             agg = DistributedScanAgg(
                 self.db, spec, self._default_mesh(),
-                batch_rows=getattr(self.db, "device_batch_rows", None))
+                batch_rows=getattr(self.db, "device_batch_rows", None),
+                skip_set=phys.core_skip_set())
         except Exception:
             return None
         tier = "resident" if phys.agg_tier == TIER_DEVICE_RESIDENT \
             else "streamed"
-        from .executor import DEVICE_DELTA_FIELDS, stats_base
+        from .executor import (DEVICE_DELTA_FIELDS, SKIP_DELTA_FIELDS,
+                               stats_base)
+        fields = DEVICE_DELTA_FIELDS + SKIP_DELTA_FIELDS
         dm = agg.devman.stats
-        base = stats_base(dm, DEVICE_DELTA_FIELDS)
+        base = stats_base(dm, fields)
         try:
             out = agg.run(tier)
         except Exception:
@@ -665,7 +703,7 @@ class ParallelExecutor(Executor):
         result = self._assemble(spec, out, table)
         # close the device-counter window BEFORE the suffix runs (its host
         # program threads the same delta fields through run_program)...
-        end = stats_base(dm, DEVICE_DELTA_FIELDS)
+        end = stats_base(dm, fields)
         if phys.suffix_plan is not None:
             try:
                 result = self._run_suffix(phys.suffix_plan, result)
@@ -676,7 +714,7 @@ class ParallelExecutor(Executor):
         # device_tier / distributed_hits must describe the result returned
         self.distributed_hits += 1
         self.stats.device_tier = tier
-        for f, b, e in zip(DEVICE_DELTA_FIELDS, base, end):
+        for f, b, e in zip(fields, base, end):
             setattr(self.stats, f, getattr(self.stats, f) + e - b)
         # lifetime gauge, reported only by queries that ran on the device
         # tier (host-tier queries keep 0 alongside device_tier == "")

@@ -40,12 +40,12 @@ ad-hoc routing fork.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import numpy as np
 
-from .expression import Col, Expr
+from .expression import BinOp, Col, DateLit, Expr, Lit
 from .optimizer import estimate_bytes, estimate_rows, optimize, \
     split_conjuncts
 from .relalg import (AggregateNode, AggSpec, FilterNode, JoinNode, LimitNode,
@@ -323,6 +323,149 @@ def choose_device_tier(resident_bytes: float, batch_bytes: float,
 
 
 # ---------------------------------------------------------------------------
+# imprint-driven data skipping: plan-time skip-sets (paper §3.1)
+# ---------------------------------------------------------------------------
+
+
+def _simple_range(expr: Expr):
+    """Detect `col <cmp> literal` for the imprint fast path.
+
+    Returns (col, lo, hi, lo_strict, hi_strict) with +-inf open ends."""
+    if not isinstance(expr, BinOp) \
+            or expr.op not in ("<", "<=", ">", ">=", "="):
+        return None
+    l, r = expr.left, expr.right
+    op = expr.op
+    if isinstance(r, Col) and isinstance(l, (Lit, DateLit)):
+        l, r = r, l
+        op = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "=": "="}[op]
+    if not (isinstance(l, Col) and isinstance(r, (Lit, DateLit))):
+        return None
+    if isinstance(r, DateLit):
+        from .types import date_from_string
+        v = float(date_from_string(r.text))
+    else:
+        if isinstance(r.value, str) or r.value is None:
+            return None
+        v = float(r.value)
+    lo, hi = -np.inf, np.inf
+    lo_s = hi_s = False
+    if op == "=":
+        lo = hi = v
+    elif op == "<":
+        hi, hi_s = v, True
+    elif op == "<=":
+        hi = v
+    elif op == ">":
+        lo, lo_s = v, True
+    elif op == ">=":
+        lo = v
+    return l.name, lo, hi, lo_s, hi_s
+
+
+@dataclass
+class SkipSet:
+    """Per-scan block-qualification bitmap derived from imprints at plan
+    time.
+
+    ``cand[b]`` is True when imprint block ``b`` *may* contain rows
+    satisfying every simple-range filter conjunct on the scan — the AND of
+    each conjunct's zone-map candidate bitmap, so it is a sound superset of
+    the qualifying blocks (a block is dropped only when some conjunct is
+    provably unsatisfiable there).  The skip-set is advisory: every tier
+    still evaluates the full predicate on the blocks it does read.
+
+    Skip-sets are derived against one table version and re-validated with
+    ``valid_for`` at execution time; cache keys carry table versions too,
+    so a stale bitmap is never consumed."""
+    table: str
+    version: int
+    block: int                    # rows per imprint block
+    n_rows: int
+    cand: np.ndarray              # (n_blocks,) bool candidate bitmap
+    columns: tuple                # filter columns the bitmap derives from
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.cand)
+
+    @property
+    def n_skipped(self) -> int:
+        return int((~self.cand).sum())
+
+    def valid_for(self, table) -> bool:
+        return (getattr(table, "version", None) == self.version
+                and table.num_rows == self.n_rows)
+
+    def batch_qualifies(self, s: int, e: int) -> bool:
+        """May the row range [s, e) contain a qualifying row?"""
+        if e <= s:
+            return False
+        return bool(self.cand[s // self.block:
+                              (e - 1) // self.block + 1].any())
+
+    def candidate_ranges(self):
+        """Merged (start_row, end_row) ranges of candidate blocks."""
+        out: list[tuple[int, int]] = []
+        for b in np.nonzero(self.cand)[0]:
+            s = int(b) * self.block
+            e = min(self.n_rows, s + self.block)
+            if out and out[-1][1] == s:
+                out[-1] = (out[-1][0], e)
+            else:
+                out.append((s, e))
+        return out
+
+
+def derive_skip_sets(plan: PlanNode, db) -> dict:
+    """Walk ``Filter(Scan)`` shapes over base tables and intersect each
+    simple-range conjunct's imprint candidate bitmap into one ``SkipSet``
+    per scan, keyed by ``id(scan_node)`` (plan-cache copies are shallow, so
+    the normalized plan objects — and hence the keys — are shared).
+
+    Gated on ``db.data_skipping`` (the forced-off knob the differential
+    harness flips) and on the database having an ``IndexManager``; scans
+    with no applicable imprint simply get no entry."""
+    out: dict[int, SkipSet] = {}
+    im = getattr(db, "index_manager", None)
+    if im is None or not getattr(db, "data_skipping", True):
+        return out
+
+    def visit(node: PlanNode) -> None:
+        if isinstance(node, FilterNode) and isinstance(node.child, ScanNode):
+            scan = node.child
+            try:
+                table = db.catalog.table(scan.table)
+            except Exception:
+                table = None
+            if table is not None:
+                cand = None
+                block = 0
+                cols: list[str] = []
+                for conj in split_conjuncts(node.predicate):
+                    rng = _simple_range(conj)
+                    if rng is None:
+                        continue
+                    cname, lo, hi, lo_s, hi_s = rng
+                    info = im.candidate_info(scan.table, cname, lo, hi,
+                                             lo_s, hi_s)
+                    if info is None:
+                        continue
+                    c, block, _ = info
+                    cand = c.copy() if cand is None else (cand & c)
+                    cols.append(cname)
+                if cand is not None:
+                    out[id(scan)] = SkipSet(
+                        scan.table, table.version, block, table.num_rows,
+                        cand, tuple(cols))
+        for c in node.children:
+            visit(c)
+
+    visit(plan)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # normalization: SQL and builder plans converge to identical shapes
 # ---------------------------------------------------------------------------
 
@@ -566,6 +709,9 @@ class PhysicalPlan:
     # level-1 row estimate.  Only set when the plan has exactly one
     # aggregate (otherwise the observation is ambiguous).
     group_card_hint: Optional[int] = None
+    # imprint-derived skip-sets keyed by id(scan node) — shared by shallow
+    # plan-cache copies because the normalized plan objects are shared
+    skip_sets: dict = field(default_factory=dict)
     _reservations: Optional[tuple] = None   # cached total_reservations()
 
     # -- queries --------------------------------------------------------------
@@ -607,6 +753,25 @@ class PhysicalPlan:
                 device = min(device, db)
             self._reservations = (int(host), int(device))
         return self._reservations
+
+    def skip_set_for(self, node: PlanNode) -> Optional[SkipSet]:
+        return self.skip_sets.get(id(node))
+
+    def core_skip_set(self) -> Optional[SkipSet]:
+        """The skip-set attached to the scan-agg core's base scan, if any
+        (what ``DistributedScanAgg`` intersects with its batch geometry)."""
+        node: Optional[PlanNode] = self.agg_core
+        while node is not None:
+            if isinstance(node, ScanNode):
+                return self.skip_sets.get(id(node))
+            node = node.children[0] if node.children else None
+        return None
+
+    def _skip_note(self, node: PlanNode) -> str:
+        ss = self.skip_sets.get(id(node))
+        if ss is None:
+            return ""
+        return f"(skip: {ss.n_skipped}/{ss.n_blocks} blocks)"
 
     # -- annotation -----------------------------------------------------------
     def annotate(self) -> PhysicalOp:
@@ -668,6 +833,9 @@ class PhysicalPlan:
             if getattr(self, "_demote_reason", None):
                 extra += f" ({self._demote_reason})"
             detail = f"{detail} {extra}".strip()
+        note = self._skip_note(node)
+        if note:
+            detail = f"{detail} {note}".strip()
         return PhysicalOp(node, tier, est, reserve, detail, children)
 
     def _annotate_core(self, node: PlanNode) -> PhysicalOp:
@@ -683,8 +851,12 @@ class PhysicalPlan:
         detail += f" batches={g.n_batches}x{g.batch_rows}rows"
 
         def fused(n: PlanNode) -> PhysicalOp:
+            d = "(fused)"
+            note = self._skip_note(n)
+            if note:
+                d = f"{d} {note}"
             return PhysicalOp(
-                n, self.agg_tier, 0, 0, "(fused)",
+                n, self.agg_tier, 0, 0, d,
                 tuple(fused(c) for c in n.children))
 
         return PhysicalOp(node, self.agg_tier, int(est), int(reserve),
@@ -751,6 +923,10 @@ def plan_physical(plan: PlanNode, db, *, do_optimize: bool = True,
                      for n in _walk_nodes(plan))
         if n_aggs == 1:
             phys.group_card_hint = int(group_card_hint)
+    # imprint-driven data skipping (paper §3.1): every tier — device batch
+    # streams, host morsels, volcano rows — consumes the same plan-time
+    # skip-sets, so derivation happens before the host-only early return
+    phys.skip_sets = derive_skip_sets(plan, db)
     if not distributed:
         # the sequential host path never consumes the scan-agg spec, and
         # matching is not free (dense-domain detection scans each group

@@ -241,7 +241,14 @@ class PlanCache:
                 None if bm is None else bm.budget,
                 None if dm is None else dm.budget,
                 getattr(db, "device_batch_rows", None),
-                mesh_key, promoted)
+                mesh_key, promoted,
+                # imprint-driven skipping: cached plans carry skip-sets, so
+                # the forced-off knob must never be served a skipping plan
+                # (and vice versa).  Staleness is impossible without this
+                # last guard too — skip-sets bind a table version and the
+                # ``versions`` component already keys on it — but the knob
+                # changes the *shape* of the plan's annotations.
+                bool(getattr(db, "data_skipping", True)))
 
     @staticmethod
     def shape_key(plan: PlanNode, distributed: bool) -> tuple:

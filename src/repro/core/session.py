@@ -74,7 +74,8 @@ class Database:
                  memory_budget: Optional[int] = None,
                  spill_codec: str = "for", spill_prefetch: bool = True,
                  device_budget: Optional[int] = None,
-                 device_batch_rows: Optional[int] = None):
+                 device_batch_rows: Optional[int] = None,
+                 data_skipping: bool = True):
         from .buffers import BufferManager
         from .device_cache import DeviceBufferManager
         self.path = path
@@ -83,6 +84,11 @@ class Database:
         self.spill_prefetch = spill_prefetch
         self.device_budget = device_budget
         self.device_batch_rows = device_batch_rows
+        # imprint-driven data skipping (paper §3.1): when True the planner
+        # attaches zone-map skip-sets to scans and every tier prunes
+        # non-qualifying blocks; False forces full scans (the differential
+        # harness's control arm).  Results are bit-identical either way.
+        self.data_skipping = data_skipping
         self.catalog = Catalog()
         self.txn_manager = TransactionManager()
         self.index_manager = IndexManager(self)
@@ -322,7 +328,8 @@ def startup(path: Optional[str] = None,
             spill_codec: str = "for",
             spill_prefetch: bool = True,
             device_budget: Optional[int] = None,
-            device_batch_rows: Optional[int] = None) -> Database:
+            device_batch_rows: Optional[int] = None,
+            data_skipping: bool = True) -> Database:
     """monetdb_startup: persistent when ``path`` given, else in-memory.
 
     ``memory_budget`` (bytes, default unlimited) enables out-of-core
@@ -351,6 +358,18 @@ def startup(path: Optional[str] = None,
     fixes the streaming batch size (default 65536; the batch decomposition
     — not the budget — determines floating-point summation order).
 
+    ``data_skipping`` (default True) wires the paper's §3.1 column imprints
+    into every tier: the physical planner derives a per-scan skip-set (a
+    block-qualification bitmap from per-2048-row zone maps) for simple
+    range filters, and the device tier never uploads, the spill tier never
+    spills, and the host/volcano paths never materialize a block the zone
+    maps prove non-qualifying.  Observability: ``blocks_skipped`` /
+    ``bytes_skipped_h2d`` / ``bytes_skipped_spill`` in ``BufferStats`` and
+    ``ExecStats``, plus a ``(skip: k/N blocks)`` annotation in
+    ``Query.explain(physical=True)``.  Skipping is sound by construction
+    (bitmaps are supersets of qualifying blocks, re-validated against table
+    versions at execution), so results are bit-identical with it off.
+
     VARCHAR keys spill too, even when the join sides were dictionary-encoded
     against different heaps: small dictionaries merge into one shared heap
     (codes recoded while spooling), oversized ones partition on decoded
@@ -366,7 +385,8 @@ def startup(path: Optional[str] = None,
                         spill_codec=spill_codec,
                         spill_prefetch=spill_prefetch,
                         device_budget=device_budget,
-                        device_batch_rows=device_batch_rows)
+                        device_batch_rows=device_batch_rows,
+                        data_skipping=data_skipping)
     ap = os.path.realpath(path)      # symlink aliases are the same database
     with _open_lock:
         if ap in _open_dirs and not _open_dirs[ap]._shutdown:
@@ -375,7 +395,8 @@ def startup(path: Optional[str] = None,
                       spill_codec=spill_codec,
                       spill_prefetch=spill_prefetch,
                       device_budget=device_budget,
-                      device_batch_rows=device_batch_rows)
+                      device_batch_rows=device_batch_rows,
+                      data_skipping=data_skipping)
         _open_dirs[ap] = db
     return db
 
@@ -469,7 +490,11 @@ class Connection:
                                spill_codec=db.spill_codec,
                                spill_prefetch=db.spill_prefetch,
                                device_budget=db.device_budget,
-                               device_batch_rows=db.device_batch_rows)
+                               device_batch_rows=db.device_batch_rows,
+                               data_skipping=db.data_skipping)
+            # a FRESH IndexManager over the snapshot catalog: skip-sets and
+            # imprints derive from the snapshot's own (uncommitted) tables,
+            # never from the committed table sharing the version number
             snap_db.catalog.tables = self._txn.tables()
             snap_db.index_manager = IndexManager(snap_db)
             snap_db.buffer_manager = db.buffer_manager   # shared accounting

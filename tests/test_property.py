@@ -115,6 +115,100 @@ def test_imprint_never_misses(xs, lo, hi):
     np.testing.assert_array_equal(mask, exact)
 
 
+# ---------------------------------------------------------------------------
+# imprint candidate_blocks: superset soundness over adversarial data shapes
+# ---------------------------------------------------------------------------
+
+_IMPRINT_ROWS = 3 * 2048        # 3 full IMPRINT_BLOCKs (>= AUTO_ORDER_MIN)
+
+
+@st.composite
+def imprint_case(draw):
+    """(values, lo, hi, lo_strict, hi_strict) over data shapes that stress
+    the zone maps: clustered (sorted — the paying case), uniform,
+    constant (degenerate histogram range), and NaN-sprinkled; bounds are
+    either arbitrary or snapped near drawn data values (bin-edge
+    collisions)."""
+    shape = draw(st.sampled_from(["clustered", "uniform", "constant",
+                                  "nans"]))
+    base = draw(st.lists(st.floats(-1e4, 1e4, allow_nan=False),
+                         min_size=2, max_size=50))
+    reps = -(-_IMPRINT_ROWS // len(base))
+    vals = np.asarray((base * reps)[:_IMPRINT_ROWS], dtype=np.float64)
+    if shape == "clustered":
+        vals = np.sort(vals)
+    elif shape == "constant":
+        vals = np.full(_IMPRINT_ROWS, base[0])
+    elif shape == "nans":
+        for i in draw(st.lists(st.integers(0, _IMPRINT_ROWS - 1),
+                               max_size=30)):
+            vals[i] = np.nan
+    bound = st.one_of(st.floats(-1e4, 1e4, allow_nan=False),
+                      st.sampled_from(base))
+    lo, hi = sorted((draw(bound), draw(bound)))
+    return vals, lo, hi, draw(st.booleans()), draw(st.booleans())
+
+
+@given(imprint_case())
+def test_candidate_blocks_is_superset(case):
+    """Soundness: every block holding a qualifying (non-NULL) row is a
+    candidate — skipping may over-approximate, never under-approximate."""
+    from repro.core.indexes import IMPRINT_BLOCK
+    vals, lo, hi, lo_s, hi_s = case
+    db = mkdb(x=vals)
+    info = db.index_manager.candidate_info("t", "x", lo, hi, lo_s, hi_s)
+    assert info is not None
+    cand, block, n_rows = info
+    assert block == IMPRINT_BLOCK and n_rows == len(vals)
+    ok = (vals > lo) if lo_s else (vals >= lo)
+    ok &= (vals < hi) if hi_s else (vals <= hi)
+    ok &= ~np.isnan(vals)
+    for b in range(len(cand)):
+        if ok[b * block:(b + 1) * block].any():
+            assert cand[b], f"block {b} holds qualifying rows but was skipped"
+
+
+@given(imprint_case())
+def test_candidate_blocks_matches_bin_edges(case):
+    """Bounds snapped exactly onto the imprint's own histogram bin edges
+    (the clip/floor boundary) must stay sound too."""
+    vals, _, _, lo_s, hi_s = case
+    db = mkdb(x=vals)
+    im = db.index_manager.get_imprint("t", "x")
+    assert im is not None
+    if not np.isfinite(im.lo) or not np.isfinite(im.hi) or im.hi <= im.lo:
+        return
+    edges = im.lo + np.arange(17) * (im.hi - im.lo) / 16
+    for lo, hi in ((edges[3], edges[5]), (edges[0], edges[0]),
+                   (edges[15], edges[16])):
+        cand = im.candidate_blocks(lo, hi, lo_s, hi_s)
+        ok = (vals > lo) if lo_s else (vals >= lo)
+        ok &= (vals < hi) if hi_s else (vals <= hi)
+        ok &= ~np.isnan(vals)
+        for b in range(len(cand)):
+            if ok[b * im.block:(b + 1) * im.block].any():
+                assert cand[b], (lo, hi, b)
+
+
+@given(st.lists(st.one_of(st.none(), st.integers(-1000, 1000)),
+                min_size=4, max_size=60))
+def test_candidate_blocks_int_nulls_sound(ks):
+    """Integer columns code NULL as INT64_MIN: sentinel rows must neither
+    force extra candidates via poisoned mins nor count as qualifying."""
+    assume(any(k is not None for k in ks))
+    reps = -(-_IMPRINT_ROWS // len(ks))
+    col = (ks * reps)[:_IMPRINT_ROWS]
+    db = mkdb(x=col)
+    info = db.index_manager.candidate_info("t", "x", -500.0, 500.0,
+                                           False, False)
+    assert info is not None
+    cand, block, _ = info
+    ok = np.asarray([v is not None and -500 <= v <= 500 for v in col])
+    for b in range(len(cand)):
+        if ok[b * block:(b + 1) * block].any():
+            assert cand[b]
+
+
 @given(st.lists(st.sampled_from(["aa", "ab", "ba", "c", ""]),
                 min_size=1, max_size=100),
        st.sampled_from(["a%", "%b", "%a%", "c", "_a", "%"]))

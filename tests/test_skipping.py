@@ -1,0 +1,465 @@
+"""Imprint-driven data skipping (physplan.derive_skip_sets + every consumer).
+
+Differential skip-harness contracts:
+
+* **Bit-identity**: selective-filter variants of TPC-H Q1/Q6 over a
+  shipdate-sorted lineitem-like table at selectivities {~0%, 1%, 50%,
+  100%} x host budgets {unlimited, 1 MiB, 64 KiB} x skipping {on,
+  forced-off} are *bit-identical* — skipping is a pure optimization.
+* **Counters**: ``blocks_skipped > 0`` whenever the filter is selective
+  (the table is sorted so zone maps actually prune), ``== 0`` at 100%
+  selectivity and always on a ``data_skipping=False`` database.
+* **Fences**: monkeypatch fences prove non-qualifying blocks are never
+  uploaded (``DeviceBufferManager.get_or_put``), never row-materialized
+  by the volcano baseline (``_eval_row``), and never reach predicate
+  evaluation on the host path (``BinOp.eval``).
+* **Staleness**: appends/DELETE/DROP invalidate imprints and any cached
+  plan's skip-set (version-keyed, like tests/test_serving.py); a
+  txn-snapshot query must not see the committed table's skip-set.
+* **NULL soundness**: integer NULL sentinels never satisfy open bounds
+  (the ``imprint_mask`` regression) — the hypothesis superset property
+  lives in tests/test_property.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Col, startup
+from repro.core.expression import Lit
+from repro.core.indexes import IMPRINT_BLOCK
+from repro.core.physplan import derive_skip_sets, plan_physical
+from repro.core.types import DBType
+
+N_BLOCKS = 6
+N = N_BLOCKS * IMPRINT_BLOCK
+BUDGET_MATRIX = (None, 1 << 20, 64 << 10)
+SELECTIVITIES = ("empty", "one_pct", "half", "all")
+
+
+def _dataset():
+    """Lineitem-like, SORTED by the filter column (tpch's l_shipdate is
+    uniform within each order window, so an unsorted table would zone-map
+    to all-candidates; the paper's skipping argument assumes clustering)."""
+    rng = np.random.default_rng(5)
+    ship = np.sort(rng.integers(8000, 9200, N)).astype(np.int32)
+    flags = np.asarray(["A", "N", "R"], dtype=object)
+    status = np.asarray(["F", "O"], dtype=object)
+    return {
+        "ship": ship,
+        "qty": rng.integers(1, 51, N).astype(np.float64),
+        "price": np.round(rng.uniform(900, 105000, N), 2),
+        "disc": np.round(rng.uniform(0.0, 0.10, N), 2),
+        "tax": np.round(rng.uniform(0.0, 0.08, N), 2),
+        "flag": flags[rng.integers(0, 3, N)],
+        "status": status[rng.integers(0, 2, N)],
+    }
+
+
+def _cutoffs(ship):
+    return {
+        "empty": int(ship.min()) - 1,        # ~0%: below every block
+        "one_pct": int(np.quantile(ship, 0.01)),
+        "half": int(np.quantile(ship, 0.50)),
+        "all": int(ship.max()) + 1,          # 100%: nothing prunable
+    }
+
+
+_DATA = _dataset()
+_CUT = _cutoffs(_DATA["ship"])
+
+
+def _mkdb(**kw):
+    db = startup(**kw)
+    db.create_table("li", _DATA, types={"ship": DBType.DATE})
+    return db
+
+
+def _q1(db, cut):
+    """TPC-H Q1 shape: selective shipdate filter + grouped aggregate."""
+    return (db.scan("li").filter(Col("ship") <= Lit(cut))
+            .group_by("flag", "status")
+            .agg(sq=("sum", "qty"), sp=("sum", "price"),
+                 ad=("avg", "disc"), n=("count", None))
+            .order_by("flag", "status"))
+
+
+def _q6(db, cut):
+    """TPC-H Q6 shape: conjunctive range filter + scalar aggregate (the
+    ship conjunct prunes; disc/qty are unsorted so their imprints
+    intersect to all-candidates — the AND path is still exercised)."""
+    return (db.scan("li")
+            .filter((Col("ship") <= Lit(cut)) & (Col("disc") <= Lit(0.07))
+                    & (Col("qty") < Lit(24.0)))
+            .agg(rev=("sum", Col("price") * Col("disc")),
+                 n=("count", None)))
+
+
+QUERIES = {"q1": _q1, "q6": _q6}
+
+
+def _assert_bits(a: dict, b: dict, ctx: str):
+    assert set(a) == set(b), ctx
+    for c in a:
+        av, bv = np.asarray(a[c]), np.asarray(b[c])
+        if av.dtype == object or bv.dtype == object:
+            assert list(map(str, av)) == list(map(str, bv)), (ctx, c)
+        else:
+            np.testing.assert_array_equal(av, bv, err_msg=f"{ctx} col={c}")
+
+
+# ---------------------------------------------------------------------------
+# differential harness: host path across the budget matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hostdbs():
+    out = {}
+    for budget in BUDGET_MATRIX:
+        for skipping in (True, False):
+            out[budget, skipping] = _mkdb(memory_budget=budget,
+                                          data_skipping=skipping)
+    yield out
+    for db in out.values():
+        db.shutdown()
+
+
+@pytest.mark.parametrize("sel", SELECTIVITIES)
+@pytest.mark.parametrize("budget", BUDGET_MATRIX)
+@pytest.mark.parametrize("qname", list(QUERIES))
+def test_skip_harness_bit_identical(hostdbs, qname, budget, sel):
+    """Skipping on vs forced-off is bit-identical in every matrix cell,
+    and the skip counters fire exactly when the filter is selective."""
+    cut = _CUT[sel]
+    on, off = hostdbs[budget, True], hostdbs[budget, False]
+    r_on = QUERIES[qname](on, cut).execute().to_pydict()
+    r_off = QUERIES[qname](off, cut).execute().to_pydict()
+    _assert_bits(r_on, r_off, f"{qname} sel={sel} budget={budget}")
+    assert off.last_stats.blocks_skipped == 0
+    if sel == "all":
+        assert on.last_stats.blocks_skipped == 0
+    else:
+        assert on.last_stats.blocks_skipped > 0, (qname, sel, budget)
+        assert on.last_stats.bytes_skipped_spill > 0
+
+
+def test_skip_counts_track_selectivity(hostdbs):
+    """More selective cutoffs skip at least as many blocks (sorted data);
+    ~0% skips the whole table."""
+    db = hostdbs[None, True]
+    skipped = {}
+    for sel in SELECTIVITIES:
+        _q1(db, _CUT[sel]).execute()
+        skipped[sel] = db.last_stats.blocks_skipped
+    assert skipped["empty"] == N_BLOCKS
+    assert skipped["empty"] >= skipped["one_pct"] >= skipped["half"] \
+        >= skipped["all"] == 0
+
+
+def test_explain_annotates_skip_sets(hostdbs):
+    """Query.explain(physical=True) renders the planning-time skip note on
+    the scan; forced-off plans carry no note."""
+    on, off = hostdbs[None, True], hostdbs[None, False]
+    txt = _q1(on, _CUT["one_pct"]).explain(physical=True)
+    assert "(skip: " in txt and "/6 blocks)" in txt
+    assert "(skip: " not in _q1(off, _CUT["one_pct"]).explain(physical=True)
+    # the derived bitmap matches what EXPLAIN printed
+    phys = plan_physical(_q1(on, _CUT["empty"]).plan, on)
+    assert any(ss.n_skipped == N_BLOCKS and ss.n_blocks == N_BLOCKS
+               for ss in phys.skip_sets.values())
+
+
+def test_host_fence_skipped_blocks_never_evaluated(monkeypatch):
+    """At ~0% selectivity every block is pruned at the zone-map level: the
+    filter predicate must never reach expression evaluation.  The fence
+    poisons BinOp.eval, so any fallback to a real scan fails loudly."""
+    from repro.core.expression import BinOp
+    db = _mkdb()
+    q = (db.scan("li").filter(Col("ship") <= Lit(_CUT["empty"]))
+         .agg(n=("count", None), s=("sum", "price")))
+
+    def _fence(self, ctx):
+        raise AssertionError("predicate evaluated — imprint skip missed")
+
+    monkeypatch.setattr(BinOp, "eval", _fence)
+    got = q.execute().to_pydict()
+    assert int(np.asarray(got["n"])[0]) == 0
+    assert db.last_stats.blocks_skipped == N_BLOCKS
+    db.shutdown()
+
+
+def test_volcano_fence_skipped_rows_never_materialized(monkeypatch):
+    """The row-store baseline consumes candidate_ranges(): with every
+    block pruned it must not materialize (or per-row evaluate) a single
+    tuple."""
+    from repro.core import volcano as vol
+    from repro.core.optimizer import optimize
+    db = _mkdb()
+    calls = []
+    real = vol._eval_row
+    monkeypatch.setattr(vol, "_eval_row",
+                        lambda e, row: calls.append(1) or real(e, row))
+    plan = optimize(_q1(db, _CUT["empty"]).plan, db.catalog)
+    rows = vol.VolcanoExecutor(db).execute(plan)
+    assert rows == []
+    assert calls == []
+    assert db.buffer_manager.stats.blocks_skipped == N_BLOCKS
+    db.shutdown()
+
+
+def test_volcano_matches_engine_with_skipping():
+    """Volcano over candidate ranges == columnar engine, partial
+    selectivity (the boundary block is a candidate but half-filtered)."""
+    from repro.core.optimizer import optimize
+    from repro.core.volcano import VolcanoExecutor
+    db = _mkdb()
+    q = _q1(db, _CUT["half"])
+    eng = q.execute().to_pydict()
+    rows = VolcanoExecutor(db).execute(optimize(q.plan, db.catalog))
+    vol = {k: [r[k] for r in rows] for k in eng}
+    for k in ("sq", "sp", "n"):
+        np.testing.assert_allclose(np.asarray(eng[k], dtype=float),
+                                   np.asarray(vol[k], dtype=float))
+    db.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# device tier: batches of non-qualifying blocks are never uploaded
+# ---------------------------------------------------------------------------
+
+
+def _mkdevdb(**kw):
+    return _mkdb(device_budget=64 << 20, device_batch_rows=4096, **kw)
+
+
+@pytest.mark.parametrize("sel", SELECTIVITIES)
+def test_device_bit_identical(sel):
+    """Cold device runs, skipping on vs forced-off: bit-identical, and the
+    h2d counters account every batch exactly once (uploaded or skipped)."""
+    on, off = _mkdevdb(), _mkdevdb(data_skipping=False)
+    try:
+        q = lambda d: (d.scan("li").filter(Col("ship") <= Lit(_CUT[sel]))
+                       .group_by("flag", "status")
+                       .agg(sq=("sum", "qty"), n=("count", None))
+                       .order_by("flag", "status"))
+        r_on = q(on).execute(distributed=True).to_pydict()
+        r_off = q(off).execute(distributed=True).to_pydict()
+        _assert_bits(r_on, r_off, f"device sel={sel}")
+        s_on, s_off = on.last_stats, off.last_stats
+        assert s_off.bytes_skipped_h2d == 0
+        if sel == "all":
+            assert s_on.bytes_skipped_h2d == 0
+            assert s_on.blocks_skipped == 0
+        else:
+            assert s_on.bytes_skipped_h2d > 0, sel
+            assert s_on.device_bytes_h2d < s_off.device_bytes_h2d
+        if sel == "empty":
+            assert s_on.blocks_skipped == N_BLOCKS
+            assert s_on.device_bytes_h2d == 0
+    finally:
+        on.shutdown()
+        off.shutdown()
+
+
+def test_device_fence_skipped_batches_never_uploaded(monkeypatch):
+    """Fence on the device block cache: with every block pruned, no
+    (table, column, version, shard) key for the scanned table may ever
+    reach get_or_put — uploads of skipped batches fail the test."""
+    from repro.core.device_cache import DeviceBufferManager
+    db = _mkdevdb()
+    try:
+        uploads = []
+        real = DeviceBufferManager.get_or_put
+
+        def spy(self, key, *a, **kw):
+            if key[0] == "li":
+                uploads.append(key)
+            return real(self, key, *a, **kw)
+
+        monkeypatch.setattr(DeviceBufferManager, "get_or_put", spy)
+        got = (db.scan("li").filter(Col("ship") <= Lit(_CUT["empty"]))
+               .group_by("flag", "status").agg(n=("count", None))
+               .execute(distributed=True).to_pydict())
+        assert list(got["n"]) == [] or all(v == 0 for v in got["n"])
+        assert uploads == []
+        assert db.last_stats.blocks_skipped == N_BLOCKS
+    finally:
+        db.shutdown()
+
+
+def test_device_partial_skip_uploads_only_live_batches(monkeypatch):
+    """1% selectivity with 4096-row batches: only the first batch
+    qualifies; the fence pins the uploaded batch indices to the live set
+    (shard component of the cache key carries the batch index)."""
+    from repro.core.device_cache import DeviceBufferManager
+    db = _mkdevdb()
+    try:
+        batches = set()
+        real = DeviceBufferManager.get_or_put
+
+        def spy(self, key, *a, **kw):
+            if key[0] == "li":
+                batches.add(key[3][2])
+            return real(self, key, *a, **kw)
+
+        monkeypatch.setattr(DeviceBufferManager, "get_or_put", spy)
+        (db.scan("li").filter(Col("ship") <= Lit(_CUT["one_pct"]))
+         .group_by("flag", "status").agg(n=("count", None))
+         .execute(distributed=True))
+        assert batches == {0}, batches
+    finally:
+        db.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# staleness: version-keyed skip-sets under append / DELETE / DROP / txn
+# ---------------------------------------------------------------------------
+
+
+def _count(db, cut):
+    return int(np.asarray(
+        db.scan("li").filter(Col("ship") <= Lit(cut))
+        .agg(n=("count", None)).execute().to_pydict()["n"])[0])
+
+
+class TestStaleness:
+    def test_append_invalidates_skip_sets(self):
+        """Appended qualifying rows land in a tail block the old bitmap
+        never covered: a stale skip-set would silently drop them."""
+        db = _mkdb()
+        cut = _CUT["one_pct"]
+        before = _count(db, cut)
+        assert db.last_stats.blocks_skipped > 0
+        assert len(db.plan_cache) == 1
+        extra = 64
+        db.append("li", {
+            "ship": np.full(extra, _CUT["empty"], dtype=np.int32),
+            "qty": np.ones(extra), "price": np.ones(extra),
+            "disc": np.zeros(extra), "tax": np.zeros(extra),
+            "flag": ["A"] * extra, "status": ["F"] * extra,
+        })
+        assert len(db.plan_cache) == 0   # explicit invalidation
+        assert _count(db, cut) == before + extra
+        db.shutdown()
+
+    def test_plan_cache_key_differs_on_version_and_flag(self):
+        """The cache key carries (table, version) AND the data_skipping
+        flag: neither an append nor a flag flip can serve a stale
+        skip-set even without explicit invalidation."""
+        from repro.core.serving import PlanCache
+        on, off = _mkdb(), _mkdb(data_skipping=False)
+        try:
+            q = _q1(on, _CUT["half"]).plan
+            k_on = PlanCache.key(on, q, do_optimize=True, distributed=False)
+            k_off = PlanCache.key(off, q, do_optimize=True,
+                                  distributed=False)
+            assert k_on != k_off
+            assert k_on[-1] is True and k_off[-1] is False
+            on.append("li", {k: v[:1] for k, v in _DATA.items()})
+            k_on2 = PlanCache.key(on, q, do_optimize=True, distributed=False)
+            assert k_on2 != k_on          # version component moved
+        finally:
+            on.shutdown()
+            off.shutdown()
+
+    def test_delete_invalidates_imprints(self):
+        db = _mkdb()
+        cut = _CUT["half"]
+        before = _count(db, cut)
+        db.delete("li", Col("ship") <= Lit(cut))
+        assert _count(db, cut) == 0
+        # and the inverse region is intact
+        assert _count(db, _CUT["all"]) == N - before
+        db.shutdown()
+
+    def test_drop_and_recreate_no_stale_skip_set(self):
+        db = _mkdb()
+        _count(db, _CUT["empty"])
+        db.drop_table("li")
+        # recreate with shifted values: a stale bitmap would skip all
+        shifted = dict(_DATA)
+        shifted["ship"] = (_DATA["ship"] - 5000).astype(np.int32)
+        db.create_table("li", shifted, types={"ship": DBType.DATE})
+        assert _count(db, _CUT["all"]) == N
+        db.shutdown()
+
+    def test_txn_snapshot_does_not_see_committed_skip_set(self):
+        """A transaction's snapshot database derives skip-sets from its
+        OWN IndexManager over snapshot tables: rows committed after
+        ``begin`` must stay invisible — a skip-set (or imprint) leaked
+        from the parent would disagree with the snapshot's row count."""
+        db = _mkdb()
+        cut = _CUT["one_pct"]
+        before = _count(db, cut)        # parent imprints + plan cache warm
+        con = db.connect()
+        con.begin()
+        n0 = con.query(
+            f"SELECT COUNT(*) AS n FROM li WHERE ship <= {cut}")
+        db.append("li", {k: (v[:32] if k != "ship" else
+                             np.full(32, cut - 1, dtype=np.int32))
+                         for k, v in _DATA.items()})
+        n1 = con.query(
+            f"SELECT COUNT(*) AS n FROM li WHERE ship <= {cut}")
+        con.rollback()
+        assert int(np.asarray(n0.to_pydict()["n"])[0]) == before
+        assert int(np.asarray(n1.to_pydict()["n"])[0]) == before
+        assert _count(db, cut) == before + 32    # committed view sees them
+        db.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# NULL-sentinel soundness (the imprint_mask regression)
+# ---------------------------------------------------------------------------
+
+
+def test_int_null_sentinel_never_satisfies_open_bounds():
+    """INT64 NULLs are sentinel-coded as INT64_MIN, which numerically
+    satisfies any ``col < x``: the imprint mask must still reject them
+    (SQL comparisons are NULL-rejecting).  Regression for the fix in
+    indexes.imprint_mask."""
+    db = startup()
+    vals = [None, 5, None, 10, 1, None] * 400     # > AUTO_ORDER_MIN_ROWS
+    db.create_table("t", {"x": vals})
+    im = db.index_manager.imprint_mask("t", "x", float("-inf"), 7.0,
+                                       False, True)
+    assert im is not None
+    mask, _ = im
+    exact = np.asarray([v is not None and v < 7 for v in vals])
+    np.testing.assert_array_equal(mask, exact)
+    got = (db.scan("t").filter(Col("x") < Lit(7))
+           .agg(n=("count", None)).execute().to_pydict())
+    assert int(np.asarray(got["n"])[0]) == int(exact.sum())
+    db.shutdown()
+
+
+def test_skip_set_revalidation_guards_row_count():
+    """Defense in depth: a SkipSet whose version or row count disagrees
+    with the live table is discarded by the device scan (valid_for)."""
+    db = _mkdevdb()
+    try:
+        phys = plan_physical(
+            _q1(db, _CUT["one_pct"]).plan, db, distributed=True)
+        sets = list(phys.skip_sets.values())
+        assert sets and all(
+            ss.valid_for(db.catalog.table("li")) for ss in sets)
+        db.append("li", {k: v[:1] for k, v in _DATA.items()})
+        assert all(not ss.valid_for(db.catalog.table("li")) for ss in sets)
+    finally:
+        db.shutdown()
+
+
+def test_derive_skip_sets_respects_flag_and_string_filters():
+    """No skip-set for a VARCHAR filter (imprints are numeric-only) and
+    none at all when data_skipping is off."""
+    on, off = _mkdb(), _mkdb(data_skipping=False)
+    try:
+        from repro.core.optimizer import optimize
+        num = optimize(_q1(on, _CUT["half"]).plan, on.catalog)
+        assert derive_skip_sets(num, on)
+        assert derive_skip_sets(num, off) == {}
+        s = optimize(on.scan("li").filter(Col("flag") == Lit("A"))
+                     .agg(n=("count", None)).plan, on.catalog)
+        assert derive_skip_sets(s, on) == {}
+    finally:
+        on.shutdown()
+        off.shutdown()
