@@ -239,6 +239,40 @@ print("blocks skipped:", clustered.last_stats.blocks_skipped,
       clustered.last_stats.bytes_skipped_spill)
 clustered.shutdown()
 
+# --- streaming ingest through the delta store --------------------------------
+# Appends don't rewrite the column anymore: db.append installs an immutable
+# delta chunk (O(chunk) commit + WAL record), scans merge base + tail on
+# read (bit-identical across all executors), and a threshold compaction
+# folds the tail back into the base when it exceeds delta_compact_fraction
+# of the table.  That makes bulk loading a *streaming* operation:
+# db.ingest(name, iterable_of_column_dicts) pins one morsel-sized piece at
+# a time inside memory_budget, so a table larger than the budget loads
+# with tracked peak <= budget.  Epoch-keyed device caching means an append
+# only invalidates the delta tail's device blocks — a repeat scan after an
+# append re-uploads the tail, not the table.
+ing = startup(memory_budget=256 << 10, delta_compact_fraction=0.5)
+
+def trip_chunks(total, step=8_192):
+    for s in range(0, total, step):
+        m = min(step, total - s)
+        yield {"city": np.asarray(["ams", "nyc", "sfo"], dtype=object)[
+                   rng.integers(0, 3, m)],
+               "fare": rng.gamma(3.0, 7.0, m)}
+
+loaded = ing.ingest("trips", trip_chunks(200_000))   # table >> budget
+istats = ing.buffer_manager.stats
+print("ingested rows:", loaded,
+      "| tracked peak <= budget:", istats.peak <= 256 << 10,
+      "| compactions:", istats.compactions)
+ing.append("trips", {"city": np.asarray(["ams"], dtype=object),
+                     "fare": np.array([9.9])})
+t = ing.catalog.table("trips")
+print("delta tail after append:", t.delta_rows, "rows",
+      "| epoch:", t.delta_epoch)
+# EXPLAIN shows the merge-on-read scan: ...Scan trips (delta: k rows)
+print(ing.scan("trips").agg(n=("count", None)).explain(physical=True))
+ing.shutdown()
+
 # --- budgeted result materialization ----------------------------------------
 # Final tables whose columns would exceed memory_budget stream to
 # memmapped columns instead of a second RAM materialization (string heaps

@@ -32,6 +32,11 @@ GUARDED_REGISTRY: dict[str, dict[str, str]] = {
         "_resident": "_lock",
         "_table_hits": "_lock",
     },
+    "DeltaTable": {
+        # merge-on-read memoization: concurrent readers race to build the
+        # merged column dict; the lock makes the merge happen once
+        "_merged": "_merge_lock",
+    },
     "AdmissionGate": {
         "_host_reserved": "_cond",
         "_device_reserved": "_cond",

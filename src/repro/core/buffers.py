@@ -267,6 +267,10 @@ class BufferStats:
     bytes_skipped_h2d: int = 0     # host→device bytes skipped batches held
     bytes_skipped_spill: int = 0   # column bytes kept out of scan→filter→
                                    # partition streams (logical estimate)
+    # delta-store ingest (delta.py): merge-on-read appends + compaction
+    delta_bytes_h2d: int = 0       # h2d bytes for delta-tail device blocks
+    delta_rows: int = 0            # delta-tail rows consumed by scans
+    compactions: int = 0           # delta tails folded into a new base
 
     @property
     def bytes_spilled_compressed(self) -> int:

@@ -62,6 +62,17 @@ class DeviceBudgetError(RuntimeError):
     and the budget leaves no room.  Callers fall back to the host tier."""
 
 
+def _is_delta_key(key: tuple) -> bool:
+    """True for epoch-tagged delta-tail block keys.
+
+    The execution tier keys batches fully inside a table's immutable base
+    as ``(ns, "b", base_version)`` and batches overlapping the delta tail
+    as ``(ns, "d", base_version, delta_epoch)`` — see
+    ``parallel.DistributedScanAgg._batch_version_key``."""
+    v = key[2]
+    return isinstance(v, tuple) and len(v) >= 3 and v[1] == "d"
+
+
 def _jax():
     """Lazy jax import.  x64 is forced on exactly as parallel.py does at
     import: analytical columns are int64/float64 and a silent downcast in
@@ -195,6 +206,11 @@ class DeviceBufferManager:
                                              dirty=dirty, sharding=sharding)
             self._account(nbytes)
             self.stats.device_bytes_h2d += nbytes
+            if _is_delta_key(key):
+                # delta-tail uploads tracked separately: the epoch-keyed
+                # survival claim is "repeat scans after an append move only
+                # the tail's bytes", and this is the counter that proves it
+                self.stats.delta_bytes_h2d += nbytes
             self._host.pop(key, None)
             return dev
 
@@ -335,11 +351,27 @@ class DeviceBufferManager:
             if drop_history:
                 self._table_hits.pop(table, None)
 
+    def invalidate_delta(self, table: str) -> None:
+        """Drop only one table's delta-tail blocks (epoch-tagged keys).
+
+        The base blocks stay: a delta append leaves them byte-identical and
+        their ``(ns, "b", base_version)`` keys unchanged, so repeat scans
+        re-upload nothing but the new tail.  Superseded-epoch tail blocks
+        are unreachable either way (keys carry the epoch) — dropping them
+        just frees their budget immediately."""
+        def _match(k):
+            return k[0] == table and _is_delta_key(k)
+        with self._lock:
+            for key in [k for k in self._blocks if _match(k)]:
+                self.drop(key)
+            for key in [k for k in self._host if _match(k)]:
+                self._host.pop(key, None)
+
     def invalidate_namespace(self, ns) -> None:
         """Drop every block whose version component carries key namespace
         ``ns`` (a transaction snapshot's blocks, once its query ends)."""
         def _match(k):
-            return isinstance(k[2], tuple) and len(k[2]) == 2 \
+            return isinstance(k[2], tuple) and len(k[2]) >= 2 \
                 and k[2][0] == ns
         with self._lock:
             for key in [k for k in self._blocks if _match(k)]:
@@ -366,9 +398,13 @@ class DeviceBlockKeys:
     ``shard`` identifies the block's slice of the column and must encode
     its geometry (the execution tier passes ``(batch_rows, batch_index)``)
     — two slicings of the same column version are distinct blocks.
-    ``version`` may be a plain table version or a ``(namespace, version)``
-    pair: transaction snapshots use a unique namespace because their
-    tables reuse the version number the next committed write will get."""
+    ``version`` may be a plain table version or a namespace-carrying tuple
+    — ``(ns, "b", base_version)`` for blocks inside a table's immutable
+    base, ``(ns, "d", base_version, delta_epoch)`` for blocks overlapping
+    the delta tail.  Transaction snapshots use a unique ``ns`` because
+    their tables reuse the version number the next committed write will
+    get; the base/delta split is what lets an append invalidate only the
+    tail (``invalidate_delta``) while base blocks keep hitting."""
 
     @staticmethod
     def column(table: str, column: str, version, shard) -> tuple:

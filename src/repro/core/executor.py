@@ -510,6 +510,10 @@ class ExecStats:
     bytes_skipped_h2d: int = 0          # host→device bytes skipping avoided
     bytes_skipped_spill: int = 0        # column bytes kept out of the
                                         # scan→filter→partition streams
+    # delta-store ingest (delta.py): per-query deltas of the shared counters
+    delta_bytes_h2d: int = 0            # h2d bytes for delta-tail blocks
+    delta_rows: int = 0                 # delta-tail rows this query scanned
+    compactions: int = 0                # tail folds triggered while running
 
 
 # Per-query deltas of the database-lifetime BufferStats counters: the field
@@ -522,6 +526,7 @@ DEVICE_DELTA_FIELDS = ("device_cache_hits", "device_prefetch_hits",
                        "device_writebacks", "shared_scan_attaches")
 SKIP_DELTA_FIELDS = ("blocks_skipped", "bytes_skipped_h2d",
                      "bytes_skipped_spill")
+INGEST_DELTA_FIELDS = ("delta_bytes_h2d", "delta_rows", "compactions")
 
 
 def stats_base(buffer_stats, fields) -> tuple:
@@ -612,7 +617,8 @@ class Executor:
         regs: dict[str, Any] = {}
         result = None
         bm = self.bufman
-        fields = SPILL_DELTA_FIELDS + DEVICE_DELTA_FIELDS + SKIP_DELTA_FIELDS
+        fields = (SPILL_DELTA_FIELDS + DEVICE_DELTA_FIELDS
+                  + SKIP_DELTA_FIELDS + INGEST_DELTA_FIELDS)
         base = None if bm is None else stats_base(bm.stats, fields)
         for ins in prog.instrs:
             self.stats.instructions += 1
@@ -636,9 +642,27 @@ class Executor:
 
     def _op_load(self, ins, regs):
         table, cname = ins.payload
-        col = self.db.catalog.table(table).column(cname)
+        t = self.db.catalog.table(table)
+        col = t.column(cname)
         self.stats.rows_scanned += len(col)
+        self._note_delta_scan(table, t)
         return ExprResult(col.data, col.dbtype, None, col.heap, col.scale)
+
+    def _note_delta_scan(self, name: str, t) -> None:
+        """Count a scanned table's merge-on-read tail once per program."""
+        dr = t.delta_rows
+        if not dr:
+            return
+        noted = getattr(self, "_delta_noted", None)
+        if noted is None:
+            noted = self._delta_noted = set()
+        if name in noted:
+            return
+        noted.add(name)
+        if self.bufman is not None:
+            self.bufman.bump(delta_rows=dr)
+        else:
+            self.stats.delta_rows += dr
 
     def _ctx(self, binding: dict[str, str], regs) -> EvalContext:
         arrays, meta = {}, {}

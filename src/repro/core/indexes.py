@@ -81,6 +81,62 @@ def build_imprint(col: Column) -> Optional[Imprint]:
     return Imprint(IMPRINT_BLOCK, mins, maxs, bitmaps, lo, hi, len(v))
 
 
+def _extend_imprint(imp: Imprint, t, cname: str) -> Optional[Imprint]:
+    """Extend zone maps over appended rows without touching complete blocks.
+
+    Recomputes only blocks covering rows ``[floor(prev/block)*block, n)``.
+    Appended values are binned against the ORIGINAL ``(lo, hi)`` histogram
+    range with clipping — the same monotone transform ``candidate_blocks``
+    applies to query bounds — so the presence bitmap stays a superset of
+    the truth and pruning stays sound even when new values fall outside the
+    old range (mins/maxs stay exact either way)."""
+    try:
+        cs = t.schema.column(cname)
+    except KeyError:
+        return None
+    if cs.dbtype == DBType.VARCHAR or cs.dbtype == DBType.BOOL:
+        return None
+    n_rows = t.num_rows
+    if n_rows < imp.n_rows:
+        return None
+    keep = imp.n_rows // imp.block          # complete, untouched blocks
+    start = keep * imp.block
+    v = np.asarray(t.tail_array(cname, start))
+    if cs.dbtype == DBType.DECIMAL:
+        f = v.astype(np.float64) / (10 ** cs.scale)
+    else:
+        f = v.astype(np.float64)
+    if is_float(cs.dbtype):
+        nulls = np.isnan(f)
+    else:
+        from .types import NULL_SENTINEL
+        nulls = v == NULL_SENTINEL[cs.dbtype]
+    inv = (IMPRINT_BINS / (imp.hi - imp.lo)) if imp.hi > imp.lo else 0.0
+    nb_new = max(1, -(-len(v) // imp.block)) if len(v) else 0
+    mins = np.full(nb_new, np.inf)
+    maxs = np.full(nb_new, -np.inf)
+    bitmaps = np.zeros(nb_new, dtype=np.uint16)
+    for b in range(nb_new):
+        s, e = b * imp.block, min((b + 1) * imp.block, len(v))
+        ok = ~nulls[s:e]
+        vv = f[s:e][ok]
+        if vv.size:
+            mins[b] = vv.min()
+            maxs[b] = vv.max()
+            if inv > 0:
+                bins = np.clip(((vv - imp.lo) * inv).astype(np.int64),
+                               0, IMPRINT_BINS - 1)
+                bitmaps[b] = np.bitwise_or.reduce(
+                    (1 << bins).astype(np.uint16))
+            else:
+                bitmaps[b] = 1
+    return Imprint(imp.block,
+                   np.concatenate([imp.mins[:keep], mins]),
+                   np.concatenate([imp.maxs[:keep], maxs]),
+                   np.concatenate([imp.bitmaps[:keep], bitmaps]),
+                   imp.lo, imp.hi, n_rows)
+
+
 @dataclass
 class IndexManager:
     """Per-database index cache keyed by (table, column, table_version)."""
@@ -98,10 +154,27 @@ class IndexManager:
                               if k[0] != table}
 
     def on_append(self, table: str) -> None:
-        # imprints are destroyed on modification (paper); order indexes are
-        # merged incrementally on append (paper: hash tables updated on
-        # appends) — we rebuild lazily which is the same observable contract.
+        """Append lifecycle: imprints are *extended*, not destroyed.
+
+        Every append path preserves the existing row prefix (delta chunks
+        by construction; numeric columns under a VARCHAR-forced rebase are
+        still pure concatenations), so zone maps for blocks fully inside
+        the old prefix remain exact — only the trailing (possibly partial)
+        block and the new tail are recomputed, an O(delta rows) update read
+        through ``tail_array`` so the delta tail never forces a merge.
+        Order indexes still rebuild lazily (the paper's contract).  Replaces
+        and drops go through ``invalidate_table`` instead."""
+        t = self.database.catalog.tables.get(table)
+        extended = {}
+        if t is not None:
+            for (tb, cname, ver), imp in self.imprints.items():
+                if tb != table or imp is None or ver >= t.version:
+                    continue
+                ext = _extend_imprint(imp, t, cname)
+                if ext is not None:
+                    extended[(table, cname, t.version)] = ext
         self.invalidate_table(table)
+        self.imprints.update(extended)
 
     # -- imprints -------------------------------------------------------------
     def _key(self, table: str, column: str):

@@ -411,8 +411,16 @@ class DistributedScanAgg:
         # transaction snapshots run under a unique key namespace: their
         # tables reuse the version number the next committed write gets,
         # so bare versions would let rolled-back rows alias committed ones
-        self.version_key = (getattr(db, "device_key_namespace", 0),
-                            self.table.version)
+        self._key_ns = getattr(db, "device_key_namespace", 0)
+        # delta geometry (base tables report delta_rows == 0): batches that
+        # lie fully inside the immutable base are keyed by base_version only
+        # and so survive appends; tail-overlapping batches carry the delta
+        # epoch and are the only entries an append invalidates
+        self.base_rows = self.table.base_rows
+        self.delta_rows = self.table.delta_rows
+        self.base_version_key = (self._key_ns, "b", self.table.base_version)
+        self.delta_version_key = (self._key_ns, "d", self.table.base_version,
+                                  self.table.delta_epoch)
         # mesh identity (device ids + axis layout) joins the shard key:
         # blocks are sharded FOR a mesh, and serving a 4-device block to a
         # 2-device step raises inside jit — which the executor would
@@ -472,14 +480,14 @@ class DistributedScanAgg:
         s = b * m
         e = min(self.n_rows, s + m)
         shard = (self.mesh_key, m, b)
+        vkey = self._batch_version_key(b)
 
         def bvalid():
             a = np.zeros(m, dtype=bool)
             a[:e - s] = True
             return a
 
-        yield DeviceBlockKeys.valid(spec.table, self.version_key,
-                                    shard), bvalid
+        yield DeviceBlockKeys.valid(spec.table, vkey, shard), bvalid
         for c in spec.columns:
             col = table.column(c)
 
@@ -488,9 +496,28 @@ class DistributedScanAgg:
                 a[:e - s] = col.data[s:e]       # memmap: pages one morsel
                 return a
 
-            yield (DeviceBlockKeys.column(spec.table, c, self.version_key,
-                                          shard),
+            yield (DeviceBlockKeys.column(spec.table, c, vkey, shard),
                    bcol)
+
+    def _batch_version_key(self, b: int):
+        """Epoch-keyed caching (delta store): the version component of batch
+        ``b``'s block keys.  A batch whose rows lie entirely within the
+        immutable base is keyed ``(ns, "b", base_version)`` — stable across
+        appends, so a repeat scan after an append re-uploads only the tail.
+        A batch overlapping the delta tail is keyed
+        ``(ns, "d", base_version, delta_epoch)``; the next append bumps the
+        epoch, orphaning exactly those entries (reaped by
+        ``DeviceBufferManager.invalidate_delta`` / LRU).  Soundness: a batch
+        that ends at the base boundary *before* an append keeps the same
+        rows after it (the base is immutable), so serving its "b" entry as a
+        hit is correct; a batch that gains rows by an append necessarily
+        overlaps the tail and flips to a fresh "d" key — never a stale hit."""
+        if self.delta_rows == 0:
+            return self.base_version_key
+        e = min(self.n_rows, (b + 1) * self.batch_rows)
+        if e <= self.base_rows:
+            return self.base_version_key
+        return self.delta_version_key
 
     # requires-lock: _DEVICE_DISPATCH_LOCK
     def _issue_prefetch(self, b: int, prefetched: set, query_keys: set,
@@ -691,15 +718,18 @@ class ParallelExecutor(Executor):
             return None
         tier = "resident" if phys.agg_tier == TIER_DEVICE_RESIDENT \
             else "streamed"
-        from .executor import (DEVICE_DELTA_FIELDS, SKIP_DELTA_FIELDS,
-                               stats_base)
-        fields = DEVICE_DELTA_FIELDS + SKIP_DELTA_FIELDS
+        from .executor import (DEVICE_DELTA_FIELDS, INGEST_DELTA_FIELDS,
+                               SKIP_DELTA_FIELDS, stats_base)
+        fields = DEVICE_DELTA_FIELDS + SKIP_DELTA_FIELDS + INGEST_DELTA_FIELDS
         dm = agg.devman.stats
         base = stats_base(dm, fields)
         try:
             out = agg.run(tier)
         except Exception:
             return None      # fall back to the host tier on any lowering gap
+        if agg.delta_rows:
+            # merge-on-read visibility: the scan consumed a delta tail
+            agg.devman.bump(delta_rows=agg.delta_rows)
         result = self._assemble(spec, out, table)
         # close the device-counter window BEFORE the suffix runs (its host
         # program threads the same delta fields through run_program)...

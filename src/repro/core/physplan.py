@@ -773,6 +773,18 @@ class PhysicalPlan:
             return ""
         return f"(skip: {ss.n_skipped}/{ss.n_blocks} blocks)"
 
+    def _delta_note(self, node: PlanNode) -> str:
+        """Merge-on-read visibility in EXPLAIN: a base-table scan whose
+        table carries an uncompacted delta tail says how many rows it will
+        merge on read."""
+        if not isinstance(node, ScanNode):
+            return ""
+        t = self.catalog.tables.get(node.table) \
+            if hasattr(self.catalog, "tables") else None
+        if t is None or not t.delta_rows:
+            return ""
+        return f"(delta: {t.delta_rows} rows)"
+
     # -- annotation -----------------------------------------------------------
     def annotate(self) -> PhysicalOp:
         return self._annotate(self.plan)
@@ -836,6 +848,9 @@ class PhysicalPlan:
         note = self._skip_note(node)
         if note:
             detail = f"{detail} {note}".strip()
+        dnote = self._delta_note(node)
+        if dnote:
+            detail = f"{detail} {dnote}".strip()
         return PhysicalOp(node, tier, est, reserve, detail, children)
 
     def _annotate_core(self, node: PlanNode) -> PhysicalOp:
@@ -855,6 +870,9 @@ class PhysicalPlan:
             note = self._skip_note(n)
             if note:
                 d = f"{d} {note}"
+            dnote = self._delta_note(n)
+            if dnote:
+                d = f"{d} {dnote}"
             return PhysicalOp(
                 n, self.agg_tier, 0, 0, d,
                 tuple(fused(c) for c in n.children))

@@ -226,9 +226,17 @@ class PlanCache:
         bm = getattr(db, "buffer_manager", None)
         dm = getattr(db, "device_manager", None)
         tables = plan_tables(plan)
+        # delta geometry joins the version fence: an append bumps the
+        # table version AND the delta epoch, and a threshold compaction
+        # keeps the version but changes base_version/delta_epoch (and the
+        # physical layout the plan annotated), so the key must see all
+        # three — a compacted table must never be served the pre-compaction
+        # plan's delta annotations
         versions = tuple(
-            (t, db.catalog.tables[t].version) for t in tables
-            if t in db.catalog.tables)
+            (t, (db.catalog.tables[t].version,
+                 db.catalog.tables[t].base_version,
+                 db.catalog.tables[t].delta_epoch))
+            for t in tables if t in db.catalog.tables)
         # tier evidence: choose_device_tier flips a borderline table from
         # streamed to resident once its hit history crosses the promotion
         # threshold — key on the *decision input* (the crossed/not-crossed

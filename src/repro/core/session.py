@@ -75,7 +75,8 @@ class Database:
                  spill_codec: str = "for", spill_prefetch: bool = True,
                  device_budget: Optional[int] = None,
                  device_batch_rows: Optional[int] = None,
-                 data_skipping: bool = True):
+                 data_skipping: bool = True,
+                 delta_compact_fraction: float = 0.5):
         from .buffers import BufferManager
         from .device_cache import DeviceBufferManager
         self.path = path
@@ -84,6 +85,11 @@ class Database:
         self.spill_prefetch = spill_prefetch
         self.device_budget = device_budget
         self.device_batch_rows = device_batch_rows
+        # delta-store compaction threshold: fold a table's delta tail into a
+        # new base once it exceeds this fraction of memory_budget bytes (or,
+        # unbudgeted, this fraction of the base rows).  0/None disables
+        # automatic compaction.
+        self.delta_compact_fraction = delta_compact_fraction
         # imprint-driven data skipping (paper §3.1): when True the planner
         # attaches zone-map skip-sets to scans and every tier prunes
         # non-qualifying blocks; False forces full scans (the differential
@@ -212,12 +218,89 @@ class Database:
         txn = self.txn_manager.begin(self)
         txn.append(name, chunk)
         txn.commit()
-        # the version bump already keeps correctness (keys carry it); the
-        # invalidation frees the dead version's device blocks so they stop
-        # occupying budget and forcing spurious evictions of live ones —
-        # same for the plan cache (its keys carry versions too)
+        self._post_append(name)
+
+    def _post_append(self, name: str) -> None:
+        """Epoch-keyed cache invalidation after a committed append.
+
+        A delta append leaves the base blocks byte-identical, so only the
+        delta-tail device blocks (keyed on the old epoch) die — repeat scans
+        re-upload the tail's bytes, not the table.  A rebase (VARCHAR heap
+        re-sort) or a compaction changed the physical layout, so everything
+        for the table is retired; version-carrying keys already keep either
+        path correct — invalidation only frees dead blocks from the budget.
+        The plan cache's keys carry (version, base_version, delta_epoch), so
+        stale entries are unreachable and age out of the LRU on their own."""
+        new = self.catalog.tables.get(name)
+        if new is not None and new.delta_rows:
+            self.device_manager.invalidate_delta(name)
+        else:
+            self.device_manager.invalidate_table(name)
+            self.plan_cache.invalidate_table(name)
+
+    def _maybe_compact(self, name: str) -> None:
+        """Transaction-manager hook, called under the commit lock after an
+        append install: fold an over-threshold delta tail into a plain base.
+        The fold is content- and version-identical, so no validation window
+        opens; with persistent storage the checkpoint folds the WAL and the
+        existing GC sweeps the superseded column-version files."""
+        from .delta import compact, should_compact
+        t = self.catalog.tables.get(name)
+        if not should_compact(t, self.delta_compact_fraction,
+                              self.memory_budget):
+            return
+        new = compact(t, storage=self.storage, bufman=self.buffer_manager)
+        self.catalog.tables[name] = new
+        self.buffer_manager.bump(compactions=1)
+        # same version, different physical layout: retire old base/tail
+        # device blocks and cached plans for the table
         self.device_manager.invalidate_table(name)
         self.plan_cache.invalidate_table(name)
+        if self.storage is not None:
+            self.storage.write_catalog(self.catalog.tables)
+
+    def ingest(self, name: str, source, types=None, scales=None) -> int:
+        """Chunked bulk ingest: stream ``source`` — an iterable of
+        ``{col: values}`` dicts or ``Table`` chunks — into ``name`` as delta
+        appends.
+
+        Each incoming chunk is re-chunked into budget-sized pieces
+        (``choose_morsel_rows``) and pinned through ``BufferManager``
+        accounting while its commit is in flight, so a table far larger
+        than ``memory_budget`` loads with tracked ``peak <= budget``;
+        threshold compaction (``delta_compact_fraction``) periodically folds
+        the growing tail to disk in persistent mode.  The table is created
+        from the first chunk's schema when absent.  Returns rows ingested."""
+        from .buffers import choose_morsel_rows
+        self._check_alive()
+        total = 0
+        for data in source:
+            if name in self.catalog:
+                base = self.catalog.table(name)
+                chunk = data if isinstance(data, Table) else Table.from_dict(
+                    name, data,
+                    types or {c.name: c.dbtype for c in base.schema.columns},
+                    scales or {c.name: c.scale for c in base.schema.columns})
+            else:
+                chunk = data if isinstance(data, Table) else Table.from_dict(
+                    name, data, types, scales)
+                # seed a zero-row base carrying the first chunk's schema and
+                # heaps: subsequent pieces whose strings are covered by those
+                # heaps append as O(delta) deltas instead of rebasing
+                self.create_table(name, chunk.slice_rows(0, 0))
+            row_bytes = max(1, sum(c.data.dtype.itemsize
+                                   for c in chunk.columns.values()))
+            rows = choose_morsel_rows(row_bytes, self.memory_budget)
+            n = chunk.num_rows
+            for s in range(0, n, rows):
+                piece = chunk.slice_rows(s, min(s + rows, n))
+                with self.buffer_manager.pinned(piece.nbytes):
+                    txn = self.txn_manager.begin(self)
+                    txn.append(name, piece)
+                    txn.commit()
+                self._post_append(name)
+                total += piece.num_rows
+        return total
 
     # ---- querying -------------------------------------------------------------
     def scan(self, name: str) -> Query:
@@ -232,36 +315,41 @@ class Database:
 
     def delete(self, name: str, predicate) -> int:
         """DELETE FROM name WHERE predicate.  Tables are immutable values,
-        so deletion installs a new filtered version; per the paper's index
-        lifecycle (§3.1), imprints/hash/order indexes on the table are
-        destroyed (on_delete -> invalidate, unlike append's merge path)."""
+        so deletion installs a new filtered version through the normal
+        begin/commit path (``txn.replace`` — first-committer-wins against
+        concurrent appenders, validated under the commit lock like any
+        write); per the paper's index lifecycle (§3.1), imprints/hash/order
+        indexes on the table are destroyed (replace -> invalidate, unlike
+        append's prefix-preserving merge path)."""
         import numpy as np
         from .expression import EvalContext
         self._check_alive()
-        t = self.catalog.table(name)
-        arrays = {c: np.asarray(col.data) for c, col in t.columns.items()}
-        meta = {c: (col.dbtype, col.heap, col.scale)
-                for c, col in t.columns.items()}
-        r = predicate.eval(EvalContext(arrays, meta, xp=np))
-        kill = np.asarray(r.values) != 0
-        if r.null is not None:
-            kill &= ~np.asarray(r.null)
-        keep = np.nonzero(~kill)[0]
-        from .table import Table
-        new = Table(t.schema,
-                    {c: col.take(keep) for c, col in t.columns.items()},
-                    version=t.version + 1)
-        # install atomically under the commit lock (first-committer-wins
-        # against concurrent appenders, same as the paper's model)
+        self.catalog.table(name)            # DatabaseError when unknown
         txn = self.txn_manager.begin(self)
-        if txn.snapshot[name].version != t.version:
-            from .transactions import ConflictError
-            raise ConflictError(f"table {name!r} changed during delete")
-        with self.txn_manager._lock:
-            self.catalog.tables[name] = new
-            self.index_manager.invalidate_table(name)
-            self.device_manager.invalidate_table(name)
-            self.plan_cache.invalidate_table(name)
+        try:
+            t = txn.snapshot[name]
+            arrays = {c: np.asarray(col.data)
+                      for c, col in t.columns.items()}
+            meta = {c: (col.dbtype, col.heap, col.scale)
+                    for c, col in t.columns.items()}
+            r = predicate.eval(EvalContext(arrays, meta, xp=np))
+            kill = np.asarray(r.values) != 0
+            if r.null is not None:
+                kill &= ~np.asarray(r.null)
+            keep = np.nonzero(~kill)[0]
+            new = Table(t.schema,
+                        {c: col.take(keep) for c, col in t.columns.items()},
+                        version=t.version + 1)
+            txn.replace(name, new)
+            txn.commit()
+        except BaseException:
+            # a failed delete (conflict, bad predicate) must not leak an
+            # open transaction
+            if txn.state == "open":
+                txn.rollback()
+            raise
+        self.device_manager.invalidate_table(name)
+        self.plan_cache.invalidate_table(name)
         if self.storage is not None:
             self.storage.write_catalog(self.catalog.tables)
         return int(kill.sum())
@@ -311,6 +399,11 @@ class Database:
         if self.storage is not None:
             self.storage.log_append(table, chunk)
 
+    def _on_replace(self, name: str) -> None:
+        # a replace rewrites rows wholesale: indexes over the old contents
+        # are dead (unlike append's prefix-preserving merge path)
+        self.index_manager.invalidate_table(name)
+
     def _check_alive(self):
         if self._shutdown:
             raise DatabaseError("database has been shut down")
@@ -329,7 +422,8 @@ def startup(path: Optional[str] = None,
             spill_prefetch: bool = True,
             device_budget: Optional[int] = None,
             device_batch_rows: Optional[int] = None,
-            data_skipping: bool = True) -> Database:
+            data_skipping: bool = True,
+            delta_compact_fraction: float = 0.5) -> Database:
     """monetdb_startup: persistent when ``path`` given, else in-memory.
 
     ``memory_budget`` (bytes, default unlimited) enables out-of-core
@@ -386,7 +480,8 @@ def startup(path: Optional[str] = None,
                         spill_prefetch=spill_prefetch,
                         device_budget=device_budget,
                         device_batch_rows=device_batch_rows,
-                        data_skipping=data_skipping)
+                        data_skipping=data_skipping,
+                        delta_compact_fraction=delta_compact_fraction)
     ap = os.path.realpath(path)      # symlink aliases are the same database
     with _open_lock:
         if ap in _open_dirs and not _open_dirs[ap]._shutdown:
@@ -396,7 +491,8 @@ def startup(path: Optional[str] = None,
                       spill_prefetch=spill_prefetch,
                       device_budget=device_budget,
                       device_batch_rows=device_batch_rows,
-                      data_skipping=data_skipping)
+                      data_skipping=data_skipping,
+                      delta_compact_fraction=delta_compact_fraction)
         _open_dirs[ap] = db
     return db
 
@@ -491,7 +587,8 @@ class Connection:
                                spill_prefetch=db.spill_prefetch,
                                device_budget=db.device_budget,
                                device_batch_rows=db.device_batch_rows,
-                               data_skipping=db.data_skipping)
+                               data_skipping=db.data_skipping,
+                               delta_compact_fraction=db.delta_compact_fraction)
             # a FRESH IndexManager over the snapshot catalog: skip-sets and
             # imprints derive from the snapshot's own (uncommitted) tables,
             # never from the committed table sharing the version number

@@ -98,22 +98,33 @@ def _heap_file(table: str, col: str, version: int) -> str:
 
 
 def save_table(root: str, table: Table) -> dict:
-    """Write all columns of one table version; returns catalog entry."""
+    """Write all columns of one table version; returns catalog entry.
+
+    A column whose host array is already the memmap of its own target file
+    (the streamed-compaction path writes and adopts ``<table>.<col>.v<N>.bin``
+    directly) is durable as written — skip the byte rewrite so a checkpoint
+    right after compaction costs no second O(table) pass."""
     cols_meta = []
     for cs in table.schema.columns:
         col = table.columns[cs.name]
         rel = _col_file(table.name, cs.name, table.version)
-        _atomic_write(os.path.join(root, rel),
-                      lambda f, c=col: f.write(
-                          np.ascontiguousarray(c.data).tobytes()))
+        target = os.path.join(root, rel)
+        fn = getattr(col.data, "filename", None)
+        on_disk = (isinstance(col.data, np.memmap) and fn is not None
+                   and os.path.abspath(fn) == os.path.abspath(target))
+        if not on_disk:
+            _atomic_write(target,
+                          lambda f, c=col: f.write(
+                              np.ascontiguousarray(c.data).tobytes()))
         entry = {"name": cs.name, "type": cs.dbtype.value,
                  "scale": cs.scale, "file": rel}
         if col.heap is not None:
             hrel = _heap_file(table.name, cs.name, table.version)
-            payload = json.dumps(
-                [str(v) for v in col.heap.values]).encode()
-            _atomic_write(os.path.join(root, hrel),
-                          lambda f, p=payload: f.write(p))
+            hpath = os.path.join(root, hrel)
+            if not (on_disk and os.path.exists(hpath)):
+                payload = json.dumps(
+                    [str(v) for v in col.heap.values]).encode()
+                _atomic_write(hpath, lambda f, p=payload: f.write(p))
             entry["heap"] = hrel
         cols_meta.append(entry)
     return {"version": table.version, "nrows": table.num_rows,
@@ -218,6 +229,39 @@ class Storage:
             except OSError:
                 pass
 
+    # -- streamed column writes (delta compaction) ---------------------------
+    def write_column_pieces(self, table: str, col: str, version: int,
+                            pieces: list, bufman=None) -> np.memmap:
+        """Stream ``pieces`` (base array first, then delta chunks) into the
+        versioned column file morsel-by-morsel and adopt the result as a
+        read-only memmap.  Peak memory is one morsel (pinned through
+        ``bufman`` when given), so compacting a table far larger than the
+        memory budget never materializes it."""
+        rel = _col_file(table, col, version)
+        path = os.path.join(self.root, rel)
+        dtype = pieces[0].dtype
+        # budget-aware morsel: the pinned streaming window must fit the
+        # SAME budget the ingest loop pins its pieces against, or a
+        # compaction fired mid-ingest would blow `peak <= budget`
+        from .buffers import choose_morsel_rows
+        rows = choose_morsel_rows(int(dtype.itemsize),
+                                  None if bufman is None else bufman.budget,
+                                  default=MORSEL_ROWS)
+        morsel_bytes = rows * int(dtype.itemsize)
+
+        def _write(f):
+            for arr in pieces:
+                for s in range(0, len(arr), rows):
+                    f.write(np.ascontiguousarray(
+                        arr[s:s + rows]).tobytes())
+
+        if bufman is not None:
+            with bufman.pinned(morsel_bytes):
+                _atomic_write(path, _write)
+        else:
+            _atomic_write(path, _write)
+        return np.memmap(path, dtype=dtype, mode="r")
+
     # -- catalog -------------------------------------------------------------
     def write_catalog(self, tables: dict[str, Table]) -> None:
         cat = {"format": FORMAT_VERSION,
@@ -262,13 +306,17 @@ class Storage:
                 f"database created by a newer version ({cat['format']})")
         tables = {name: load_table(self.root, name, meta)
                   for name, meta in cat["tables"].items()}
-        # crash recovery: replay WAL appends newer than the catalog
+        # crash recovery: replay WAL appends newer than the catalog.  Each
+        # replayed chunk installs as a delta over the memmapped base (same
+        # layout the crashed process had), so replay is O(delta rows) and
+        # never forces the base columns resident.
+        from .delta import delta_append
         for rec, arrays in self._read_wal():
             name = rec["table"]
             if name not in tables:
                 continue
             chunk = _chunk_to_table(tables[name], arrays, rec)
-            tables[name] = tables[name].append_table(chunk)
+            tables[name] = delta_append(tables[name], chunk)
         return tables
 
     # -- WAL -----------------------------------------------------------------

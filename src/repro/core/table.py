@@ -72,11 +72,42 @@ class Table:
     def nbytes(self) -> int:
         return sum(c.nbytes for c in self.columns.values())
 
+    # ---- delta-store geometry (delta.py overrides; a plain table is all
+    # base, epoch 0) ---------------------------------------------------------
+    @property
+    def base_version(self) -> int:
+        return self.version
+
+    @property
+    def delta_epoch(self) -> int:
+        return 0
+
+    @property
+    def base_rows(self) -> int:
+        return self.num_rows
+
+    @property
+    def delta_rows(self) -> int:
+        return 0
+
+    def tail_array(self, name: str, start: int) -> np.ndarray:
+        """Raw storage values of rows ``[start:]`` (DeltaTable overrides
+        with an O(tail) implementation that avoids the merge)."""
+        return np.asarray(self.columns[name].data)[start:]
+
     # ---- functional updates ------------------------------------------------
     def take(self, idx: np.ndarray) -> "Table":
         return Table(self.schema,
                      {n: c.take(idx) for n, c in self.columns.items()},
                      version=self.version)
+
+    def slice_rows(self, start: int, stop: int) -> "Table":
+        """Zero-copy row window [start, stop) — the ingest path's re-chunking
+        primitive (views share the source arrays; no heap work)."""
+        cols = {n: Column(c.dbtype, np.asarray(c.data)[start:stop],
+                          heap=c.heap, scale=c.scale)
+                for n, c in self.columns.items()}
+        return Table(self.schema, cols, version=self.version)
 
     def select_columns(self, names: Iterable[str]) -> "Table":
         names = list(names)

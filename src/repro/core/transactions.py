@@ -15,6 +15,7 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass, field
 
+from .delta import delta_append
 from .table import Table
 
 
@@ -32,6 +33,7 @@ class Transaction:
     snapshot: dict[str, Table]                 # pinned versions
     writes: dict[str, list[Table]] = field(default_factory=dict)  # appends
     creates: dict[str, Table] = field(default_factory=dict)
+    replaces: dict[str, Table] = field(default_factory=dict)      # DELETE
     drops: set = field(default_factory=set)
     state: str = "open"                        # open | committed | aborted
 
@@ -42,9 +44,9 @@ class Transaction:
             return self.creates[name]
         if name in self.drops:
             raise KeyError(f"table {name} dropped in this transaction")
-        t = self.snapshot[name]
+        t = self.replaces.get(name, self.snapshot[name])
         for chunk in self.writes.get(name, ()):   # read-your-own-writes
-            t = t.append_table(chunk)
+            t = delta_append(t, chunk)
         return t
 
     def tables(self) -> dict[str, Table]:
@@ -59,6 +61,14 @@ class Transaction:
         if name not in self.snapshot and name not in self.creates:
             raise KeyError(f"unknown table {name}")
         self.writes.setdefault(name, []).append(chunk)
+
+    def replace(self, name: str, table: Table) -> None:
+        """Replace a table's contents wholesale (the DELETE path).  Validated
+        against the snapshot version at commit, exactly like appends."""
+        self._check_open()
+        if name not in self.snapshot:
+            raise KeyError(f"unknown table {name}")
+        self.replaces[name] = table
 
     def create_table(self, table: Table) -> None:
         self._check_open()
@@ -104,7 +114,8 @@ class TransactionManager:
         with self._lock:
             cat = database.catalog
             # optimistic validation: every written table must be unchanged
-            for name in list(txn.writes) + list(txn.drops):
+            for name in (list(txn.writes) + list(txn.replaces)
+                         + list(txn.drops)):
                 if name in txn.creates:
                     continue
                 cur = cat.tables.get(name)
@@ -119,13 +130,22 @@ class TransactionManager:
             for name, table in txn.creates.items():
                 cat.tables[name] = table
                 database._on_table_created(table)
+            for name, table in txn.replaces.items():
+                cat.tables[name] = table
+                database._on_replace(name)
             for name, chunks in txn.writes.items():
                 t = cat.tables[name]
                 for chunk in chunks:
                     database._on_append(t, chunk)
-                    t = t.append_table(chunk)
+                    # delta install: the base version is shared, the chunk
+                    # rides as an immutable tail — O(delta rows) per commit
+                    t = delta_append(t, chunk)
                 cat.tables[name] = t
                 database.index_manager.on_append(name)
+                # threshold compaction folds an oversized tail back into a
+                # plain base, still under the commit lock (the fold keeps
+                # version and content, so no validation window opens)
+                database._maybe_compact(name)
             for name in txn.drops:
                 del cat.tables[name]
                 database.index_manager.invalidate_table(name)

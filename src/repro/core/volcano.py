@@ -113,6 +113,7 @@ class VolcanoExecutor:
             # row-store emulation: decode EVERY column per row (the paper's
             # point about row stores scanning entire tables)
             t = self.db.catalog.table(node.table)
+            self._note_delta(t)
             decoded = {n: t.columns[n].to_numpy() for n in t.schema.names}
             names = list(t.schema.names)
             for i in range(t.num_rows):
@@ -173,6 +174,16 @@ class VolcanoExecutor:
             raise TypeError(f"volcano cannot run {type(node).__name__}")
 
 
+    def _note_delta(self, t) -> None:
+        """Merge-on-read visibility: count delta-tail rows the scan had to
+        merge (the row baseline pays the same concatenation the columnar
+        engine does, so the counter is engine-agnostic)."""
+        dr = t.delta_rows
+        if dr:
+            bm = getattr(self.db, "buffer_manager", None)
+            if bm is not None:
+                bm.bump(delta_rows=dr)
+
     def _iter_filtered_scan(self, node: FilterNode) -> Iterator[Row]:
         """Filter directly over a base-table scan: consult the imprints
         (physplan.derive_skip_sets, re-derived here at execution time so
@@ -185,6 +196,7 @@ class VolcanoExecutor:
         from .physplan import derive_skip_sets
         ss = derive_skip_sets(node, self.db).get(id(scan))
         t = self.db.catalog.table(scan.table)
+        self._note_delta(t)
         decoded = {n: t.columns[n].to_numpy() for n in t.schema.names}
         names = list(t.schema.names)
         if ss is None or not ss.n_skipped:

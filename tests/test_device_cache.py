@@ -427,15 +427,23 @@ def test_mixed_meshes_share_database_without_fallback(lineitem):
                                        rtol=1e-9)
 
 
-def test_append_frees_dead_version_blocks(lineitem):
-    """Appending invalidates the old version's device blocks so they stop
-    occupying budget (keys already keep them unreachable for correctness)."""
+def test_append_keeps_base_blocks_replace_frees_all(lineitem):
+    """Delta-store cache lifecycle: an append lands as a delta chunk, so the
+    immutable base's device blocks SURVIVE it (epoch-keyed caching — only
+    tail-overlapping entries are invalidated), while a DELETE rewrites rows
+    and must still free every block of the table."""
     li, types, scales = lineitem
     db = _mkdb(lineitem, GENEROUS)
     _run(db)
-    assert db.device_manager.resident_blocks > 0
+    before = db.device_manager.resident_blocks
+    assert before > 0
     db.append("lineitem", {c: np.asarray(v[:1]) for c, v in li.items()},
               types, scales)
+    t = db.catalog.table("lineitem")
+    assert t.delta_rows == 1           # the append took the delta path
+    assert db.device_manager.resident_blocks == before, \
+        "base-version blocks must survive a delta append"
+    db.delete("lineitem", Col("l_quantity") >= 0)
     assert db.device_manager.resident_blocks == 0
 
 

@@ -140,16 +140,20 @@ class TestPlanCache:
                 np.asarray(r2.columns[k].data))
         db.shutdown()
 
-    def test_append_invalidates(self):
+    def test_append_never_serves_stale_plan(self):
+        # a delta append does NOT eagerly flush the plan cache (the stale
+        # entry ages out by LRU); the (version, base_version, delta_epoch)
+        # key component alone must make it unreachable
         db = _mkdb()
         q = _q(db)
         q.execute()
         assert len(db.plan_cache) == 1
         db.append("t", {"k": np.array([1], dtype=np.int64),
                         "v": np.array([2.0])})
-        assert len(db.plan_cache) == 0
-        q.execute()
+        r = q.execute()
         assert db.last_stats.plan_cache_hit is False
+        # the appended row is visible through the fresh plan
+        assert int(np.asarray(r.columns["n"].data).sum()) == 50_001
         db.shutdown()
 
     def test_drop_table_invalidates(self):

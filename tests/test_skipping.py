@@ -338,8 +338,11 @@ class TestStaleness:
             "disc": np.zeros(extra), "tax": np.zeros(extra),
             "flag": ["A"] * extra, "status": ["F"] * extra,
         })
-        assert len(db.plan_cache) == 0   # explicit invalidation
+        # delta append: the stale entry ages out by LRU; the version-fenced
+        # key (version, base_version, delta_epoch) makes it unreachable,
+        # and the extended imprint covers the appended tail block
         assert _count(db, cut) == before + extra
+        assert db.last_stats.plan_cache_hit is False
         db.shutdown()
 
     def test_plan_cache_key_differs_on_version_and_flag(self):
