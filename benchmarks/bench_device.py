@@ -10,7 +10,12 @@ Three claims from the HBM tier (``core/device_cache.py`` +
   on the device tier by streaming morsel batches with LRU eviction and
   double-buffered prefetch, instead of bailing to the host tier;
 * **fallback** — a budget too small for even one batch routes the query to
-  the host tier (the prior behaviour for *every* over-budget input).
+  the host tier (the prior behaviour for *every* over-budget input);
+* **join** — a star join + group-by at build-key granularity through the
+  device join tier (``parallel.DistributedJoinAgg``): streamed-device must
+  beat the host-parallel hash join by > 1.5x (hot runs);
+* **sort** — the fused device lexsort (``kernels.sort.lexsort_indices``)
+  vs ``np.lexsort`` over the same float keys.
 
 Results land in ``BENCH_device.json`` (cwd) for machine consumption.
 """
@@ -118,9 +123,121 @@ def run(sf: float = 0.0) -> list[str]:
                         f"{res['cached_vs_cold_x']}x"))
     out_rows.append(row("device_streamed_vs_fallback", 0.0,
                         f"{res['streamed_vs_fallback_x']}x"))
+
+    # -- join tier: streamed device vs host-parallel hash join ---------------
+    res["join"] = _join_cell(out_rows)
+    # -- sort tier: fused device lexsort vs np.lexsort -----------------------
+    res["sort"] = _sort_cell(out_rows)
+
     with open("BENCH_device.json", "w") as f:
         json.dump(res, f, indent=1)
     return out_rows
+
+
+D_KEYS = 20_000
+JOIN_STREAM_BUDGET = 3 << 20     # < build matrix + carry: must stream
+
+
+def _mk_star(device_budget=None):
+    rng = np.random.default_rng(11)
+    db = startup(device_budget=device_budget, device_batch_rows=BATCH)
+    db.create_table("fact", {
+        "fk": rng.integers(0, D_KEYS, N).astype(np.int64),
+        "x": rng.uniform(0, 100, N),
+        "w": rng.integers(-50, 50, N).astype(np.int64),
+    })
+    db.create_table("dim", {
+        "k": np.arange(D_KEYS).astype(np.int64),
+        "grp": (np.arange(D_KEYS) % 25).astype(np.int64),
+    })
+    return db
+
+
+def _star_q(db):
+    return (db.scan("fact").filter(Col("x") > 5.0)
+            .join(db.scan("dim"), left_on="fk", right_on="k")
+            .group_by("fk", "grp")
+            .agg(s=("sum", "x"), c=("count", None)))
+
+
+def _join_cell(out_rows: list[str]) -> dict:
+    host = _mk_star()
+    t_host, _ = timeit(lambda: _star_q(host).execute(), hot=5)
+
+    dev = _mk_star(device_budget=RESIDENT_BUDGET)
+    t_res, _ = timeit(lambda: _star_q(dev).execute(distributed=True),
+                      hot=5)
+    assert dev.last_stats.device_tier == "join-resident"
+
+    sdev = _mk_star(device_budget=JOIN_STREAM_BUDGET)
+    t_str, _ = timeit(lambda: _star_q(sdev).execute(distributed=True),
+                      hot=5)
+    bst = sdev.buffer_manager.stats
+    assert sdev.last_stats.device_tier == "join-streamed"
+    assert bst.device_bytes_peak <= JOIN_STREAM_BUDGET
+
+    speedup = round(t_host / max(t_str, 1e-9), 2)
+    assert speedup > 1.5, speedup     # the tier's reason to exist
+    out_rows.append(row("join_host_parallel", t_host, f"rows={N}"))
+    out_rows.append(row("join_device_resident", t_res,
+                        f"{round(t_host / max(t_res, 1e-9), 2)}x"))
+    out_rows.append(row("join_device_streamed", t_str, f"{speedup}x"))
+    return {"rows": N, "dim_keys": D_KEYS,
+            "host_seconds": t_host, "resident_seconds": t_res,
+            "streamed_seconds": t_str,
+            "streamed_budget": JOIN_STREAM_BUDGET,
+            "streamed_bytes_peak": int(bst.device_bytes_peak),
+            "streamed_vs_host_x": speedup}
+
+
+SORT_GROUPS = 4_000              # <= MAX_DENSE_GROUPS: device-eligible
+
+
+def _sort_cell(out_rows: list[str]) -> dict:
+    """ORDER BY <agg> DESC LIMIT 10 over a grouped aggregate: the device
+    plan fuses the sort onto the assembly (``device_sorted`` — lexsort in
+    HBM, only the top-10 rows fetched) vs the host plan's suffix sort.
+    The raw kernel permutation is recorded as a sub-cell: standalone it
+    pays h2d for every key and loses to np.lexsort — fusion over already-
+    device-resident state is the whole point of the tier."""
+    from repro.kernels.sort.ops import lexsort_indices
+    rng = np.random.default_rng(7)
+    data = {"g": rng.integers(0, SORT_GROUPS, N).astype(np.int64),
+            "x": rng.uniform(0, 100, N)}
+
+    def mk(device_budget=None):
+        db = startup(device_budget=device_budget, device_batch_rows=BATCH)
+        db.create_table("s", data)
+        return db
+
+    def sq(db):
+        return (db.scan("s").group_by("g")
+                .agg(s=("sum", "x"), c=("count", None))
+                .order_by(("s", True), "g", limit=10))
+
+    host = mk()
+    t_host, _ = timeit(lambda: sq(host).execute(), hot=5)
+    dev = mk(device_budget=RESIDENT_BUDGET)
+    t_dev, _ = timeit(lambda: sq(dev).execute(distributed=True), hot=5)
+    st = dev.last_stats
+    assert st.device_tier == "resident" and st.device_sorted
+    speedup = round(t_host / max(t_dev, 1e-9), 2)
+    assert speedup > 1.0, speedup
+    out_rows.append(row("sort_host_suffix", t_host,
+                        f"groups={SORT_GROUPS}"))
+    out_rows.append(row("sort_device_fused", t_dev, f"{speedup}x"))
+
+    k0 = rng.standard_normal(N)
+    k1 = rng.integers(0, 1000, N).astype(np.float64)
+    t_np, _ = timeit(lambda: np.lexsort((k1, k0)), hot=5)
+    t_kr, _ = timeit(lambda: lexsort_indices((k0, k1)), hot=5)
+    out_rows.append(row("sort_np_lexsort_raw", t_np, f"rows={N}"))
+    out_rows.append(row("sort_device_lexsort_raw", t_kr,
+                        f"{round(t_np / max(t_kr, 1e-9), 2)}x"))
+    return {"rows": N, "groups": SORT_GROUPS,
+            "host_seconds": t_host, "device_seconds": t_dev,
+            "device_vs_host_x": speedup,
+            "raw_lexsort": {"np_seconds": t_np, "device_seconds": t_kr}}
 
 
 if __name__ == "__main__":

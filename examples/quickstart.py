@@ -209,6 +209,40 @@ print(dq.explain(physical=True, distributed=True))
 # The same text is recorded per query on ExecStats:
 print("last plan was:\n", hbm.last_stats.plan_repr)
 
+# --- device-tier joins and sorts --------------------------------------------
+# Aggregates over inner-join trees (the TPC-H Q3 shape) run on the device
+# too: each dimension build becomes a dense (key_domain, 1+payload) matrix
+# scatter-added in HBM, verified unique at runtime (duplicate build keys
+# fall back to the host join), then the fact table streams through a probe
+# step that gathers presence + payload per batch.  Assembly stays
+# device-resident — finalize, compact to present groups and, when the
+# ORDER BY maps onto group keys/aggregates, the lexsort permutation all
+# happen in HBM (ExecStats.device_sorted) and only the surviving top-N
+# rows are fetched.  EXPLAIN shows the join core as `:: device-join`
+# (mode=resident|streamed from the same byte model as scans) and a fused
+# sort as `:: device-sort`:
+star = startup(device_budget=32 << 20, device_batch_rows=16_384)
+star.create_table("dim_city", {
+    "c_id": np.arange(64, dtype=np.int64),     # matcher attributes columns
+    "c_pop": rng.integers(10_000, 9_000_000, 64),  # by name: keep them
+})                                                 # distinct across tables
+star.create_table("rides", {
+    "city_id": rng.integers(0, 64, n).astype(np.int64),
+    "fare": rng.gamma(3.0, 7.0, n),
+})
+jq = (star.scan("rides")
+      .join(star.scan("dim_city"), left_on="city_id", right_on="c_id")
+      .group_by("city_id", "c_pop")
+      .agg(rev=("sum", "fare"), nt=("count", None))
+      .order_by(("rev", True), limit=5))
+print(jq.explain(physical=True, distributed=True))
+top5 = jq.execute(distributed=True)
+print("top cities:", top5.to_pydict())
+print("join tier:", star.last_stats.device_tier,        # join-resident
+      "| sort fused on device:", star.last_stats.device_sorted,
+      "| peak device bytes:", star.last_stats.device_bytes_peak)
+star.shutdown()
+
 # --- imprint-driven data skipping -------------------------------------------
 # Paper §3.1's column imprints (per-2048-row zone maps: min/max + a 16-bin
 # presence bitmap) now feed the planner: plan_physical derives a per-scan

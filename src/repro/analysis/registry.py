@@ -88,7 +88,11 @@ CONTEXT_ACQUIRES = {"pinned", "query_scope", "admit"}
 # ---------------------------------------------------------------------------
 
 DISPATCH_PRODUCERS = {"_cached_batch_step", "_cached_query_step",
-                      "build_batch_step", "build_query_step"}
+                      "build_batch_step", "build_query_step",
+                      "_cached_join_build_step", "_cached_join_probe_step",
+                      "build_join_build_step", "build_join_probe_step",
+                      "_cached_scalar_step", "build_scalar_step",
+                      "_cached_assemble_step", "build_assemble_step"}
 DISPATCH_LOCK = "_DEVICE_DISPATCH_LOCK"
 
 # ---------------------------------------------------------------------------

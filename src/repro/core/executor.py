@@ -488,7 +488,10 @@ class ExecStats:
     repartitions: int = 0               # oversized partitions split again
     # device tier (device_cache.py / parallel.DistributedScanAgg): same
     # best-effort per-query deltas of the shared BufferStats counters
-    device_tier: str = ""               # "", "resident", "streamed"
+    device_tier: str = ""               # "", "resident", "streamed",
+                                        # "join-resident", "join-streamed"
+    device_sorted: bool = False         # ORDER BY fused onto the device
+                                        # assembly (host suffix sort skipped)
     device_cache_hits: int = 0          # blocks served without a transfer
     device_prefetch_hits: int = 0       # blocks whose copy was issued ahead
     device_evictions: int = 0           # blocks evicted under budget pressure

@@ -56,16 +56,20 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
+import math
+
 from .device_cache import (DeviceBlockKeys, DeviceBudgetError,
                            DeviceBufferManager)
 from .executor import Executor, _res_nulls, compile_plan
 from .expression import EvalContext, Expr, ExprResult
-from .physplan import (AGG_RESULT_NAME, PhysicalPlan, ScanAggSpec,
-                       TIER_DEVICE_RESIDENT, choose_device_tier,
+from .physplan import (AGG_RESULT_NAME, DeviceBuild, JoinAggSpec,
+                       PhysicalPlan, ScanAggSpec,
+                       TIER_DEVICE_RESIDENT, choose_device_join_tier,
+                       choose_device_tier, join_agg_geometry,
                        match_scan_agg,  # noqa: F401  (re-exported for tests)
                        mesh_shards, partial_layout, scan_agg_geometry)
 from .relalg import PlanNode
-from .types import DBType
+from .types import DBType, NULL_SENTINEL
 
 # The scan-agg pattern matcher, the partial-matrix layout, the batch
 # geometry and the tier-placement policy all live in physplan.py (the
@@ -147,6 +151,22 @@ def _fragment_partials(spec: ScanAggSpec, meta: dict, mask, gid, arrays,
                 v, gid, num_segments=spec.n_groups), data_axis)
         extras[out_col] = s
     return seg, extras
+
+
+def _join_edge_mask(arrays, meta: dict, mask, edge_cols, domains, btabs):
+    """Shared probe-side join gating: for each equi-join edge, exclude rows
+    whose local key is NULL, outside the build's dense domain, or absent
+    from the build table (presence lane 0 == 0).  The domain comparison
+    runs in float64 *before* the int32 narrowing — an out-of-domain key
+    must never alias a clipped in-domain code."""
+    for cname, (off, card), btab in zip(edge_cols, domains, btabs):
+        kv = arrays[cname]
+        sent = NULL_SENTINEL[meta[cname][0]]
+        codef = kv.astype(jnp.float64) - off
+        ok = (kv != sent) & (codef >= 0) & (codef < card)
+        code = jnp.clip(codef, 0, card - 1).astype(jnp.int32)
+        mask = mask & ok & (btab[code, 0] > 0)
+    return mask
 
 
 def make_fragment(spec: ScanAggSpec, meta: dict, data_axis: str = "data"):
@@ -237,7 +257,7 @@ _STEP_CACHE_LOCK = threading.Lock()
 _DEVICE_DISPATCH_LOCK = threading.Lock()
 
 
-def _meta_key(spec: ScanAggSpec, meta: dict) -> tuple:
+def _meta_key(columns, meta: dict) -> tuple:
     """The trace-relevant identity of each referenced column: dtype, scale
     and — for VARCHAR — the heap content fingerprint.  String literal
     codes and heap bounds are baked into jitted traces at Python time
@@ -245,7 +265,7 @@ def _meta_key(spec: ScanAggSpec, meta: dict) -> tuple:
     re-sorts/renumbers the whole heap, so a step compiled against the old
     heap must not be reused."""
     out = []
-    for c in spec.columns:
+    for c in columns:
         t, heap, scale = meta[c]
         out.append((c, t, scale,
                     heap.fingerprint() if heap is not None else None))
@@ -259,7 +279,7 @@ def _cached_query_step(spec: ScanAggSpec, meta: dict, mesh: Mesh, pad: int):
     key = (spec.table, repr(spec.conjuncts), tuple(spec.group_keys),
            tuple(spec.key_domains),     # baked into the trace as constants
            tuple((a.fn, repr(a.expr)) for a in spec.aggs),
-           _meta_key(spec, meta), spec.n_groups, pad,
+           _meta_key(spec.columns, meta), spec.n_groups, pad,
            id(mesh.devices.flat[0]),
            tuple(mesh.shape.items()))
     with _STEP_CACHE_LOCK:
@@ -326,24 +346,57 @@ def _mesh_axes(mesh: Mesh):
     return tuple(n for n in mesh.axis_names if n in ("pod", "data"))
 
 
-def build_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh):
+def _gather_expand(gather, inv, valid, cols):
+    """Reconstruct a shard's full batch rows from its gathered (compact)
+    blocks.  ``inv`` maps each of the shard's ``L`` skip-slots to its
+    position among the ``q`` uploaded candidate slots (-1 = not uploaded).
+    Filler rows get ``valid = False``, which is exactly the state the full
+    upload's rows would reach after masking: zone-map soundness guarantees
+    a non-candidate slot's rows all fail some conjunct, and a masked row
+    contributes the combine identity (+0.0 / +inf / -inf) no matter what
+    its column values are — so the gathered and full paths produce
+    bit-identical partials."""
+    q, ublock, n_slots = gather
+
+    def expand(comp, fill):
+        cb = comp.reshape(q, ublock)
+        idx = jnp.clip(inv, 0, q - 1)
+        rows = jnp.where((inv >= 0)[:, None], cb[idx],
+                         jnp.asarray(fill, dtype=comp.dtype))
+        return rows.reshape(n_slots * ublock)
+
+    return expand(valid, False), [expand(c, 0) for c in cols]
+
+
+def build_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
+                     gather=None):
     """(init_fn, step_fn): ``step(carry, valid, *cols) -> carry'`` — one
     jitted fused unit per batch: the shard_map partial fragment plus the
     carry combine (add / min / max per column).  The carry is replicated
     over the mesh; ``init_fn`` materializes the combine identity on device
-    (no host→device transfer beyond the compiled constant)."""
+    (no host→device transfer beyond the compiled constant).  With
+    ``gather`` (intra-batch skipping) the step instead takes
+    ``step(carry, inv, valid_compact, *cols_compact)`` and reconstructs
+    the full batch rows on device before the fragment runs."""
     axes = _mesh_axes(mesh)
     rowspec = P(axes if len(axes) > 1 else axes[0])
     layout = partial_layout(spec)
     frag = make_partial_fragment(spec, meta, data_axis=axes)
-    sm = _shard_map_compat(
-        lambda valid, *cols: frag(valid, **dict(zip(spec.columns, cols))),
-        mesh=mesh, in_specs=(rowspec,) * (1 + len(spec.columns)),
-        out_specs=P())
+    if gather is None:
+        def shard_fn(valid, *cols):
+            return frag(valid, **dict(zip(spec.columns, cols)))
+        n_in = 1 + len(spec.columns)
+    else:
+        def shard_fn(inv, valid, *cols):
+            v, full = _gather_expand(gather, inv, valid, cols)
+            return frag(v, **dict(zip(spec.columns, full)))
+        n_in = 2 + len(spec.columns)
+    sm = _shard_map_compat(shard_fn, mesh=mesh,
+                           in_specs=(rowspec,) * n_in, out_specs=P())
     kinds = layout.kinds
 
-    def step(carry, valid, *cols):
-        part = sm(valid, *cols)
+    def step(carry, *args):
+        part = sm(*args)
         return jnp.where(kinds == 0, carry + part,
                          jnp.where(kinds == 1, jnp.minimum(carry, part),
                                    jnp.maximum(carry, part)))
@@ -357,7 +410,7 @@ def build_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh):
 
 
 def _cached_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
-                       batch_rows: int):
+                       batch_rows: int, gather=None):
     key = ("batch", spec.table, repr(spec.conjuncts),
            tuple(spec.group_keys),
            tuple(spec.key_domains),     # baked into the trace as constants:
@@ -365,13 +418,337 @@ def _cached_batch_step(spec: ScanAggSpec, meta: dict, mesh: Mesh,
                                         # moving min/max at equal cardinality)
                                         # must not reuse the stale step
            tuple((a.fn, repr(a.expr)) for a in spec.aggs),
-           _meta_key(spec, meta),
-           spec.n_groups, batch_rows, id(mesh.devices.flat[0]),
+           _meta_key(spec.columns, meta),
+           spec.n_groups, batch_rows, gather,
+           id(mesh.devices.flat[0]),
            tuple(mesh.shape.items()))
     with _STEP_CACHE_LOCK:
         if key not in _STEP_CACHE:
-            _STEP_CACHE[key] = build_batch_step(spec, meta, mesh)
+            _STEP_CACHE[key] = build_batch_step(spec, meta, mesh,
+                                                gather=gather)
         return _STEP_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# device join tier: radix build / probe / device-resident assembly steps
+# ---------------------------------------------------------------------------
+
+
+def build_join_build_step(build: DeviceBuild, meta: dict, mesh: Mesh,
+                          child_domains, gather=None):
+    """(init_fn, step_fn) for one join build table:
+    ``step(btab, *child_btabs, valid, *cols) -> btab'``.
+
+    One batch of the build table's stream is filtered (its own conjuncts +
+    NULL/domain/presence gating against already-built child tables) and
+    scatter-added into the (card, 1 + n_payload) build matrix: lane 0
+    counts presence (the runtime uniqueness witness — any slot > 1 means
+    duplicate build keys and the query falls back to the host join), the
+    payload lanes hold the build's group-key columns as float64 (unique
+    keys make the add a set; the integer-coded payload types decode
+    exactly).  All-add combine: the same carry idiom as the scan-agg tier,
+    so dirty-writeback/eviction compose unchanged."""
+    axes = _mesh_axes(mesh)
+    rowspec = P(axes if len(axes) > 1 else axes[0])
+    off, card = build.domain
+    width = 1 + len(build.payload)
+    n_children = len(build.probe_edges)
+    edge_cols = [c for _, c in build.probe_edges]
+
+    def fragment(child_btabs, valid, *cols):
+        arrays = dict(zip(build.columns, cols))
+        mask = valid
+        for conj in build.conjuncts:
+            r = _eval_jnp(conj, arrays, meta)
+            m = r.values != 0
+            if r.null is not None:
+                m = m & ~r.null
+            mask = mask & m
+        kv = arrays[build.key]
+        sent = NULL_SENTINEL[meta[build.key][0]]
+        codef = kv.astype(jnp.float64) - off
+        mask = mask & (kv != sent) & (codef >= 0) & (codef < card)
+        code = jnp.clip(codef, 0, card - 1).astype(jnp.int32)
+        mask = _join_edge_mask(arrays, meta, mask, edge_cols,
+                               child_domains, child_btabs)
+        lanes = [mask.astype(jnp.float64)]
+        for p in build.payload:
+            lanes.append(jnp.where(mask, arrays[p].astype(jnp.float64),
+                                   0.0))
+        stacked = jnp.stack(lanes, axis=1)
+        seg = jax.ops.segment_sum(stacked, code, num_segments=card)
+        return jax.lax.psum(seg, axes)
+
+    if gather is None:
+        def shard_fn(*args):
+            return fragment(args[:n_children], args[n_children],
+                            *args[n_children + 1:])
+        n_rows_in = 1 + len(build.columns)
+    else:
+        def shard_fn(*args):
+            inv = args[n_children]
+            v, full = _gather_expand(gather, inv, args[n_children + 1],
+                                     args[n_children + 2:])
+            return fragment(args[:n_children], v, *full)
+        n_rows_in = 2 + len(build.columns)
+    sm = _shard_map_compat(
+        shard_fn, mesh=mesh,
+        in_specs=(P(),) * n_children + (rowspec,) * n_rows_in,
+        out_specs=P())
+
+    def step(btab, *args):
+        return btab + sm(*args)
+
+    rep_sh = NamedSharding(mesh, P())
+    init = jax.jit(lambda: jnp.zeros((card, width), dtype=jnp.float64)
+                   + jnp.float64(0.0), out_shardings=rep_sh)
+    return init, jax.jit(step, out_shardings=rep_sh)
+
+
+def _cached_join_build_step(build: DeviceBuild, meta: dict, mesh: Mesh,
+                            batch_rows: int, child_domains, gather=None):
+    key = ("jbuild", build.table, repr(build.conjuncts), build.key,
+           build.domain, tuple(build.payload), tuple(build.probe_edges),
+           tuple(child_domains), _meta_key(build.columns, meta),
+           batch_rows, gather, id(mesh.devices.flat[0]),
+           tuple(mesh.shape.items()))
+    with _STEP_CACHE_LOCK:
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = build_join_build_step(
+                build, meta, mesh, child_domains, gather=gather)
+        return _STEP_CACHE[key]
+
+
+def build_join_probe_step(spec: JoinAggSpec, meta: dict, mesh: Mesh,
+                          gather=None):
+    """(init_fn, step_fn) for the probe (fact) side of a device join:
+    ``step(carry, *edge_btabs, valid, *cols) -> carry'``.
+
+    The probe phase IS the scan-agg batch step over the probe table —
+    identical prologue, partials and carry combine — plus presence gating
+    through every probe-adjacent build matrix.  The gid is the group
+    build's key code; rows with NULL / out-of-domain / unmatched keys are
+    masked and contribute the combine identity."""
+    pspec = spec.probe_spec()
+    axes = _mesh_axes(mesh)
+    rowspec = P(axes if len(axes) > 1 else axes[0])
+    layout = partial_layout(pspec)
+    domains = [spec.builds[bi].domain for bi, _ in spec.probe_edges]
+    edge_cols = [c for _, c in spec.probe_edges]
+    n_children = len(spec.probe_edges)
+
+    def fragment(edge_btabs, valid, *cols):
+        arrays = dict(zip(pspec.columns, cols))
+        mask, gid = _fragment_mask_gid(pspec, meta, valid, arrays)
+        mask = _join_edge_mask(arrays, meta, mask, edge_cols, domains,
+                               edge_btabs)
+        seg, extras = _fragment_partials(pspec, meta, mask, gid, arrays,
+                                         axes)
+        if not extras:
+            return seg
+        ecols = [extras[c][:, None] for c in sorted(extras)]
+        return jnp.concatenate([seg] + ecols, axis=1)
+
+    if gather is None:
+        def shard_fn(*args):
+            return fragment(args[:n_children], args[n_children],
+                            *args[n_children + 1:])
+        n_rows_in = 1 + len(pspec.columns)
+    else:
+        def shard_fn(*args):
+            inv = args[n_children]
+            v, full = _gather_expand(gather, inv, args[n_children + 1],
+                                     args[n_children + 2:])
+            return fragment(args[:n_children], v, *full)
+        n_rows_in = 2 + len(pspec.columns)
+    sm = _shard_map_compat(
+        shard_fn, mesh=mesh,
+        in_specs=(P(),) * n_children + (rowspec,) * n_rows_in,
+        out_specs=P())
+    kinds = layout.kinds
+
+    def step(carry, *args):
+        part = sm(*args)
+        return jnp.where(kinds == 0, carry + part,
+                         jnp.where(kinds == 1, jnp.minimum(carry, part),
+                                   jnp.maximum(carry, part)))
+
+    rep_sh = NamedSharding(mesh, P())
+    g, k = pspec.n_groups, len(kinds)
+    init = jax.jit(lambda: jnp.broadcast_to(
+        jnp.asarray(layout.init), (g, k)) + jnp.float64(0.0),
+        out_shardings=rep_sh)
+    return init, jax.jit(step, out_shardings=rep_sh)
+
+
+def _cached_join_probe_step(spec: JoinAggSpec, meta: dict, mesh: Mesh,
+                            batch_rows: int, gather=None):
+    pspec = spec.probe_spec()
+    key = ("jprobe", spec.probe_table, repr(pspec.conjuncts),
+           tuple(pspec.group_keys), tuple(pspec.key_domains),
+           tuple((a.fn, repr(a.expr)) for a in pspec.aggs),
+           tuple(spec.probe_edges),
+           tuple(b.domain for b in spec.builds),
+           _meta_key(pspec.columns, meta), pspec.n_groups,
+           batch_rows, gather, id(mesh.devices.flat[0]),
+           tuple(mesh.shape.items()))
+    with _STEP_CACHE_LOCK:
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = build_join_probe_step(spec, meta, mesh,
+                                                     gather=gather)
+        return _STEP_CACHE[key]
+
+
+def build_scalar_step(kind: str):
+    """Tiny jitted reducers dispatched on device-resident state:
+    ``"present"`` counts non-empty groups of a carry (the dispatch key for
+    the exact-size compaction trace); ``"dupmax"`` is the max presence
+    count of a build matrix — the uniqueness verification the device join
+    tier's soundness rests on."""
+    if kind == "present":
+        return jax.jit(lambda m: jnp.sum(m[:, 0] > 0))
+    return jax.jit(lambda m: jnp.max(m[:, 0]))
+
+
+def _cached_scalar_step(kind: str):
+    key = ("scalar", kind)
+    with _STEP_CACHE_LOCK:
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = build_scalar_step(kind)
+        return _STEP_CACHE[key]
+
+
+def _finalize_rows_jnp(spec: ScanAggSpec, carry):
+    """Traced mirror of ``finalize_partials`` — identical formulas, jnp
+    ops — used by the device-resident assembly step so huge-group-domain
+    partial matrices are finalized and compacted in HBM without ever
+    materializing (n_groups, K) on the host."""
+    layout = partial_layout(spec)
+    cnt_star = carry[:, 0]
+    outs = {}
+    for i, kind, cnt_col, val_col in layout.plans:
+        if kind == "count_star":
+            outs[i] = cnt_star
+        elif kind == "count":
+            outs[i] = carry[:, cnt_col]
+        else:
+            cnt = carry[:, cnt_col]
+            v = carry[:, val_col]
+            outs[i] = jnp.where(
+                cnt > 0,
+                v if kind == "sum" else v / jnp.maximum(cnt, 1.0),
+                jnp.nan)
+    for i, _fn, cnt_col, out_col in layout.minmax:
+        outs[i] = jnp.where(carry[:, cnt_col] > 0, carry[:, out_col],
+                            jnp.nan)
+    cols = [outs[i] for i in range(len(spec.aggs))] + [cnt_star]
+    return jnp.stack(cols, axis=1)
+
+
+def _device_sort_key(v, dbt, scale: int, desc: bool):
+    """Traced mirror of ``executor._sort_key_float`` over a float64 copy
+    of an assembled output column — identical arithmetic, so the lexsort
+    permutation is identical to the host suffix sort's."""
+    v = v.astype(jnp.float64)
+    if dbt == DBType.VARCHAR:
+        k, nulls = v, v == 0
+    elif dbt == DBType.DECIMAL:
+        k = v / (10 ** scale)
+        nulls = v == NULL_SENTINEL[dbt]
+    elif dbt in (DBType.FLOAT64, DBType.FLOAT32):
+        k, nulls = v, jnp.isnan(v)
+    else:
+        k, nulls = v, v == NULL_SENTINEL[dbt]
+    return jnp.where(nulls, jnp.inf, -k if desc else k)
+
+
+def build_assemble_step(spec: ScanAggSpec, n_present: int, sort_cols,
+                        limit, n_payload: int):
+    """Device-resident assembly: finalize the carry, compact it to the
+    ``n_present`` non-empty groups, gather the group build's payload lanes
+    and — when an ORDER BY suffix was fused — compute the float sort keys
+    and the (top-``limit``) lexsort permutation, all in HBM.  Only the
+    compacted (and sorted) arrays are fetched to host.
+
+    ``sort_cols`` is a tuple of ``(source, dbtype, scale, desc)`` where
+    ``source`` is ``("digit", i)`` (mixed-radix group-key digit — for the
+    join tier the single digit IS the build key code), ``("payload", j)``
+    (a build payload lane) or ``("agg", i)``.  Returns
+    ``(gids, finalized_rows, payload_rows)``."""
+    doms = spec.key_domains
+
+    def assemble(carry, btab=None):
+        final = _finalize_rows_jnp(spec, carry)
+        if spec.group_keys:
+            gids = jnp.nonzero(carry[:, 0] > 0, size=n_present,
+                               fill_value=0)[0]
+        else:
+            gids = jnp.zeros(1, dtype=jnp.int64)
+        compact = final[gids]
+        pay = btab[gids, 1:] if n_payload else \
+            jnp.zeros((gids.shape[0], 0), dtype=jnp.float64)
+        if sort_cols:
+            rem = gids
+            digits = []
+            for off, card in reversed(doms):
+                digits.append(rem % card)
+                rem = rem // card
+            digits.reverse()
+            fkeys = []
+            for (src, dbt, scale, desc) in sort_cols:
+                if src[0] == "digit":
+                    i = src[1]
+                    v = digits[i].astype(jnp.float64)
+                    if dbt != DBType.VARCHAR:
+                        v = v + doms[i][0]
+                elif src[0] == "payload":
+                    v = pay[:, src[1]]
+                else:
+                    v = compact[:, src[1]]
+                fkeys.append(_device_sort_key(v, dbt, scale, desc))
+            perm = jnp.lexsort(tuple(reversed(fkeys)))
+            if limit is not None:
+                perm = perm[:limit]
+            gids, compact, pay = gids[perm], compact[perm], pay[perm]
+        return gids, compact, pay
+
+    return jax.jit(assemble)
+
+
+def _cached_assemble_step(spec: ScanAggSpec, n_present: int, sort_cols,
+                          limit, n_payload: int, mesh: Mesh):
+    key = ("assemble", spec.table, tuple(spec.group_keys),
+           tuple(spec.key_domains),
+           tuple((a.fn, repr(a.expr)) for a in spec.aggs),
+           spec.n_groups, n_present, sort_cols, limit, n_payload,
+           id(mesh.devices.flat[0]), tuple(mesh.shape.items()))
+    with _STEP_CACHE_LOCK:
+        if key not in _STEP_CACHE:
+            _STEP_CACHE[key] = build_assemble_step(
+                spec, n_present, sort_cols, limit, n_payload)
+        return _STEP_CACHE[key]
+
+
+# requires-lock: _DEVICE_DISPATCH_LOCK
+def _assemble_on_device(plan: tuple, mesh: Mesh, carry, btab=None):
+    """Device-resident assembly dispatch: count the present groups (the
+    exact-size key of the compaction trace), run the finalize / compact /
+    payload-gather / fused-sort step, fetch only the surviving rows.
+    ``plan`` is ``(pspec, sort_cols, limit, n_payload)`` — data, not a
+    closure, so the dispatch stays inside the lock-annotated call
+    graph."""
+    pspec, sort_cols, limit, n_payload = plan
+    present_fn = _cached_scalar_step("present")
+    n_present = int(present_fn(carry))
+    fn = _cached_assemble_step(pspec, n_present, tuple(sort_cols), limit,
+                               n_payload, mesh)
+    gids, vals, pay = fn(carry) if btab is None else fn(carry, btab)
+    return np.asarray(gids), np.asarray(vals), np.asarray(pay)
+
+
+class _DeviceJoinFallback(Exception):
+    """Raised when a runtime precondition of the device join fails
+    (duplicate build keys); the executor falls back to the host join."""
 
 
 class DistributedScanAgg:
@@ -451,6 +828,51 @@ class DistributedScanAgg:
             b for b in range(self.n_batches)
             if skip_set is None or skip_set.batch_qualifies(
                 b * m, min(self.n_rows, b * m + m))]
+        # intra-batch skipping (gather): a *boundary* batch — one the zone
+        # maps could not skip whole — usually still contains non-candidate
+        # imprint blocks.  Cut each shard's slice into L skip-aligned slots
+        # and upload only the candidate slots (padded to q, one gather
+        # trace for every gathered batch) plus a tiny (L,)-per-shard int32
+        # inverse map; the step reconstructs full rows on device
+        # (``_gather_expand``).  Per-batch layout choice: a batch whose
+        # every slot qualifies keeps the plain full-batch trace — only
+        # batches with actual gaps pay the gather indirection, and only
+        # when q < L (the compact upload is strictly smaller).
+        self.shards = mesh_shards(mesh)
+        self.gather = None
+        self._gather_sel: dict = {}
+        if skip_set is not None and self.live_batches:
+            local = self.batch_rows // self.shards
+            ublock = math.gcd(skip_set.block, local)
+            L = local // ublock
+            if L > 1:
+                sels = {}
+                maxq = 0
+                for b in self.live_batches:
+                    s0 = b * self.batch_rows
+                    e = min(self.n_rows, s0 + self.batch_rows)
+                    per_shard = []
+                    batch_max = 0
+                    for sdx in range(self.shards):
+                        sel = []
+                        for slot in range(L):
+                            ss = s0 + sdx * local + slot * ublock
+                            if ss >= e:       # padding rows: never upload
+                                continue
+                            if skip_set.batch_qualifies(
+                                    ss, min(ss + ublock, e)):
+                                sel.append(slot)
+                        per_shard.append(tuple(sel))
+                        batch_max = max(batch_max, len(sel))
+                    if batch_max < L:         # this batch has gaps: gather
+                        sels[b] = tuple(per_shard)
+                        maxq = max(maxq, batch_max)
+                q = 1
+                while q < maxq:
+                    q *= 2
+                if sels and q < L:
+                    self.gather = (q, ublock, L)
+                    self._gather_sel = sels
         self.meta = {}
         for c in spec.columns:
             col = self.table.column(c)
@@ -479,8 +901,59 @@ class DistributedScanAgg:
         m = self.batch_rows
         s = b * m
         e = min(self.n_rows, s + m)
-        shard = (self.mesh_key, m, b)
         vkey = self._batch_version_key(b)
+        if b in self._gather_sel:
+            # gathered (compact) layout: per shard, q candidate slots of
+            # ublock rows each, plus the (L,)-per-shard inverse map.  The
+            # selection joins the shard key — two queries whose conjuncts
+            # pick different candidate slots must not alias blocks.
+            q, ublock, L = self.gather
+            sel = self._gather_sel[b]
+            local = m // self.shards
+            shard = (self.mesh_key, m, b, "g", q, sel)
+
+            def slot_span(sdx, slot):
+                ss = s + sdx * local + slot * ublock
+                return ss, max(0, min(ss + ublock, e) - ss)
+
+            def binv():
+                a = np.full(self.shards * L, -1, dtype=np.int32)
+                for sdx, ssel in enumerate(sel):
+                    for j, slot in enumerate(ssel):
+                        a[sdx * L + slot] = j
+                return a
+
+            yield (DeviceBlockKeys.column(spec.table, "#ginv", vkey,
+                                          shard), binv)
+
+            def bvalid():
+                a = np.zeros(self.shards * q * ublock, dtype=bool)
+                for sdx, ssel in enumerate(sel):
+                    base = sdx * q * ublock
+                    for j, slot in enumerate(ssel):
+                        _, nv = slot_span(sdx, slot)
+                        a[base + j * ublock:base + j * ublock + nv] = True
+                return a
+
+            yield DeviceBlockKeys.valid(spec.table, vkey, shard), bvalid
+            for c in spec.columns:
+                col = table.column(c)
+
+                def bcol(col=col):
+                    a = np.zeros(self.shards * q * ublock,
+                                 dtype=col.data.dtype)
+                    for sdx, ssel in enumerate(sel):
+                        base = sdx * q * ublock
+                        for j, slot in enumerate(ssel):
+                            ss, nv = slot_span(sdx, slot)
+                            a[base + j * ublock:base + j * ublock + nv] \
+                                = col.data[ss:ss + nv]
+                    return a
+
+                yield (DeviceBlockKeys.column(spec.table, c, vkey, shard),
+                       bcol)
+            return
+        shard = (self.mesh_key, m, b)
 
         def bvalid():
             a = np.zeros(m, dtype=bool)
@@ -540,8 +1013,78 @@ class DistributedScanAgg:
             prefetched.add(key)
             query_keys.add(key)
 
+    def _account_skipping(self) -> None:
+        """Bump what the zone maps saved: every block of every whole
+        skipped batch would have been padded to batch_rows and uploaded.
+        A skipped batch contributes exactly the carry-combine identity
+        (+0 / +inf / -inf): not running its step leaves the carry
+        bit-identical to running it."""
+        live = self.live_batches
+        if len(live) >= self.n_batches:
+            return
+        blk = self.skip_set.block
+        live_set = set(live)
+        skipped_blocks = 0
+        for b in range(self.n_batches):
+            if b in live_set:
+                continue
+            s = b * self.batch_rows
+            e = min(self.n_rows, s + self.batch_rows)
+            skipped_blocks += -(-(e - s) // blk)
+        self.devman.bump(
+            blocks_skipped=skipped_blocks,
+            bytes_skipped_h2d=(self.n_batches - len(live))
+            * self.batch_rows * self.row_bytes)
+
+    # requires-lock: _DEVICE_DISPATCH_LOCK
+    def _stream_batches(self, sh, query_keys: set, pinned: set,
+                        prefetched: set):
+        """Generator driving the live batches through the block cache:
+        yields ``(b, arrs, nxt)`` per batch — the batch index (the
+        caller picks the gathered or full step trace by membership in
+        ``_gather_sel``), the device block handles (pinned), and the NEXT
+        live batch index (None on the last batch).  The caller pins its
+        own carry state *before* calling ``_issue_prefetch(nxt, ...)``
+        (so double-buffering can never evict it), dispatches its step,
+        and resumes the generator, which unpins the consumed batch.
+        Shared by the scan-agg carry loop and the join tier's
+        build/probe streams."""
+        devman = self.devman
+        self._account_skipping()
+        live = self.live_batches
+        for i, b in enumerate(live):
+            arrs = []
+            batch_keys = []
+            for key, build in self._builders(b):
+                if key in prefetched:
+                    prefetched.discard(key)         # pinned at issue
+                    arr = devman.peek(key)
+                    devman.bump(device_prefetch_hits=1)
+                else:
+                    # single-flight: a concurrent query needing the
+                    # same block attaches to one in-flight upload
+                    # instead of issuing its own (shared morsel scans)
+                    arr = devman.get_or_put(key, build, sharding=sh,
+                                            pin=True)
+                pinned.add(key)
+                query_keys.add(key)
+                batch_keys.append(key)
+                arrs.append(arr)
+            if b in self._gather_sel:
+                # intra-batch savings, counted at consumption: the full
+                # upload would have moved L slots per shard, the gathered
+                # one moves q — whether the blocks were cache hits or not
+                q, ublock, L = self.gather
+                devman.bump(bytes_skipped_h2d=(L - q) * ublock
+                            * self.shards * self.row_bytes)
+
+            yield b, arrs, (live[i + 1] if i + 1 < len(live) else None)
+            for key in batch_keys:
+                devman.unpin(key)
+                pinned.discard(key)
+
     # -- execution ------------------------------------------------------------
-    def run(self, tier: Optional[str] = None) -> np.ndarray:
+    def run(self, tier: Optional[str] = None, assemble=None):
         tier = tier or self.choose_tier()
         if tier == "host":
             raise DeviceBudgetError("input does not fit the device tier")
@@ -550,13 +1093,22 @@ class DistributedScanAgg:
         # _DEVICE_DISPATCH_LOCK).  Cross-query sharing still happens — a
         # later query attaches to this one's cached blocks via get_or_put
         with _DEVICE_DISPATCH_LOCK:
-            return self._run_locked(tier)
+            return self._run_locked(tier, assemble=assemble)
 
-    def _run_locked(self, tier: str) -> np.ndarray:  # requires-lock: _DEVICE_DISPATCH_LOCK
+    def _run_locked(self, tier: str, assemble=None):  # requires-lock: _DEVICE_DISPATCH_LOCK
+        """Merge every live batch into the carry; then either fetch +
+        finalize on host (default) or run the device-resident assembly
+        described by the ``assemble`` plan tuple (the carry never reaches
+        the host as a full (n_groups, K) matrix on that path)."""
         devman = self.devman
         spec = self.spec
         init_fn, step = _cached_batch_step(spec, self.meta, self.mesh,
                                            self.batch_rows)
+        step_g = None
+        if self.gather is not None:
+            _, step_g = _cached_batch_step(spec, self.meta, self.mesh,
+                                           self.batch_rows,
+                                           gather=self.gather)
         axes = _mesh_axes(self.mesh)
         sh = NamedSharding(self.mesh, P(axes if len(axes) > 1 else axes[0]))
         rep_sh = NamedSharding(self.mesh, P())
@@ -567,44 +1119,8 @@ class DistributedScanAgg:
         try:
             carry = devman.adopt(carry_key, init_fn(),
                                  nbytes=self.carry_nbytes, dirty=True)
-            live = self.live_batches
-            if len(live) < self.n_batches:
-                # a skipped batch contributes exactly the carry-combine
-                # identity (+0 / +inf / -inf): not running its step leaves
-                # the carry bit-identical to running it.  Account what the
-                # zone maps saved: every block of every skipped batch would
-                # have been padded to batch_rows and uploaded.
-                blk = self.skip_set.block
-                live_set = set(live)
-                skipped_blocks = 0
-                for b in range(self.n_batches):
-                    if b in live_set:
-                        continue
-                    s = b * self.batch_rows
-                    e = min(self.n_rows, s + self.batch_rows)
-                    skipped_blocks += -(-(e - s) // blk)
-                devman.bump(
-                    blocks_skipped=skipped_blocks,
-                    bytes_skipped_h2d=(self.n_batches - len(live))
-                    * self.batch_rows * self.row_bytes)
-            for i, b in enumerate(live):
-                arrs = []
-                batch_keys = []
-                for key, build in self._builders(b):
-                    if key in prefetched:
-                        prefetched.discard(key)         # pinned at issue
-                        arr = devman.peek(key)
-                        devman.bump(device_prefetch_hits=1)
-                    else:
-                        # single-flight: a concurrent query needing the
-                        # same block attaches to one in-flight upload
-                        # instead of issuing its own (shared morsel scans)
-                        arr = devman.get_or_put(key, build, sharding=sh,
-                                                pin=True)
-                    pinned.add(key)
-                    query_keys.add(key)
-                    batch_keys.append(key)
-                    arrs.append(arr)
+            for b, arrs, nxt in self._stream_batches(
+                    sh, query_keys, pinned, prefetched):
                 # the carry is unpinned between batches so a tight budget
                 # may have evicted it (writeback); re-upload before use
                 if carry_key not in devman:
@@ -612,16 +1128,15 @@ class DistributedScanAgg:
                     carry = devman.put(carry_key, host, sharding=rep_sh,
                                        pin=False, dirty=True)
                 devman.pin(carry_key)
-                if i + 1 < len(live):
-                    self._issue_prefetch(live[i + 1], prefetched,
-                                         query_keys, sh)
-                carry = step(carry, *arrs)              # async dispatch
+                if nxt is not None:
+                    self._issue_prefetch(nxt, prefetched, query_keys, sh)
+                st = step_g if b in self._gather_sel else step
+                carry = st(carry, *arrs)                # async dispatch
                 devman.unpin(carry_key)
                 devman.adopt(carry_key, carry, nbytes=self.carry_nbytes,
                              dirty=True)
-                for key in batch_keys:
-                    devman.unpin(key)
-                    pinned.discard(key)
+            if assemble is not None:
+                return _assemble_on_device(assemble, self.mesh, carry)
             out = devman.take_host(carry_key)   # blocks: the final fence
             return finalize_partials(spec, out)
         finally:
@@ -631,6 +1146,153 @@ class DistributedScanAgg:
             if devman.budget is None:
                 # zero-config: no silent device-memory growth across
                 # queries — cross-query caching is a budgeted feature
+                for key in query_keys:
+                    devman.drop(key)
+
+
+class DistributedJoinAgg:
+    """Streamed device-tier execution of one Aggregate(inner-join tree).
+
+    Orchestrates per-table ``DistributedScanAgg`` block streams through the
+    shared ``DeviceBufferManager``: build matrices are populated bottom-up
+    (each build's batches probe the already-built child matrices, so
+    semi-join filtering folds into the build itself), verified unique
+    (``dupmax`` — a duplicate build key would double-count and falls back
+    to the host join), then the probe table streams through the scan-agg
+    carry loop with presence gating against every probe-adjacent matrix.
+    Assembly is device-resident: the caller's ``assemble`` plan tuple
+    drives ``_assemble_on_device`` — finalize/compact/sort happen in HBM
+    and only the surviving rows are fetched; the (n_groups, K) carry and
+    the (card, 1+P) group-build matrix never materialize on host."""
+
+    def __init__(self, db, spec: JoinAggSpec, mesh: Mesh,
+                 batch_rows: Optional[int] = None, skip_sets=None):
+        self.db = db
+        self.spec = spec
+        self.mesh = mesh
+        skip_sets = skip_sets or {}
+        self.pspec = spec.probe_spec()
+        self.probe = DistributedScanAgg(
+            db, self.pspec, mesh, batch_rows=batch_rows,
+            skip_set=skip_sets.get(spec.probe_table))
+        self.devman = self.probe.devman
+        # build-side streams: bare column streams (no grouping) — the
+        # jitted build step applies the build's own conjuncts; a build
+        # skip-set is sound because a masked row scatter-adds zero
+        self.builds = [
+            DistributedScanAgg(
+                db, ScanAggSpec(b.table, [], [], [], [], 1,
+                                list(b.columns)),
+                mesh, batch_rows=batch_rows,
+                skip_set=skip_sets.get(b.table))
+            for b in spec.builds]
+        geom = join_agg_geometry(spec, db.catalog, mesh_shards(mesh),
+                                 batch_rows)
+        self.resident_bytes = geom.resident_bytes
+        self.working_bytes = geom.working_bytes
+        self.delta_rows = self.probe.delta_rows \
+            + sum(s.delta_rows for s in self.builds)
+
+    def choose_mode(self) -> str:
+        return choose_device_join_tier(
+            self.resident_bytes, self.working_bytes, self.devman.budget,
+            getattr(self.db, "memory_budget", None))
+
+    def run(self, mode: Optional[str] = None, assemble=None):
+        mode = mode or self.choose_mode()
+        if mode == "host":
+            raise DeviceBudgetError("join does not fit the device tier")
+        with _DEVICE_DISPATCH_LOCK:
+            return self._run_locked(assemble)
+
+    def _run_locked(self, assemble):  # requires-lock: _DEVICE_DISPATCH_LOCK
+        devman = self.devman
+        mesh = self.mesh
+        axes = _mesh_axes(mesh)
+        sh = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+        rep_sh = NamedSharding(mesh, P())
+        dup = _cached_scalar_step("dupmax")
+        query_keys: set = set()
+        pinned: set = set()
+        prefetched: set = set()
+        btab_keys: list = []
+        btabs: list = []
+        carry_key = DeviceBlockKeys.carry()
+        query_keys.add(carry_key)
+        try:
+            for b, stream in zip(self.spec.builds, self.builds):
+                child_idx = [ci for ci, _ in b.probe_edges]
+                child_domains = tuple(self.spec.builds[ci].domain
+                                      for ci in child_idx)
+                init_fn, step = _cached_join_build_step(
+                    b, stream.meta, mesh, stream.batch_rows,
+                    child_domains)
+                step_g = None
+                if stream.gather is not None:
+                    _, step_g = _cached_join_build_step(
+                        b, stream.meta, mesh, stream.batch_rows,
+                        child_domains, gather=stream.gather)
+                key = DeviceBlockKeys.carry()
+                btab_keys.append(key)
+                query_keys.add(key)
+                children = [btabs[ci] for ci in child_idx]
+                # build matrices stay pinned for the whole query: later
+                # builds and every probe batch read them (the planner
+                # reserved state_bytes for exactly this residency)
+                btab = devman.adopt(key, init_fn(), nbytes=b.table_bytes,
+                                    dirty=True, pin=True)
+                for bb, arrs, nxt in stream._stream_batches(
+                        sh, query_keys, pinned, prefetched):
+                    if nxt is not None:
+                        stream._issue_prefetch(nxt, prefetched,
+                                               query_keys, sh)
+                    st = step_g if bb in stream._gather_sel else step
+                    btab = st(btab, *children, *arrs)
+                    devman.adopt(key, btab, nbytes=b.table_bytes,
+                                 dirty=True, pin=True)
+                # runtime uniqueness witness: the single-key gid is only
+                # sound for unique build keys (one code, one group/row)
+                if float(dup(btab)) > 1.0:
+                    raise _DeviceJoinFallback(
+                        f"duplicate join keys in build table {b.table}")
+                btabs.append(btab)
+            init_fn, pstep = _cached_join_probe_step(
+                self.spec, self.probe.meta, mesh, self.probe.batch_rows)
+            pstep_g = None
+            if self.probe.gather is not None:
+                _, pstep_g = _cached_join_probe_step(
+                    self.spec, self.probe.meta, mesh,
+                    self.probe.batch_rows, gather=self.probe.gather)
+            edge_btabs = [btabs[bi] for bi, _ in self.spec.probe_edges]
+            carry = devman.adopt(carry_key, init_fn(),
+                                 nbytes=self.probe.carry_nbytes,
+                                 dirty=True)
+            for bb, arrs, nxt in self.probe._stream_batches(
+                    sh, query_keys, pinned, prefetched):
+                if carry_key not in devman:
+                    host = devman.take_host(carry_key)
+                    carry = devman.put(carry_key, host, sharding=rep_sh,
+                                       pin=False, dirty=True)
+                devman.pin(carry_key)
+                if nxt is not None:
+                    self.probe._issue_prefetch(nxt, prefetched,
+                                               query_keys, sh)
+                st = pstep_g if bb in self.probe._gather_sel else pstep
+                carry = st(carry, *edge_btabs, *arrs)
+                devman.unpin(carry_key)
+                devman.adopt(carry_key, carry,
+                             nbytes=self.probe.carry_nbytes, dirty=True)
+            gb = self.spec.group_build
+            return _assemble_on_device(
+                assemble, mesh, carry,
+                btabs[gb] if gb is not None else None)
+        finally:
+            for key in pinned | prefetched:
+                devman.unpin(key)
+            for key in btab_keys + [carry_key]:
+                devman.unpin(key)
+                devman.drop(key)
+            if devman.budget is None:
                 for key in query_keys:
                     devman.drop(key)
 
@@ -700,13 +1362,39 @@ class ParallelExecutor(Executor):
         self._plan_feedback(plan, True)
         return result
 
+    @staticmethod
+    def _stats_window():
+        from .executor import (DEVICE_DELTA_FIELDS, INGEST_DELTA_FIELDS,
+                               SKIP_DELTA_FIELDS, stats_base)
+        fields = DEVICE_DELTA_FIELDS + SKIP_DELTA_FIELDS \
+            + INGEST_DELTA_FIELDS
+        return fields, stats_base
+
+    def _claim_device(self, tier: str, fields, base, end, dm,
+                      device_sorted: bool) -> None:
+        # claim the device tier only once the WHOLE query succeeded: a
+        # suffix failure falls back to a full host recompute, and
+        # device_tier / distributed_hits must describe the result returned
+        self.distributed_hits += 1
+        self.stats.device_tier = tier
+        self.stats.device_sorted = device_sorted
+        for f, b, e in zip(fields, base, end):
+            setattr(self.stats, f, getattr(self.stats, f) + e - b)
+        # lifetime gauge, reported only by queries that ran on the device
+        # tier (host-tier queries keep 0 alongside device_tier == "")
+        self.stats.device_bytes_peak = dm.device_bytes_peak
+
     # -- distributed scan-agg -------------------------------------------------
     def _try_distributed(self, phys: PhysicalPlan):
-        """Run the physical plan's scan-agg core through the device tier
-        (the tier the planner annotated), then the host-side suffix
-        (ORDER BY / LIMIT / projection / HAVING) over the assembled
-        aggregate; None means a runtime lowering gap — the caller falls
-        back to the host program."""
+        """Run the physical plan's core through the device tier (the tier
+        the planner annotated), then the host-side suffix (ORDER BY /
+        LIMIT / projection / HAVING) over the assembled aggregate — unless
+        the sort was fused onto the device (``sort_on_device``), in which
+        case assembly returns already-ordered rows and the suffix is
+        skipped entirely; None means a runtime lowering gap — the caller
+        falls back to the host program."""
+        if phys.join_agg is not None:
+            return self._try_join(phys)
         spec = phys.scan_agg
         table = self.db.catalog.table(spec.table)
         try:
@@ -718,38 +1406,146 @@ class ParallelExecutor(Executor):
             return None
         tier = "resident" if phys.agg_tier == TIER_DEVICE_RESIDENT \
             else "streamed"
-        from .executor import (DEVICE_DELTA_FIELDS, INGEST_DELTA_FIELDS,
-                               SKIP_DELTA_FIELDS, stats_base)
-        fields = DEVICE_DELTA_FIELDS + SKIP_DELTA_FIELDS + INGEST_DELTA_FIELDS
+        fields, stats_base = self._stats_window()
         dm = agg.devman.stats
         base = stats_base(dm, fields)
+        assemble = None
+        if phys.sort_on_device:
+            sort_cols = self._sort_cols_scan(spec, table,
+                                             phys.sort_node.keys)
+            if sort_cols is not None:
+                assemble = self._device_assemble(
+                    spec, sort_cols, phys.sort_node.limit, 0)
         try:
-            out = agg.run(tier)
+            out = agg.run(tier, assemble=assemble)
         except Exception:
             return None      # fall back to the host tier on any lowering gap
         if agg.delta_rows:
             # merge-on-read visibility: the scan consumed a delta tail
             agg.devman.bump(delta_rows=agg.delta_rows)
-        result = self._assemble(spec, out, table)
+        if assemble is not None:
+            gids, vals, _pay = out
+            result = self._assemble(spec, vals, table, gids=gids)
+        else:
+            result = self._assemble(spec, out, table)
         # close the device-counter window BEFORE the suffix runs (its host
-        # program threads the same delta fields through run_program)...
+        # program threads the same delta fields through run_program)
         end = stats_base(dm, fields)
-        if phys.suffix_plan is not None:
+        if phys.suffix_plan is not None and assemble is None:
             try:
                 result = self._run_suffix(phys.suffix_plan, result)
             except Exception:
                 return None  # suffix gap: host program recomputes everything
-        # ...but claim the device tier only once the WHOLE query succeeded:
-        # a suffix failure falls back to a full host recompute, and
-        # device_tier / distributed_hits must describe the result returned
-        self.distributed_hits += 1
-        self.stats.device_tier = tier
-        for f, b, e in zip(fields, base, end):
-            setattr(self.stats, f, getattr(self.stats, f) + e - b)
-        # lifetime gauge, reported only by queries that ran on the device
-        # tier (host-tier queries keep 0 alongside device_tier == "")
-        self.stats.device_bytes_peak = dm.device_bytes_peak
+        self._claim_device(tier, fields, base, end, dm,
+                           device_sorted=assemble is not None)
         return result
+
+    # -- distributed join-agg -------------------------------------------------
+    def _try_join(self, phys: PhysicalPlan):
+        """Run the physical plan's join-agg core through the device join
+        tier: builds bottom-up, probe stream, device-resident assembly
+        (finalize + compact + fused ORDER BY all in HBM)."""
+        jspec = phys.join_agg
+        tables = [jspec.probe_table] + [b.table for b in jspec.builds]
+        try:
+            agg = DistributedJoinAgg(
+                self.db, jspec, self._default_mesh(),
+                batch_rows=getattr(self.db, "device_batch_rows", None),
+                skip_sets={t: phys.skip_set_for_table(t) for t in tables})
+        except Exception:
+            return None
+        mode = phys.join_mode or "streamed"
+        fields, stats_base = self._stats_window()
+        dm = agg.devman.stats
+        base = stats_base(dm, fields)
+        gb = jspec.group_build
+        n_payload = len(jspec.builds[gb].payload) if gb is not None else 0
+        sort_cols, limit = (), None
+        if phys.sort_on_device:
+            sort_cols = self._sort_cols_join(jspec, phys.sort_node.keys)
+            if sort_cols is None:
+                sort_cols = ()
+            else:
+                limit = phys.sort_node.limit
+        device_sorted = bool(sort_cols)
+        assemble = self._device_assemble(agg.pspec, sort_cols, limit,
+                                         n_payload)
+        try:
+            gids, vals, pay = agg.run(mode, assemble=assemble)
+        except _DeviceJoinFallback:
+            return None     # duplicate build keys: host join is the truth
+        except Exception:
+            return None     # fall back to the host tier on any lowering gap
+        if agg.delta_rows:
+            agg.devman.bump(delta_rows=agg.delta_rows)
+        result = self._assemble_join(jspec, gids, vals, pay)
+        end = stats_base(dm, fields)
+        if phys.suffix_plan is not None and not device_sorted:
+            try:
+                result = self._run_suffix(phys.suffix_plan, result)
+            except Exception:
+                return None
+        self._claim_device("join-" + mode, fields, base, end, dm,
+                           device_sorted=device_sorted)
+        return result
+
+    # -- device-resident assembly ---------------------------------------------
+    def _device_assemble(self, pspec: ScanAggSpec, sort_cols, limit,
+                         n_payload: int):
+        """Assembly plan handed to the stream's ``run``: plain data (spec,
+        sort sources, limit, payload width) that ``_assemble_on_device``
+        turns into the finalize/compact/fused-sort dispatch under the
+        stream's dispatch lock; only the compacted result rows come to
+        host."""
+        return (pspec, tuple(sort_cols), limit, n_payload)
+
+    def _sort_cols_scan(self, spec: ScanAggSpec, table, keys):
+        """Map ORDER BY keys of a scan-agg core onto assembly sort sources
+        (group-key digit or agg column); None when a key is unmappable."""
+        cols = []
+        agg_names = [a.name for a in spec.aggs]
+        for col, desc in keys:
+            if col in spec.group_keys:
+                c = table.column(col)
+                cols.append((("digit", spec.group_keys.index(col)),
+                             c.dbtype, c.scale, bool(desc)))
+            elif col in agg_names:
+                i = agg_names.index(col)
+                dbt = DBType.INT64 if spec.aggs[i].fn == "count" \
+                    else DBType.FLOAT64
+                cols.append((("agg", i), dbt, 0, bool(desc)))
+            else:
+                return None
+        return tuple(cols)
+
+    def _sort_cols_join(self, jspec: JoinAggSpec, keys):
+        """Join-core ORDER BY keys: group keys resolve through
+        ``group_sources`` — the build key digit or a payload lane of the
+        group build's matrix."""
+        gb = jspec.builds[jspec.group_build] \
+            if jspec.group_build is not None else None
+        cols = []
+        agg_names = [a.name for a in jspec.aggs]
+        for col, desc in keys:
+            if col in jspec.group_keys:
+                src = jspec.group_sources[jspec.group_keys.index(col)]
+                if src[0] == "key":
+                    c = self.db.catalog.table(gb.table).column(gb.key)
+                    cols.append((("digit", 0), c.dbtype, c.scale,
+                                 bool(desc)))
+                else:
+                    c = self.db.catalog.table(gb.table).column(
+                        gb.payload[src[1]])
+                    cols.append((("payload", src[1]), c.dbtype, c.scale,
+                                 bool(desc)))
+            elif col in agg_names:
+                i = agg_names.index(col)
+                dbt = DBType.INT64 if jspec.aggs[i].fn == "count" \
+                    else DBType.FLOAT64
+                cols.append((("agg", i), dbt, 0, bool(desc)))
+            else:
+                return None
+        return tuple(cols)
 
     def _run_suffix(self, suffix_plan: PlanNode, table):
         """Execute the suffix operators over the assembled aggregate: a
@@ -763,13 +1559,20 @@ class ParallelExecutor(Executor):
         prog = compile_plan(suffix_plan, sdb.catalog)
         return sub.run_program(prog)
 
-    def _assemble(self, spec: ScanAggSpec, out: np.ndarray, table):
+    def _assemble(self, spec: ScanAggSpec, out: np.ndarray, table,
+                  gids: Optional[np.ndarray] = None):
         from .column import Column
         from .table import Table
         from .types import ColumnSchema, TableSchema
-        cnt_star = out[:, -1]
-        present = cnt_star > 0 if spec.group_keys else np.ones(1, bool)
-        gids = np.nonzero(present)[0]
+        if gids is None:
+            cnt_star = out[:, -1]
+            present = cnt_star > 0 if spec.group_keys else np.ones(1, bool)
+            gids = np.nonzero(present)[0]
+            vals = out[gids]
+        else:
+            # device-resident assembly already compacted (and ordered)
+            # the rows; ``out`` is (n_present, n_aggs + 1)
+            vals = out
         cols = {}
         schemas = []
         # reconstruct key values from the mixed-radix gid
@@ -784,19 +1587,58 @@ class ParallelExecutor(Executor):
                                      digits):
             col = table.column(k)
             if col.dbtype == DBType.VARCHAR:
-                vals = d.astype(np.int32)
-                cols[k] = Column(DBType.VARCHAR, vals, heap=col.heap)
+                kv = d.astype(np.int32)
+                cols[k] = Column(DBType.VARCHAR, kv, heap=col.heap)
             else:
-                vals = (d + off).astype(col.data.dtype)
-                cols[k] = Column(col.dbtype, vals, scale=col.scale)
+                kv = (d + off).astype(col.data.dtype)
+                cols[k] = Column(col.dbtype, kv, scale=col.scale)
             schemas.append(ColumnSchema(k, col.dbtype, scale=col.scale))
         for i, a in enumerate(spec.aggs):
-            v = out[gids, i]
+            v = vals[:, i]
             if a.fn == "count":
                 cols[a.name] = Column(DBType.INT64, v.astype(np.int64))
                 schemas.append(ColumnSchema(a.name, DBType.INT64))
             else:
                 cols[a.name] = Column(DBType.FLOAT64, v.astype(np.float64))
+                schemas.append(ColumnSchema(a.name, DBType.FLOAT64))
+        return Table(TableSchema("result", tuple(schemas)), cols)
+
+    def _assemble_join(self, jspec: JoinAggSpec, gids: np.ndarray,
+                       vals: np.ndarray, pay: np.ndarray):
+        """Build the core result table of a device join from the
+        device-assembled triple: group keys resolve through
+        ``group_sources`` (build key code / payload lane), aggregates from
+        the finalized rows — column order matches the host program's
+        aggregate output (keys, then aggs)."""
+        from .column import Column
+        from .table import Table
+        from .types import ColumnSchema, TableSchema
+        catalog = self.db.catalog
+        gb = jspec.builds[jspec.group_build] \
+            if jspec.group_build is not None else None
+        cols = {}
+        schemas = []
+        for k, src in zip(jspec.group_keys, jspec.group_sources):
+            if src[0] == "key":
+                col = catalog.table(gb.table).column(gb.key)
+                v = (gids.astype(np.float64) + jspec.key_domain[0]) \
+                    .astype(col.data.dtype)
+            else:
+                col = catalog.table(gb.table).column(gb.payload[src[1]])
+                v = pay[:, src[1]].astype(col.data.dtype)
+            if col.dbtype == DBType.VARCHAR:
+                cols[k] = Column(DBType.VARCHAR, v, heap=col.heap)
+            else:
+                cols[k] = Column(col.dbtype, v, scale=col.scale)
+            schemas.append(ColumnSchema(k, col.dbtype, scale=col.scale))
+        for i, a in enumerate(jspec.aggs):
+            v = vals[:, i]
+            if a.fn == "count":
+                cols[a.name] = Column(DBType.INT64, v.astype(np.int64))
+                schemas.append(ColumnSchema(a.name, DBType.INT64))
+            else:
+                cols[a.name] = Column(DBType.FLOAT64,
+                                      v.astype(np.float64))
                 schemas.append(ColumnSchema(a.name, DBType.FLOAT64))
         return Table(TableSchema("result", tuple(schemas)), cols)
 

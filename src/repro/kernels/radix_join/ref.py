@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the radix_join kernels (dense scatter/gather
+semantics, no partitioning)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def radix_join_ref(build_keys, build_vals, probe_keys, domain: int):
+    """build_keys: (nb,) int with unique values in [0, domain);
+    build_vals: (V, nb) float; probe_keys: (np,) int.  Returns
+    ``(matched, gathered)`` — the un-partitioned equivalent of
+    ``ops.radix_join``: one dense (domain, V+1) table, scatter then
+    gather."""
+    V = build_vals.shape[0]
+    tab = jnp.zeros((domain + 1, V + 1), dtype=jnp.float64)
+    bk = jnp.clip(build_keys, 0, domain)
+    row = jnp.concatenate(
+        [jnp.ones((1, bk.shape[0])), build_vals.astype(jnp.float64)], axis=0)
+    tab = tab.at[bk].add(row.T)
+    pk = jnp.clip(probe_keys, 0, domain)
+    out = tab[pk]
+    ok = (probe_keys >= 0) & (probe_keys < domain)
+    matched = (out[:, 0] > 0) & ok
+    gathered = jnp.where(matched[:, None], out[:, 1:], 0.0)
+    return matched, gathered

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the bitonic sort kernel (stable argsort
+semantics)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitonic_sort_ref(keys, idx):
+    """keys: (1, n) f32; idx: (1, n) int32 -> (sorted keys, perm).
+
+    Equivalent to a stable ascending sort of (key, original index) pairs —
+    what the tie-broken bitonic network computes."""
+    perm = jnp.lexsort((idx[0], keys[0]))
+    return keys[:, perm], idx[:, perm]

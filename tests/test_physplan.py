@@ -304,7 +304,10 @@ def test_demoted_core_renders_host_annotation():
     db = startup(device_budget=64 << 20)
     db.create_table("t", {"g": (np.arange(n) % 5).astype(np.int64),
                           "x": np.ones(n)})
-    q = db.scan("t").group_by("g").agg(s=("sum", "x")).order_by("g")
+    # the extra LimitNode keeps the ORDER BY off the device (only a sort
+    # DIRECTLY above the core fuses), so the host suffix path still runs
+    q = (db.scan("t").group_by("g").agg(s=("sum", "x"))
+         .order_by("g").limit(3))
     ref = q.execute().to_pydict()
     orig = ParallelExecutor._run_suffix
     try:
